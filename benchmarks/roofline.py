@@ -1,0 +1,73 @@
+"""Roofline report: aggregates results/dryrun/*.json into the per-cell
+three-term table (EXPERIMENTS.md §Roofline).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+                                                    [--mesh single] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_: str, mesh: str | None = None, tag: str | None = ""):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if (r.get("tag") or "") != (tag or ""):
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_row(r) -> str:
+    rl = r.get("roofline", {})
+    mem = r.get("memory", {})
+    gib = mem.get("total_bytes_per_device", 0) / 2**30
+    if r.get("status") != "ok":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL | | | | "
+                f"| {r.get('error', '')[:60]} |")
+    dom = rl.get("dominant", "?")
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+        f"| {gib:.2f} | {rl.get('flops_per_device', 0):.2e} "
+        f"| {rl.get('compute_s', 0):.2e} | {rl.get('memory_s', 0):.2e} "
+        f"| {rl.get('collective_s', 0):.2e} | {dom} "
+        f"| {rl.get('useful_fraction', 0):.2f} "
+        f"| {rl.get('roofline_fraction', 0)*100:.1f}% |"
+    )
+
+
+HEADER = (
+    "| arch | shape | mesh | GiB/dev | HLO flops/dev | compute s | "
+    "memory s | collective s | dominant | useful frac | roofline % |\n"
+    "|---|---|---|---|---|---|---|---|---|---|---|"
+)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+    rows = load(args.dir, args.mesh, args.tag)
+    print(HEADER)
+    n_ok = 0
+    for r in rows:
+        print(fmt_row(r))
+        n_ok += r.get("status") == "ok"
+    print(f"\n# {n_ok}/{len(rows)} cells ok")
+    from .common import emit
+
+    emit("roofline_cells", 0.0, f"{n_ok}/{len(rows)}_cells_compiled")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

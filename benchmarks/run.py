@@ -1,0 +1,63 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick]`` prints
+``name,us_per_call,derived`` CSV rows (benchmarks/common.emit) and exits
+non-zero if any paper-claim assertion fails.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced graph scales (CI mode)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (
+        fig13_er_density,
+        fig14_msbfs,
+        roofline,
+        table1_frontier_scaling,
+        table34_policies,
+        table5_visits,
+        table6_k_sweep,
+    )
+
+    suites = {
+        "table1": lambda: table1_frontier_scaling.main(args.quick),
+        "table34": lambda: table34_policies.main(args.quick),
+        "table5": lambda: table5_visits.main(args.quick),
+        "table6": lambda: table6_k_sweep.main(args.quick),
+        "fig13": lambda: fig13_er_density.main(args.quick),
+        "fig14": lambda: fig14_msbfs.main(args.quick),
+        "roofline": lambda: roofline.main([]),
+    }
+    failures = []
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# {name}: ok ({time.time()-t0:.1f}s)")
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, e))
+            traceback.print_exc()
+            print(f"# {name}: FAILED {e}")
+    if failures:
+        print(f"# {len(failures)} suite(s) failed: "
+              f"{[n for n, _ in failures]}")
+        return 1
+    print("# all benchmark suites passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,21 @@
+"""End-to-end driver (paper kind = query serving): a resident recursive-
+query service answering batched shortest-path requests.
+
+Demonstrates the production serving path: graph loaded & partitioned once,
+engines compiled once per policy and reused, per-batch policy selection by
+the paper's robustness rule, mixed lengths/paths workloads, and latency
+percentiles.
+
+    PYTHONPATH=src python examples/serve_queries.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main([
+        "--dataset", "ldbc",
+        "--scale", "0.4",
+        "--batches", "12",
+        "--sources-per-batch", "8",
+    ]))

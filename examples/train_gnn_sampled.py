@@ -1,0 +1,84 @@
+"""Minibatch GNN training with the IFE-driven neighbor sampler.
+
+The paper-technique integration point for the GNN archs (DESIGN.md §4):
+multi-hop fanout sampling IS bounded frontier expansion — each hop extends
+the sampled frontier through the same ELL adjacency the query engine scans.
+Trains PNA on sampled subgraphs of the LDBC proxy to predict a node-id
+derived label (learnable rule).
+
+    PYTHONPATH=src python examples/train_gnn_sampled.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import GraphSeedStream
+from repro.graph.csr import ell_from_csr
+from repro.graph.generators import ldbc_proxy
+from repro.graph.sampler import sample_subgraph
+from repro.models.gnn import pna as pna_m
+from repro.models.gnn.pna import PNAConfig
+from repro.nn.module import split_boxed
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+N_CLASSES = 8
+FANOUTS = (10, 5)
+
+csr = ldbc_proxy(scale=0.3)
+g = ell_from_csr(csr, max_deg=64)
+print(f"graph: {csr.n_nodes} nodes, {csr.n_edges} edges")
+
+cfg = PNAConfig(n_layers=2, d_hidden=32, d_feat=16, n_out=N_CLASSES)
+params, _ = split_boxed(pna_m.init(jax.random.PRNGKey(0), cfg))
+ocfg = AdamWConfig(lr=3e-3, weight_decay=0.0)
+opt = adamw_init(params, ocfg)
+stream = GraphSeedStream(
+    n_nodes=csr.n_nodes, batch_nodes=64, n_classes=N_CLASSES
+)
+
+
+def featurize(node_ids):
+    """Node features derived from the id (so the label rule is learnable)."""
+    bits = (node_ids[:, None] >> jnp.arange(16)) & 1
+    return bits.astype(jnp.float32)
+
+
+def loss_fn(params, sub_nodes, edge_src, edge_dst, labels, n_seeds):
+    batch = {
+        "edge_src": edge_src,
+        "edge_dst": edge_dst,
+        "node_feat": featurize(sub_nodes),
+    }
+    logits = pna_m.apply(params, cfg, batch)["node_out"][:n_seeds]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+@jax.jit
+def train_step(params, opt, sub_nodes, edge_src, edge_dst, labels):
+    loss, grads = jax.value_and_grad(loss_fn)(
+        params, sub_nodes, edge_src, edge_dst, labels, 64
+    )
+    params, opt, _ = adamw_update(grads, opt, params, ocfg)
+    return params, opt, loss
+
+
+losses = []
+rng = jax.random.PRNGKey(1)
+for step in range(60):
+    b = stream.batch(step)
+    rng, sk = jax.random.split(rng)
+    # IFE-style bounded frontier expansion from the seed nodes
+    sub = sample_subgraph(g, jnp.asarray(b["seeds"]), FANOUTS, sk)
+    params, opt, loss = train_step(
+        params, opt, sub.nodes, sub.edge_src, sub.edge_dst,
+        jnp.asarray(b["labels"]),
+    )
+    losses.append(float(loss))
+    if step % 10 == 0:
+        print(f"step {step:3d}  sampled {sub.nodes.shape[0]} nodes  "
+              f"loss {losses[-1]:.4f}")
+
+print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+assert losses[-1] < losses[0], "sampled GNN training must descend"
+print("train_gnn_sampled OK")

@@ -1,0 +1,34 @@
+"""Fault-tolerant LM training end-to-end (reduced-scale on CPU).
+
+Drives launch/train.py: MiniCPM-family smoke config, a few hundred steps,
+checkpoint-every-50 with the async atomic writer, then SIMULATES A CRASH
+and restarts from the latest checkpoint — the thousand-node-pod restart
+path exercised end-to-end.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import shutil
+import sys
+import tempfile
+
+from repro.launch.train import main
+
+ckpt_dir = tempfile.mkdtemp(prefix="repro_lm_")
+try:
+    # phase 1: train to step 120 (checkpoints at 50, 100)
+    rc = main([
+        "--arch", "minicpm-2b", "--steps", "120", "--batch", "8",
+        "--seq", "64", "--ckpt-dir", ckpt_dir, "--save-every", "50",
+    ])
+    assert rc == 0
+    print("\n--- simulated crash: restarting from latest checkpoint ---\n")
+    # phase 2: a fresh process would do exactly this — resume and finish
+    rc = main([
+        "--arch", "minicpm-2b", "--steps", "200", "--batch", "8",
+        "--seq", "64", "--ckpt-dir", ckpt_dir, "--save-every", "50",
+    ])
+    assert rc == 0
+    print("train_lm (with crash-restart) OK")
+finally:
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+sys.exit(0)

@@ -1,0 +1,32 @@
+"""dcn-v2 [arXiv:2008.13535; paper] — n_dense=13 n_sparse=26 embed_dim=16
+n_cross_layers=3 mlp=1024-1024-512 interaction=cross."""
+from ..models.dcn_v2 import DCNv2Config
+from .base import ArchSpec, RECSYS_SHAPES, register
+
+
+def full_config() -> DCNv2Config:
+    return DCNv2Config()
+
+
+def smoke_config() -> DCNv2Config:
+    return DCNv2Config(
+        mlp=(32, 32, 16),
+        field_vocabs=tuple([97] * 26),
+        embed_dim=8,
+        retrieval_dim=8,
+    )
+
+
+register(
+    ArchSpec(
+        arch_id="dcn-v2",
+        family="recsys",
+        source="arXiv:2008.13535; paper",
+        full_config=full_config,
+        smoke_config=smoke_config,
+        shapes=RECSYS_SHAPES,
+        skips={},
+        notes="fused-table EmbeddingBag (take+segment_sum), vocab rows "
+        "sharded over model axis; retrieval = batched dot + top_k",
+    )
+)

@@ -1,0 +1,31 @@
+"""Paper core: IFE engine + morsel dispatching policies (DESIGN.md §1-2)."""
+from .edge_compute import EDGE_COMPUTES, NO_PARENT
+from .ife import (
+    run_ife,
+    run_ife_batch,
+    run_ife_scan,
+    histogram_lengths,
+    reconstruct_paths,
+    validate_parents,
+    IFEResult,
+)
+from .policies import (
+    MorselPolicy,
+    POLICIES,
+    policy_1t1s,
+    policy_nt1s,
+    policy_ntks,
+    policy_ntkms,
+    recommend_policy,
+    recommend_k,
+)
+from .dispatcher import (
+    QueryEngine,
+    build_engine,
+    run_recursive_query,
+    prepare_graph,
+    pad_sources,
+)
+from .collectives import or_allreduce, min_allreduce, ring_or_u32
+from .msbfs import block_extend_lanes, block_extend_dense
+from . import frontier

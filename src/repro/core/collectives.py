@@ -1,0 +1,251 @@
+"""Frontier-union collectives (DESIGN.md §6).
+
+Per IFE iteration under nT1S/nTkS/nTkMS, graph shards must union their partial
+next-frontier bitmaps across the graph axes. XLA exposes no OR all-reduce
+through jax, so we provide three implementations:
+
+- ``pmax``      — unpacked uint8/bool lanes, ``lax.pmax`` (OR ≡ max). True
+                  all-reduce, but 8× wire width vs packed bits.
+- ``allgather`` — bit-pack to uint32, ``all_gather`` + local OR fold.
+                  (K−1)·N/8 wire bytes per device. Paper-faithful baseline
+                  ("every thread sees the whole next frontier").
+- ``ring``      — bit-pack + manual reduce-scatter/all-gather rings via
+                  ``ppermute`` with bitwise-OR combine: 2·(K−1)/K·N/8 bytes.
+                  Beyond-paper optimization (§Perf).
+
+All entry points take/return the *unpacked* layout so callers stay oblivious.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+PACK = 32
+
+
+def _pack_bits(x: jax.Array) -> jax.Array:
+    """[..., n] bool/uint8 -> [..., ceil(n/32)] uint32."""
+    n = x.shape[-1]
+    pad = (-n) % PACK
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((*x.shape[:-1], pad), x.dtype)], axis=-1
+        )
+    w = x.shape[-1] // PACK
+    bits = x.reshape(*x.shape[:-1], w, PACK).astype(jnp.uint32)
+    shifts = jnp.arange(PACK, dtype=jnp.uint32)
+    return (bits << shifts).sum(axis=-1, dtype=jnp.uint32)
+
+
+def _unpack_bits(p: jax.Array, n: int) -> jax.Array:
+    """[..., w] uint32 -> [..., n] bool."""
+    shifts = jnp.arange(PACK, dtype=jnp.uint32)
+    bits = (p[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(*p.shape[:-1], p.shape[-1] * PACK)[..., :n] != 0
+
+
+def _axis_size(axis_names) -> int:
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    s = 1
+    for a in axis_names:
+        s *= lax.axis_size(a)
+    return s
+
+
+def ring_or_u32(x: jax.Array, axis_name: str) -> jax.Array:
+    """Bitwise-OR all-reduce of a uint32 array over one mesh axis via
+    ring reduce-scatter + ring all-gather (ppermute)."""
+    K = lax.axis_size(axis_name)
+    if K == 1:
+        return x
+    d = lax.axis_index(axis_name)
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % K
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    chunks = flat.reshape(K, -1)
+    perm = [(i, (i + 1) % K) for i in range(K)]
+
+    # K is static: the rings are UNROLLED python loops so every ppermute is
+    # its own HLO op — correct roofline accounting (a fori_loop body would
+    # be cost-counted once) and XLA can pipeline the steps
+    def rs_body(t, ch):
+        send_idx = (d - t) % K
+        buf = jnp.take(ch, send_idx, axis=0)
+        recv = lax.ppermute(buf, axis_name, perm)
+        recv_idx = (d - t - 1) % K
+        merged = jnp.take(ch, recv_idx, axis=0) | recv
+        return ch.at[recv_idx].set(merged)
+
+    for t in range(K - 1):
+        chunks = rs_body(t, chunks)
+
+    def ag_body(t, ch):
+        send_idx = (d + 1 - t) % K
+        buf = jnp.take(ch, send_idx, axis=0)
+        recv = lax.ppermute(buf, axis_name, perm)
+        recv_idx = (d - t) % K
+        return ch.at[recv_idx].set(recv)
+
+    for t in range(K - 1):
+        chunks = ag_body(t, chunks)
+    return chunks.reshape(-1)[:n].reshape(shape)
+
+
+def or_allreduce(
+    x: jax.Array, axis_names, impl: str = "ring"
+) -> jax.Array:
+    """OR-union of a bool/uint8 array across mesh axes. Shape-preserving."""
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    if not axis_names or _axis_size(axis_names) == 1:
+        return x
+    orig_dtype = x.dtype
+    if impl == "pmax":
+        out = lax.pmax(x.astype(jnp.uint8), axis_names)
+        return out.astype(orig_dtype) if orig_dtype != jnp.uint8 else out
+    # bit-packed paths
+    shape = x.shape
+    flat = (x != 0).reshape(1, -1)
+    packed = _pack_bits(flat)[0]
+    if impl == "allgather":
+        for a in axis_names:
+            gathered = lax.all_gather(packed, a)  # [K, w]
+            packed = jax.lax.reduce(
+                gathered,
+                jnp.uint32(0),
+                lax.bitwise_or,
+                dimensions=(0,),
+            )
+    elif impl == "ring":
+        for a in axis_names:
+            packed = ring_or_u32(packed, a)
+    else:
+        raise ValueError(f"unknown or_allreduce impl: {impl}")
+    out = _unpack_bits(packed[None], flat.shape[-1])[0].reshape(shape)
+    return out.astype(orig_dtype)
+
+
+def ring_reduce_scatter(x: jax.Array, axis_name: str, op) -> jax.Array:
+    """Generic ring reduce-scatter over one mesh axis: x (flat, length
+    divisible by K) -> this device's fully-reduced chunk [n/K].
+    ``op(a, b)`` combines chunks (e.g. bitwise_or, minimum)."""
+    K = lax.axis_size(axis_name)
+    flat = x.reshape(-1)
+    if K == 1:
+        return flat
+    d = lax.axis_index(axis_name)
+    n = flat.shape[0]
+    assert n % K == 0, (n, K)
+    chunks = flat.reshape(K, -1)
+    perm = [(i, (i + 1) % K) for i in range(K)]
+
+    def rs_body(t, ch):
+        send_idx = (d - t) % K
+        buf = jnp.take(ch, send_idx, axis=0)
+        recv = lax.ppermute(buf, axis_name, perm)
+        recv_idx = (d - t - 1) % K
+        merged = op(jnp.take(ch, recv_idx, axis=0), recv)
+        return ch.at[recv_idx].set(merged)
+
+    for t in range(K - 1):  # unrolled: see ring_or_u32
+        chunks = rs_body(t, chunks)
+    # device d now owns chunk (d+1)%K; one rotation hands chunk d to d
+    owned = jnp.take(chunks, (d + 1) % K, axis=0)
+    return lax.ppermute(owned, axis_name, perm)
+
+
+def or_reduce_scatter(x: jax.Array, axis_names, impl: str = "ring") -> jax.Array:
+    """OR-reduce-scatter of a bool/uint8 array over mesh axes: returns this
+    device's row block (length = x.size / prod(K)). Used by the
+    sharded-state engine (DESIGN.md §6): per-node state lives only on the
+    owning graph shard, so billion-node graphs fit."""
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    orig_dtype = x.dtype
+    shape_tail = x.shape[1:]
+    if not axis_names or _axis_size(axis_names) == 1:
+        return x
+    if impl == "allgather":
+        full = or_allreduce(x, axis_names, "allgather")
+        # slice own rows
+        rows = x.shape[0] // _axis_size(axis_names)
+        idx = jnp.int32(0)
+        for a in axis_names:
+            idx = idx * lax.axis_size(a) + lax.axis_index(a)
+        return lax.dynamic_slice_in_dim(full, idx * rows, rows, axis=0)
+    # ring on packed bits, sequentially over axes (major axis first)
+    flat = (x != 0).reshape(1, -1)
+    packed = _pack_bits(flat)[0]
+    for a in axis_names:
+        packed = ring_reduce_scatter(packed, a, jnp.bitwise_or)
+    n_rows = x.shape[0] // _axis_size(axis_names)
+    n_bits = n_rows * int(np.prod(shape_tail)) if shape_tail else n_rows
+    out = _unpack_bits(packed[None], n_bits)[0]
+    return out.reshape(n_rows, *shape_tail).astype(orig_dtype)
+
+
+def min_reduce_scatter(x: jax.Array, axis_names) -> jax.Array:
+    """Min-reduce-scatter (parents / Bellman-Ford contributions)."""
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    if not axis_names or _axis_size(axis_names) == 1:
+        return x
+    shape_tail = x.shape[1:]
+    flat = x.reshape(-1)
+    for a in axis_names:
+        flat = ring_reduce_scatter(flat, a, jnp.minimum)
+    n_rows = x.shape[0] // _axis_size(axis_names)
+    return flat.reshape(n_rows, *shape_tail)
+
+
+def merge_scatter(merge: str, contribution, axis_names, or_impl: str):
+    """Sharded-state variant of merge_contribution: global contributions in,
+    this shard's fully-merged row block out."""
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    if not axis_names:
+        return contribution
+    if merge == "or":
+        return or_reduce_scatter(contribution, axis_names, or_impl)
+    if merge == "min":
+        return min_reduce_scatter(contribution, axis_names)
+    if merge == "or_min":
+        reached, cand = contribution
+        return (
+            or_reduce_scatter(reached, axis_names, or_impl),
+            min_reduce_scatter(cand, axis_names),
+        )
+    raise ValueError(f"unknown merge: {merge}")
+
+
+def min_allreduce(x: jax.Array, axis_names) -> jax.Array:
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    if not axis_names or _axis_size(axis_names) == 1:
+        return x
+    return lax.pmin(x, axis_names)
+
+
+def merge_contribution(merge: str, contribution, axis_names, or_impl: str):
+    """Apply an edge compute's MERGE across graph axes."""
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    if not axis_names:
+        return contribution
+    if merge == "or":
+        return or_allreduce(contribution, axis_names, or_impl)
+    if merge == "min":
+        return min_allreduce(contribution, axis_names)
+    if merge == "or_min":
+        reached, cand = contribution
+        return (
+            or_allreduce(reached, axis_names, or_impl),
+            min_allreduce(cand, axis_names),
+        )
+    raise ValueError(f"unknown merge: {merge}")

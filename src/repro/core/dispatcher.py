@@ -1,0 +1,259 @@
+"""Morsel dispatcher (paper §4.3) — policy → shard_map program.
+
+The paper's ``grabSrcMorselIfNecessary`` hands morsels to threads dynamically;
+SPMD TPUs get a *static* schedule instead: source morsels are a sharded array
+(one shard per source-axis coordinate), frontier morsels are the graph row
+partition, and each device runs the IFE while_loop over its local morsels
+(``lax.map`` = the paper's "sticky" worker: it finishes a source morsel before
+grabbing the next). Collectives run only over the graph axes, so source groups
+iterate independently — divergent per-morsel trip counts across source shards
+are safe by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..graph.csr import CSRGraph, EllGraph, ell_from_csr
+from ..graph.partition import pad_ell
+from .collectives import merge_contribution, merge_scatter
+from .edge_compute import EDGE_COMPUTES
+from .ife import IFEResult
+from .policies import MorselPolicy
+
+try:  # jax >= 0.8 top-level
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map_old(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False,
+        )
+
+
+def _axes_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes], dtype=np.int64)) if axes else 1
+
+
+def _flat_axis_index(axes: tuple[str, ...]):
+    """Flattened coordinate over ``axes`` (major-to-minor = tuple order,
+    matching how PartitionSpec((a0, a1)) tiles a dimension)."""
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+    return idx
+
+
+def pad_sources(
+    sources: np.ndarray, shards: int, lanes: int, inert_id: int
+) -> np.ndarray:
+    """[(s,)] -> [n_morsels_padded, lanes]; pad entries get ``inert_id``
+    (>= n_nodes ⇒ empty lanes, zero-iteration morsels)."""
+    s = np.asarray(sources, dtype=np.int32).reshape(-1)
+    n_morsels = -(-len(s) // lanes)
+    n_morsels = -(-n_morsels // shards) * shards
+    out = np.full((n_morsels * lanes,), inert_id, dtype=np.int32)
+    out[: len(s)] = s
+    return out.reshape(n_morsels, lanes)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryEngine:
+    """A compiled recursive-query executor for one (mesh, policy, graph-shape,
+    edge-compute) combination — the paper's IFE physical operator."""
+
+    mesh: Mesh
+    policy: MorselPolicy
+    edge_compute: str
+    n_nodes_padded: int
+    max_iters: int
+    fn: Any  # jitted shard_map program
+
+    def __call__(self, graph: EllGraph, source_morsels: jax.Array) -> IFEResult:
+        return self.fn(graph, source_morsels)
+
+
+def build_engine(
+    mesh: Mesh,
+    policy: MorselPolicy,
+    edge_compute: str,
+    n_nodes_padded: int,
+    max_iters: int | None = None,
+    state_layout: str = "replicated",
+) -> QueryEngine:
+    """``state_layout``:
+
+    - "replicated" — paper-faithful: every device holds the FULL per-node
+      state of the morsels it works on ("every thread sees the whole next
+      frontier"); graph-axis merge is an OR/MIN all-reduce.
+    - "sharded" — beyond-paper memory optimization (DESIGN.md §6): each
+      device holds only its graph partition's state rows; the merge is an
+      OR/MIN *reduce-scatter* (half the wire bytes of allgather+fold, and
+      per-device state drops from O(n) to O(n/K) — what lets Graph500-28
+      scale MS-BFS morsels fit a 16 GB chip).
+    """
+    ec = EDGE_COMPUTES[edge_compute]
+    ga = policy.graph_axes
+    sa = policy.source_axes
+    cap = int(max_iters if max_iters is not None else n_nodes_padded)
+    n = n_nodes_padded
+    sharded = state_layout == "sharded" and bool(ga)
+    # When the body contains collectives (graph partitioned), every device must
+    # execute them the same number of times: the loop condition is the paper's
+    # checkIfFrontierFinished pipeline break, globally reduced. Devices whose
+    # morsel converged early run inert iterations (empty frontier => no-op)
+    # until the slowest source group finishes — the SPMD analogue of nTkS
+    # keeping threads busy on other sources' denser frontiers.
+    sync_axes = tuple(sa) + tuple(ga) if ga else ()
+
+    def worker(g_shard: EllGraph, sources_local: jax.Array):
+        rows_local = g_shard.indices.shape[0]
+        offset = (
+            _flat_axis_index(ga) * rows_local if ga else None
+        )
+
+        def one_morsel(srcs):
+            if sharded:
+                # init only this shard's rows; out-of-shard sources become
+                # the inert id rows_local (mode="drop" scatters vanish)
+                local_srcs = jnp.where(
+                    (srcs >= offset) & (srcs < offset + rows_local),
+                    srcs - offset,
+                    rows_local,
+                )
+                state0 = ec.init(rows_local, local_srcs)
+            else:
+                state0 = ec.init(n, srcs)
+
+            def cond(carry):
+                state, it = carry
+                active = jnp.any(state.frontier != 0)
+                if sync_axes:
+                    active = (
+                        lax.psum(active.astype(jnp.int32), sync_axes) > 0
+                    )
+                return active & (it < cap)
+
+            def body(carry):
+                state, it = carry
+                if sharded:
+                    contribution = ec.local_extend(
+                        g_shard, state, None, n_out=n, row_base=offset
+                    )
+                    merged = merge_scatter(
+                        ec.MERGE, contribution, ga, policy.or_impl
+                    )
+                else:
+                    contribution = ec.local_extend(g_shard, state, offset)
+                    merged = merge_contribution(
+                        ec.MERGE, contribution, ga, policy.or_impl
+                    )
+                return ec.apply(state, merged, it), it + 1
+
+            state, iters = lax.while_loop(cond, body, (state0, jnp.int32(0)))
+            return IFEResult(state=state, iterations=iters)
+
+        return lax.map(one_morsel, sources_local)
+
+    g_specs = EllGraph(
+        indices=P(ga if ga else None, None),
+        degrees=P(ga if ga else None),
+        weights=None,
+    )
+    src_spec = P(sa if sa else None, None)
+    if sharded:
+        # state rows live on the graph axes: leaves are [morsel, rows, ...]
+        lanes = getattr(ec, "LANES", 0)
+        probe = jax.eval_shape(
+            lambda: ec.init(8, jnp.zeros((max(lanes, 1),), jnp.int32))
+        )
+        state_spec = jax.tree.map(
+            lambda _: P(sa if sa else None, ga), probe
+        )
+        out_spec = IFEResult(
+            state=state_spec, iterations=P(sa if sa else None)
+        )
+    else:
+        out_spec = P(sa if sa else None)
+    fn = jax.jit(
+        shard_map(
+            worker,
+            mesh,
+            in_specs=(g_specs, src_spec),
+            out_specs=out_spec,
+        )
+    )
+    return QueryEngine(
+        mesh=mesh,
+        policy=policy,
+        edge_compute=edge_compute,
+        n_nodes_padded=n,
+        max_iters=cap,
+        fn=fn,
+    )
+
+
+def prepare_graph(
+    csr: CSRGraph, mesh: Mesh, policy: MorselPolicy, max_deg: int | None = None
+) -> tuple[EllGraph, int]:
+    """Host-side: CSR → padded, device-placed ELL for this policy's mesh.
+
+    Rows pad to a multiple of shards×32 so the sharded-state engine's
+    bit-packed ring reduce-scatter stays word-aligned per shard."""
+    g = ell_from_csr(csr, max_deg=max_deg)
+    shards = _axes_size(mesh, policy.graph_axes)
+    g = pad_ell(g, shards, block=32)
+    ga = policy.graph_axes
+    sharding = NamedSharding(mesh, P(ga if ga else None, None))
+    g = EllGraph(
+        indices=jax.device_put(g.indices, sharding),
+        degrees=jax.device_put(
+            g.degrees, NamedSharding(mesh, P(ga if ga else None))
+        ),
+        weights=None
+        if g.weights is None
+        else jax.device_put(g.weights, sharding),
+    )
+    return g, g.indices.shape[0]
+
+
+def run_recursive_query(
+    mesh: Mesh,
+    csr: CSRGraph,
+    sources,
+    policy: MorselPolicy,
+    edge_compute: str = "sp_lengths",
+    max_iters: int | None = None,
+    max_deg: int | None = None,
+    state_layout: str = "replicated",
+) -> IFEResult:
+    """End-to-end: the paper Fig 3 IFETask. Returns states stacked over
+    morsels: leaves have leading dim n_morsels (global)."""
+    g, n_pad = prepare_graph(csr, mesh, policy, max_deg)
+    src_shards = _axes_size(mesh, policy.source_axes)
+    morsels = pad_sources(np.asarray(sources), src_shards, policy.lanes, n_pad)
+    sa = policy.source_axes
+    morsels = jax.device_put(
+        jnp.asarray(morsels), NamedSharding(mesh, P(sa if sa else None, None))
+    )
+    engine = build_engine(
+        mesh, policy, edge_compute, n_pad, max_iters,
+        state_layout=state_layout,
+    )
+    return engine(g, morsels)

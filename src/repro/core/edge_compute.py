@@ -1,0 +1,404 @@
+"""edgeCompute() implementations (paper Listing 2/4) as JAX aggregation ops.
+
+The paper's interface is a per-edge callback ``edgeCompute(u, v)`` mutating
+shared auxiliary state under atomics/CAS. The SPMD re-think: an edge compute is
+a triple
+
+    local_extend(graph_shard, state) -> contribution        (pure, per shard)
+    MERGE  : how contributions combine across graph shards  ('or' | 'min')
+    apply(state, merged_contribution, it) -> state          (pure, replicated)
+
+``local_extend`` is the frontier-extension scan (the hot loop the paper
+parallelizes with frontier morsels); MERGE is the inter-chip frontier union
+(nT1S/nTkS collective); ``apply`` is the pipeline-break at the end of each IFE
+iteration (paper's ``checkIfFrontierFinished``).
+
+Supported algorithms:
+- ``bfs_levels`` / ``sp_lengths``: unweighted shortest-path lengths
+  (paper Listing 2; identical math, both names kept).
+- ``sp_parents``: shortest paths with parent edges (paper Listing 4). The CAS
+  linked-list Parents structure becomes a deterministic segment-min over
+  candidate parents (min node id wins — any parent on a shortest path is valid).
+- ``bellman_ford``: weighted SSSP (paper Fig 1's recursive operator).
+- ``reachability``: transitive closure from sources.
+- ``msbfs_lengths`` / ``msbfs_parents``: 64-lane multi-source variants
+  (paper §3.4 / §4.2) with the lane dimension as a tensor axis.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..graph.csr import EllGraph
+
+INF_U8 = jnp.uint8(255)
+NO_PARENT = jnp.int32(2**31 - 1)
+
+
+# ---------------------------------------------------------------------------
+# Extension primitives over ELL (pure jnp; Pallas kernels mirror these).
+# ---------------------------------------------------------------------------
+
+def _local_rows(frontier: jax.Array, g: EllGraph, row_offset) -> jax.Array:
+    """Slice the global per-node array down to this graph shard's rows."""
+    rows = g.indices.shape[0]
+    if row_offset is None:
+        return frontier
+    return jax.lax.dynamic_slice_in_dim(frontier, row_offset, rows, axis=0)
+
+
+def ell_reach_dense(
+    g: EllGraph, frontier: jax.Array, row_offset=None, n_out=None
+) -> jax.Array:
+    """frontier bool -> [n_out] bool: v reached iff some active u has u->v.
+
+    Two state layouts (DESIGN.md §6):
+    - replicated: ``frontier`` is global [n]; ``row_offset`` slices this
+      shard's rows; ``n_out`` defaults to n.
+    - sharded: ``frontier`` is already this shard's rows [rows_local];
+      ``row_offset`` is None and ``n_out`` gives the global width.
+    Destinations in ``g.indices`` are global ids, so the contribution is
+    always global-[n_out]-sized (padding sentinel drops).
+    """
+    n = frontier.shape[0] if n_out is None else n_out
+    local_f = _local_rows(frontier, g, row_offset)
+    contrib = jnp.broadcast_to(local_f[:, None], g.indices.shape)
+    out = jnp.zeros((n,), dtype=jnp.bool_)
+    return out.at[g.indices].max(contrib, mode="drop")
+
+
+def _deg_chunk(rows: int, width: int, budget: int = 2 << 30) -> int:
+    """Degree-dim chunk so the scatter temp [rows, chunk, width] stays under
+    ``budget`` bytes (billion-node lane morsels would otherwise materialize a
+    rows×max_deg×L broadcast — 31 GB/device for Graph500-28)."""
+    per_slot = max(rows * width, 1)
+    c = max(budget // per_slot, 1)
+    return max((c // 8) * 8, 1) if c >= 8 else 1
+
+
+def _chunked_scatter(g: EllGraph, out, values_row, chunk: int, reducer: str):
+    """Scatter values_row[:, None, :] over degree chunks of g.indices into
+    ``out`` via a fori_loop (bounded temps, in-place carry)."""
+    D = g.indices.shape[1]
+    if chunk >= D:
+        idx = g.indices
+        contrib = jnp.broadcast_to(
+            values_row[:, None, :], (*idx.shape, values_row.shape[-1])
+        )
+        return getattr(out.at[idx], reducer)(contrib, mode="drop")
+    assert D % chunk == 0, (D, chunk)
+
+    def body(i, acc):
+        idx = jax.lax.dynamic_slice_in_dim(g.indices, i * chunk, chunk, 1)
+        contrib = jnp.broadcast_to(
+            values_row[:, None, :], (*idx.shape, values_row.shape[-1])
+        )
+        return getattr(acc.at[idx], reducer)(contrib, mode="drop")
+
+    return jax.lax.fori_loop(0, D // chunk, body, out)
+
+
+def ell_reach_lanes(
+    g: EllGraph, lanes: jax.Array, row_offset=None, n_out=None
+) -> jax.Array:
+    """[*, L] uint8 -> [n_out, L]: per-lane reach (shared edge scan across
+    lanes — the MS-BFS economy; one gather of the neighbor list serves all L
+    lanes). Layout contract as in ``ell_reach_dense``."""
+    L = lanes.shape[-1]
+    n = lanes.shape[0] if n_out is None else n_out
+    local = _local_rows(lanes, g, row_offset)
+    out = jnp.zeros((n, L), dtype=jnp.uint8)
+    chunk = _deg_chunk(local.shape[0], L)
+    return _chunked_scatter(g, out, local, chunk, "max")
+
+
+def ell_min_dist(
+    g: EllGraph, dist: jax.Array, frontier: jax.Array, row_offset=None,
+    n_out=None,
+) -> jax.Array:
+    """Weighted relax: cand[v] = min over active u of dist[u] + w(u,v)."""
+    n = dist.shape[0] if n_out is None else n_out
+    w = g.weights if g.weights is not None else jnp.ones_like(
+        g.indices, dtype=jnp.float32
+    )
+    du = _local_rows(jnp.where(frontier, dist, jnp.inf), g, row_offset)
+    cand = du[:, None] + w
+    out = jnp.full((n,), jnp.inf, dtype=jnp.float32)
+    return out.at[g.indices].min(cand, mode="drop")
+
+
+def _row_ids(g: EllGraph, row_offset, row_base) -> jax.Array:
+    """Global node ids of this shard's rows (after any slicing)."""
+    rows = g.indices.shape[0]
+    base = row_offset if row_offset is not None else row_base
+    ids = jnp.arange(rows, dtype=jnp.int32)
+    return ids if base is None else ids + base
+
+
+def ell_min_parent(
+    g: EllGraph, frontier: jax.Array, row_offset=None, n_out=None,
+    row_base=None,
+) -> jax.Array:
+    """cand_parent[v] = min active u with edge u->v (NO_PARENT if none).
+    ``row_base``: global id of the first local row (sharded layout)."""
+    n = frontier.shape[0] if n_out is None else n_out
+    local_f = _local_rows(frontier, g, row_offset)
+    cand = jnp.where(local_f, _row_ids(g, row_offset, row_base), NO_PARENT)
+    cand = jnp.broadcast_to(cand[:, None], g.indices.shape)
+    out = jnp.full((n,), NO_PARENT, jnp.int32)
+    return out.at[g.indices].min(cand, mode="drop")
+
+
+def ell_min_parent_lanes(
+    g: EllGraph, lanes: jax.Array, row_offset=None, n_out=None, row_base=None
+) -> jax.Array:
+    """Per-lane min-parent: [*, L] uint8 -> [n_out, L] int32."""
+    L = lanes.shape[-1]
+    n = lanes.shape[0] if n_out is None else n_out
+    local = _local_rows(lanes, g, row_offset)
+    u_ids = _row_ids(g, row_offset, row_base)[:, None]
+    cand_row = jnp.where(local != 0, u_ids, NO_PARENT)
+    out = jnp.full((n, L), NO_PARENT, jnp.int32)
+    chunk = _deg_chunk(local.shape[0], 4 * L)
+    return _chunked_scatter(g, out, cand_row, chunk, "min")
+
+
+# ---------------------------------------------------------------------------
+# Edge computes.
+# ---------------------------------------------------------------------------
+
+class SPLengthState(NamedTuple):
+    frontier: jax.Array  # [n] bool
+    visited: jax.Array  # [n] bool
+    levels: jax.Array  # [n] int32 (-1 = unreached)
+
+
+class SPLengths:
+    """Unweighted shortest-path lengths (paper Listing 2)."""
+
+    MERGE = "or"
+
+    @staticmethod
+    def init(n_nodes: int, sources: jax.Array) -> SPLengthState:
+        f = jnp.zeros((n_nodes,), jnp.bool_).at[sources].set(True, mode="drop")
+        levels = jnp.full((n_nodes,), -1, jnp.int32)
+        levels = levels.at[sources].set(0, mode="drop")
+        return SPLengthState(frontier=f, visited=f, levels=levels)
+
+    @staticmethod
+    def local_extend(g: EllGraph, state: SPLengthState, row_offset=None,
+                     n_out=None, row_base=None) -> jax.Array:
+        return ell_reach_dense(g, state.frontier, row_offset, n_out)
+
+    @staticmethod
+    def apply(state: SPLengthState, reached: jax.Array, it: jax.Array):
+        new = reached & ~state.visited
+        return SPLengthState(
+            frontier=new,
+            visited=state.visited | new,
+            levels=jnp.where(new, it + 1, state.levels),
+        )
+
+
+class BFSLevels(SPLengths):
+    """Alias — BFS levels are unweighted SP lengths."""
+
+
+class ReachState(NamedTuple):
+    frontier: jax.Array
+    visited: jax.Array
+
+
+class Reachability:
+    MERGE = "or"
+
+    @staticmethod
+    def init(n_nodes: int, sources: jax.Array) -> ReachState:
+        f = jnp.zeros((n_nodes,), jnp.bool_).at[sources].set(True, mode="drop")
+        return ReachState(frontier=f, visited=f)
+
+    @staticmethod
+    def local_extend(g: EllGraph, state: ReachState, row_offset=None,
+                     n_out=None, row_base=None) -> jax.Array:
+        return ell_reach_dense(g, state.frontier, row_offset, n_out)
+
+    @staticmethod
+    def apply(state: ReachState, reached: jax.Array, it: jax.Array):
+        new = reached & ~state.visited
+        return ReachState(frontier=new, visited=state.visited | new)
+
+
+class SPParentState(NamedTuple):
+    frontier: jax.Array
+    visited: jax.Array
+    levels: jax.Array
+    parents: jax.Array  # [n] int32, NO_PARENT where unreached
+
+
+class SPParents:
+    """Shortest paths with parent pointers (paper Listing 4).
+
+    Paper: per-thread memory buffers + CAS into a dense pointer array. SPMD:
+    contributions carry (reached, candidate-parent); merged with (or, min).
+    """
+
+    MERGE = "or_min"
+
+    @staticmethod
+    def init(n_nodes: int, sources: jax.Array) -> SPParentState:
+        f = jnp.zeros((n_nodes,), jnp.bool_).at[sources].set(True, mode="drop")
+        levels = jnp.full((n_nodes,), -1, jnp.int32).at[sources].set(0, mode="drop")
+        parents = jnp.full((n_nodes,), NO_PARENT, jnp.int32)
+        return SPParentState(frontier=f, visited=f, levels=levels, parents=parents)
+
+    @staticmethod
+    def local_extend(g: EllGraph, state: SPParentState, row_offset=None,
+                     n_out=None, row_base=None):
+        return (
+            ell_reach_dense(g, state.frontier, row_offset, n_out),
+            ell_min_parent(g, state.frontier, row_offset, n_out, row_base),
+        )
+
+    @staticmethod
+    def apply(state: SPParentState, merged, it: jax.Array):
+        reached, parent_cand = merged
+        new = reached & ~state.visited
+        return SPParentState(
+            frontier=new,
+            visited=state.visited | new,
+            levels=jnp.where(new, it + 1, state.levels),
+            parents=jnp.where(new, parent_cand, state.parents),
+        )
+
+
+class BellmanFordState(NamedTuple):
+    frontier: jax.Array
+    dist: jax.Array  # [n] float32
+
+
+class BellmanFord:
+    """Weighted SSSP — nodes may re-enter the frontier (walk semantics)."""
+
+    MERGE = "min"
+
+    @staticmethod
+    def init(n_nodes: int, sources: jax.Array) -> BellmanFordState:
+        f = jnp.zeros((n_nodes,), jnp.bool_).at[sources].set(True, mode="drop")
+        dist = jnp.full((n_nodes,), jnp.inf, jnp.float32)
+        dist = dist.at[sources].set(0.0, mode="drop")
+        return BellmanFordState(frontier=f, dist=dist)
+
+    @staticmethod
+    def local_extend(g: EllGraph, state: BellmanFordState, row_offset=None,
+                     n_out=None, row_base=None) -> jax.Array:
+        return ell_min_dist(g, state.dist, state.frontier, row_offset, n_out)
+
+    @staticmethod
+    def apply(state: BellmanFordState, cand: jax.Array, it: jax.Array):
+        improved = cand < state.dist
+        return BellmanFordState(
+            frontier=improved, dist=jnp.minimum(state.dist, cand)
+        )
+
+
+class MSBFSState(NamedTuple):
+    frontier: jax.Array  # [n, L] uint8
+    visited: jax.Array  # [n, L] uint8
+    levels: jax.Array  # [n, L] uint8 (255 = unreached)
+
+
+class MSBFSLengths:
+    """Multi-source BFS lengths, L lanes (paper §3.4, Then et al. 2014).
+
+    Levels stored as uint8 (paper stores 1-byte path lengths, §4.2):
+    24 bytes/node of frontier+visited state per 64-lane morsel + 1 byte/lane.
+    """
+
+    MERGE = "or"
+    LANES = 64
+
+    @staticmethod
+    def init(n_nodes: int, sources: jax.Array) -> MSBFSState:
+        L = sources.shape[0]
+        f = jnp.zeros((n_nodes, L), jnp.uint8)
+        f = f.at[sources, jnp.arange(L)].set(1, mode="drop")
+        levels = jnp.full((n_nodes, L), INF_U8, jnp.uint8)
+        levels = levels.at[sources, jnp.arange(L)].set(0, mode="drop")
+        return MSBFSState(frontier=f, visited=f, levels=levels)
+
+    @staticmethod
+    def local_extend(g: EllGraph, state: MSBFSState, row_offset=None,
+                     n_out=None, row_base=None) -> jax.Array:
+        return ell_reach_lanes(g, state.frontier, row_offset, n_out)
+
+    @staticmethod
+    def apply(state: MSBFSState, reached: jax.Array, it: jax.Array):
+        new = (reached & ~state.visited).astype(jnp.uint8)
+        lvl = (it + 1).astype(jnp.uint8)
+        return MSBFSState(
+            frontier=new,
+            visited=state.visited | new,
+            levels=jnp.where(new != 0, lvl, state.levels),
+        )
+
+
+class MSBFSParentState(NamedTuple):
+    frontier: jax.Array
+    visited: jax.Array
+    levels: jax.Array
+    parents: jax.Array  # [n, L] int32
+
+
+class MSBFSParents:
+    """Multi-source BFS with per-lane parents (the memory-hungry variant the
+    paper flags: 536 B/node/morsel upfront for paths vs 88 B for lengths)."""
+
+    MERGE = "or_min"
+    LANES = 64
+
+    @staticmethod
+    def init(n_nodes: int, sources: jax.Array) -> MSBFSParentState:
+        base = MSBFSLengths.init(n_nodes, sources)
+        L = sources.shape[0]
+        parents = jnp.full((n_nodes, L), NO_PARENT, jnp.int32)
+        return MSBFSParentState(
+            frontier=base.frontier,
+            visited=base.visited,
+            levels=base.levels,
+            parents=parents,
+        )
+
+    @staticmethod
+    def local_extend(g: EllGraph, state: MSBFSParentState, row_offset=None,
+                     n_out=None, row_base=None):
+        return (
+            ell_reach_lanes(g, state.frontier, row_offset, n_out),
+            ell_min_parent_lanes(g, state.frontier, row_offset, n_out,
+                                 row_base),
+        )
+
+    @staticmethod
+    def apply(state: MSBFSParentState, merged, it: jax.Array):
+        reached, parent_cand = merged
+        new = (reached & ~state.visited).astype(jnp.uint8)
+        is_new = new != 0
+        lvl = (it + 1).astype(jnp.uint8)
+        return MSBFSParentState(
+            frontier=new,
+            visited=state.visited | new,
+            levels=jnp.where(is_new, lvl, state.levels),
+            parents=jnp.where(is_new, parent_cand, state.parents),
+        )
+
+
+EDGE_COMPUTES = {
+    "bfs_levels": BFSLevels,
+    "sp_lengths": SPLengths,
+    "sp_parents": SPParents,
+    "bellman_ford": BellmanFord,
+    "reachability": Reachability,
+    "msbfs_lengths": MSBFSLengths,
+    "msbfs_parents": MSBFSParents,
+}

@@ -1,0 +1,68 @@
+"""Frontier representations.
+
+Three interchangeable layouts for the set(s) of active nodes:
+
+- dense bool ``[n]`` — single IFE subroutine (policies 1T1S / nT1S / nTkS).
+- lanes ``[n, L] uint8`` — L concurrent IFE subroutines (MS-BFS / nTkMS);
+  L = 64 matches the paper's 64-bit lane packing, but here lanes are a real
+  tensor dimension so frontier extension can ride the MXU (see DESIGN.md §2).
+- packed ``[n, L//32] uint32`` — bit-packed lanes, used on the wire for
+  inter-chip frontier unions (8× less traffic than uint8 lanes).
+
+The paper's sparse-frontier optimization (Ligra's 1/8 switch) does not transfer
+to SPMD lockstep execution as data-dependent compaction; its economy is
+recovered at block granularity by the msbfs_extend kernel (all-zero 128-wide
+blocks are skipped).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANES = 64  # paper's multi-source morsel width (uint64 lanes)
+PACK = 32  # bits per packed word
+
+
+def dense_from_sources(n_nodes: int, sources: jax.Array) -> jax.Array:
+    """[n] bool with True at each source (out-of-range sources dropped)."""
+    f = jnp.zeros((n_nodes,), dtype=jnp.bool_)
+    return f.at[sources].set(True, mode="drop")
+
+
+def lanes_from_sources(n_nodes: int, sources: jax.Array) -> jax.Array:
+    """[n, L] uint8 multi-source frontier; sources[l] activates lane l.
+
+    Padding convention: a source id >= n_nodes (or < 0) leaves its lane empty,
+    so partially-filled multi-source morsels (paper §5.6, <64 sources) work.
+    """
+    L = sources.shape[0]
+    f = jnp.zeros((n_nodes, L), dtype=jnp.uint8)
+    lanes = jnp.arange(L, dtype=jnp.int32)
+    return f.at[sources, lanes].set(1, mode="drop")
+
+
+def pack_lanes(lanes: jax.Array) -> jax.Array:
+    """[n, L] uint8 → [n, L//PACK] uint32 bit-packed."""
+    n, L = lanes.shape
+    assert L % PACK == 0, L
+    bits = lanes.astype(jnp.uint32).reshape(n, L // PACK, PACK)
+    shifts = jnp.arange(PACK, dtype=jnp.uint32)
+    return (bits << shifts).sum(axis=-1, dtype=jnp.uint32)
+
+
+def unpack_lanes(packed: jax.Array, lanes: int = LANES) -> jax.Array:
+    """[n, W] uint32 → [n, lanes] uint8."""
+    n, w = packed.shape
+    assert w * PACK == lanes, (w, lanes)
+    shifts = jnp.arange(PACK, dtype=jnp.uint32)
+    bits = (packed[:, :, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(n, lanes).astype(jnp.uint8)
+
+
+def frontier_size(frontier: jax.Array) -> jax.Array:
+    """Number of active (node, lane) entries (dense or lanes layout)."""
+    return jnp.sum(frontier.astype(jnp.int32))
+
+
+def any_active(frontier: jax.Array) -> jax.Array:
+    return jnp.any(frontier != 0)

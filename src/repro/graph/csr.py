@@ -1,0 +1,227 @@
+"""Graph storage structures.
+
+Two device-side layouts and one host-side layout:
+
+- ``CSRGraph`` (host, numpy): canonical compressed-sparse-row adjacency. Used by
+  generators, the numpy oracle, and for conversion.
+- ``EllGraph`` (device, jnp): padded fixed-width neighbor lists (ELL format).
+  TPU-friendly: every row has ``max_deg`` slots, padding uses the out-of-bounds
+  sentinel ``n_nodes`` so scatter ops drop it. This is the layout the IFE engine
+  extends frontiers over.
+- ``BlockAdjacency`` (device, jnp): 0/1 dense blocks of the adjacency matrix plus
+  block coordinates — the block-sparse layout consumed by the ``msbfs_extend``
+  Pallas kernel (MXU formulation of MS-BFS).
+
+The paper's Kuzu implementation reads CSR through a disk buffer manager; on TPU the
+partitioned adjacency is HBM-resident, and "amount of scans" becomes HBM bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRGraph:
+    """Host-side CSR adjacency (out-edges)."""
+
+    indptr: np.ndarray  # [n_nodes + 1] int64
+    indices: np.ndarray  # [n_edges] int32, destination node ids
+    weights: Optional[np.ndarray] = None  # [n_edges] float32 (optional)
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.indptr) - 1
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.indptr[-1])
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    @property
+    def avg_degree(self) -> float:
+        return self.n_edges / max(self.n_nodes, 1)
+
+    def neighbors(self, u: int) -> np.ndarray:
+        return self.indices[self.indptr[u] : self.indptr[u + 1]]
+
+    def reverse(self) -> "CSRGraph":
+        """In-edge CSR (transpose)."""
+        n = self.n_nodes
+        src = np.repeat(np.arange(n, dtype=np.int32), self.degrees)
+        order = np.argsort(self.indices, kind="stable")
+        rindices = src[order]
+        rindptr = np.zeros(n + 1, dtype=np.int64)
+        np.add.at(rindptr, self.indices + 1, 1)
+        rindptr = np.cumsum(rindptr)
+        w = None if self.weights is None else self.weights[order]
+        return CSRGraph(indptr=rindptr, indices=rindices, weights=w)
+
+    def edge_list(self) -> tuple[np.ndarray, np.ndarray]:
+        src = np.repeat(
+            np.arange(self.n_nodes, dtype=np.int32), self.degrees
+        )
+        return src, self.indices.astype(np.int32)
+
+
+def csr_from_edges(
+    n_nodes: int,
+    src: np.ndarray,
+    dst: np.ndarray,
+    weights: Optional[np.ndarray] = None,
+    dedup: bool = True,
+) -> CSRGraph:
+    """Build CSR from an edge list, sorting (and optionally deduplicating)."""
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    key = src * n_nodes + dst
+    order = np.argsort(key, kind="stable")
+    key, src, dst = key[order], src[order], dst[order]
+    if weights is not None:
+        weights = np.asarray(weights, dtype=np.float32)[order]
+    if dedup and len(key):
+        keep = np.concatenate([[True], key[1:] != key[:-1]])
+        src, dst = src[keep], dst[keep]
+        if weights is not None:
+            weights = weights[keep]
+    indptr = np.zeros(n_nodes + 1, dtype=np.int64)
+    np.add.at(indptr, src + 1, 1)
+    indptr = np.cumsum(indptr)
+    return CSRGraph(
+        indptr=indptr, indices=dst.astype(np.int32), weights=weights
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EllGraph:
+    """Device-side padded neighbor lists.
+
+    ``indices[v, j]`` is the j'th out-neighbor of v, or ``n_nodes`` (an
+    out-of-bounds sentinel) when ``j >= degree(v)``. Scatter updates use
+    ``mode='drop'`` so sentinel writes vanish; gathers index a (n_nodes+1)-sized
+    array whose last row is a neutral element.
+    """
+
+    indices: jax.Array  # [n_nodes, max_deg] int32
+    degrees: jax.Array  # [n_nodes] int32
+    weights: Optional[jax.Array] = None  # [n_nodes, max_deg] float32
+
+    @property
+    def n_nodes(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def max_deg(self) -> int:
+        return self.indices.shape[1]
+
+    @property
+    def mask(self) -> jax.Array:
+        return (
+            jnp.arange(self.max_deg, dtype=jnp.int32)[None, :]
+            < self.degrees[:, None]
+        )
+
+    @property
+    def n_edges(self) -> jax.Array:
+        return self.degrees.sum()
+
+
+def ell_from_csr(
+    csr: CSRGraph, max_deg: Optional[int] = None, pad_to_multiple: int = 8
+) -> EllGraph:
+    """Convert CSR → ELL, truncating rows beyond ``max_deg`` if given."""
+    n = csr.n_nodes
+    degs = csr.degrees.astype(np.int32)
+    cap = int(degs.max()) if max_deg is None else int(max_deg)
+    cap = max(cap, 1)
+    cap = -(-cap // pad_to_multiple) * pad_to_multiple
+    indices = np.full((n, cap), n, dtype=np.int32)  # sentinel = n
+    w = (
+        np.zeros((n, cap), dtype=np.float32)
+        if csr.weights is not None
+        else None
+    )
+    for v in range(n):
+        d = min(int(degs[v]), cap)
+        lo = csr.indptr[v]
+        indices[v, :d] = csr.indices[lo : lo + d]
+        if w is not None:
+            w[v, :d] = csr.weights[lo : lo + d]
+    clipped = np.minimum(degs, cap)
+    return EllGraph(
+        indices=jnp.asarray(indices),
+        degrees=jnp.asarray(clipped),
+        weights=None if w is None else jnp.asarray(w),
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BlockAdjacency:
+    """Block-sparse 0/1 adjacency: only blocks containing at least one edge are
+    stored. ``blocks[b]`` is a dense ``[block, block]`` int8 tile;
+    ``block_rows[b]``/``block_cols[b]`` give its (src-block, dst-block) coords.
+    ``row_ptr`` groups the block list by src-block (CSR over blocks) so a kernel
+    can iterate the nonzero blocks of one frontier stripe.
+    """
+
+    blocks: jax.Array  # [n_blocks, B, B] int8  (A[u, v] = 1 if edge u->v)
+    block_rows: jax.Array  # [n_blocks] int32
+    block_cols: jax.Array  # [n_blocks] int32
+    row_ptr: jax.Array  # [n_row_blocks + 1] int32
+
+    @property
+    def block_size(self) -> int:
+        return self.blocks.shape[1]
+
+    @property
+    def n_blocks(self) -> int:
+        return self.blocks.shape[0]
+
+    @property
+    def n_row_blocks(self) -> int:
+        return self.row_ptr.shape[0] - 1
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of the dense block grid that is materialized — the
+        block-level sparsity economy (paper's 'reduced scans' analogue)."""
+        g = self.n_row_blocks
+        return self.n_blocks / float(g * g)
+
+
+def blocks_from_csr(csr: CSRGraph, block: int = 128) -> BlockAdjacency:
+    """Build the block-sparse adjacency (host-side)."""
+    n = csr.n_nodes
+    g = -(-n // block)
+    src, dst = csr.edge_list()
+    br, bc = src // block, dst // block
+    key = br.astype(np.int64) * g + bc
+    uniq, inv = np.unique(key, return_inverse=True)
+    nb = len(uniq)
+    blocks = np.zeros((max(nb, 1), block, block), dtype=np.int8)
+    lr = src % block
+    lc = dst % block
+    blocks[inv, lr, lc] = 1
+    urows = (uniq // g).astype(np.int32)
+    ucols = (uniq % g).astype(np.int32)
+    row_ptr = np.zeros(g + 1, dtype=np.int32)
+    np.add.at(row_ptr, urows + 1, 1)
+    row_ptr = np.cumsum(row_ptr).astype(np.int32)
+    if nb == 0:
+        urows = np.zeros(1, dtype=np.int32)
+        ucols = np.zeros(1, dtype=np.int32)
+    return BlockAdjacency(
+        blocks=jnp.asarray(blocks),
+        block_rows=jnp.asarray(urows),
+        block_cols=jnp.asarray(ucols),
+        row_ptr=jnp.asarray(row_ptr),
+    )

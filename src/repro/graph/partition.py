@@ -1,0 +1,79 @@
+"""Graph partitioning for morsel policies.
+
+Frontier morsels map to contiguous node-range partitions of the ELL adjacency
+(paper §4.1: "obtaining frontier morsels ... returns back a range of integer
+node IDs"). ``pad_ell`` pads the row count so it divides evenly across the
+graph mesh axes; padded rows have degree 0 and the out-of-bounds sentinel, so
+they are inert.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .csr import EllGraph
+
+
+def padded_n(n_nodes: int, shards: int, block: int = 8) -> int:
+    unit = shards * block
+    return -(-n_nodes // unit) * unit
+
+
+def pad_ell(g: EllGraph, shards: int, block: int = 8) -> EllGraph:
+    """Pad ELL rows to a multiple of shards*block. Sentinel stays at the
+    ORIGINAL n_nodes: scatters into the padded [n_pad] arrays treat original
+    sentinel ids as real (but inert, degree-0) rows, which is harmless, and
+    original ids never collide with pad rows... wait — sentinel == n_nodes
+    lands on the first PAD row. Remap sentinel to n_pad so it stays
+    out-of-bounds for [n_pad]-sized scatters."""
+    n = g.n_nodes
+    n_pad = padded_n(n, shards, block)
+    if n_pad == n:
+        return g
+    sentinel_old, sentinel_new = n, n_pad
+    idx = jnp.where(g.indices == sentinel_old, sentinel_new, g.indices)
+    pad_rows = jnp.full((n_pad - n, g.max_deg), sentinel_new, dtype=idx.dtype)
+    idx = jnp.concatenate([idx, pad_rows], axis=0)
+    degs = jnp.concatenate(
+        [g.degrees, jnp.zeros((n_pad - n,), g.degrees.dtype)]
+    )
+    w = None
+    if g.weights is not None:
+        w = jnp.concatenate(
+            [g.weights, jnp.zeros((n_pad - n, g.max_deg), g.weights.dtype)]
+        )
+    return EllGraph(indices=idx, degrees=degs, weights=w)
+
+
+def partition_bounds(n_pad: int, shards: int) -> np.ndarray:
+    """Row offsets of each shard: [shards + 1]."""
+    per = n_pad // shards
+    return np.arange(shards + 1, dtype=np.int64) * per
+
+
+def slab_edges(
+    src: np.ndarray, dst: np.ndarray, n_nodes: int, k_slabs: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Destination-aligned edge slabs (models/gnn/common.set_edge_slabs):
+    bucket edges by dst node range, pad every bucket to the max bucket size
+    (pad edges: src=0, dst=n_nodes — dropped by segment reduces), return the
+    flat concatenated (src, dst) arrays of length k_slabs × max_bucket.
+
+    Skewed graphs pad up to the hottest slab; production loaders would
+    rebalance slab boundaries by edge count instead of node count."""
+    assert n_nodes % k_slabs == 0, (n_nodes, k_slabs)
+    nl = n_nodes // k_slabs
+    slab_of = np.minimum(dst // nl, k_slabs - 1)
+    order = np.argsort(slab_of, kind="stable")
+    src, dst, slab_of = src[order], dst[order], slab_of[order]
+    counts = np.bincount(slab_of, minlength=k_slabs)
+    width = max(int(counts.max()), 1)
+    out_src = np.zeros((k_slabs, width), np.int32)
+    out_dst = np.full((k_slabs, width), n_nodes, np.int32)
+    start = 0
+    for k in range(k_slabs):
+        c = int(counts[k])
+        out_src[k, :c] = src[start : start + c]
+        out_dst[k, :c] = dst[start : start + c]
+        start += c
+    return out_src.reshape(-1), out_dst.reshape(-1)

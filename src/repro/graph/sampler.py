@@ -1,0 +1,79 @@
+"""Fanout neighbor sampler for minibatch GNN training (GraphSAGE-style).
+
+This is the paper-technique integration point for the GNN cells
+(DESIGN.md §4): multi-hop neighbor sampling IS bounded frontier expansion —
+each hop extends the frontier of sampled nodes through the same ELL adjacency
+the IFE engine scans, with a fanout cap instead of a visited filter. The
+sampled tree is returned as a flat subgraph (edge lists with local indices)
+so every GNN arch's edge-list ``apply`` runs unchanged on minibatch cells.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .csr import EllGraph
+
+
+class SampledSubgraph(NamedTuple):
+    nodes: jax.Array  # [n_sampled] global node ids (with repetition)
+    edge_src: jax.Array  # [n_edges] local index into nodes (child)
+    edge_dst: jax.Array  # [n_edges] local index into nodes (parent)
+    seed_count: int  # first seed_count entries of nodes are the seeds
+
+
+def sample_hop(
+    g: EllGraph, frontier_nodes: jax.Array, fanout: int, rng
+) -> jax.Array:
+    """Sample ``fanout`` neighbors (with replacement) per frontier node.
+
+    Returns [n_frontier, fanout] global ids. Zero-degree nodes self-loop
+    (standard GraphSAGE padding). This is the sampled analogue of the IFE
+    engine's ell frontier extension (same gather layout)."""
+    n = frontier_nodes.shape[0]
+    degs = jnp.take(g.degrees, frontier_nodes, axis=0)  # [n]
+    slots = jax.random.randint(rng, (n, fanout), 0, 1 << 30)
+    slots = slots % jnp.maximum(degs, 1)[:, None]
+    rows = jnp.take(g.indices, frontier_nodes, axis=0)  # [n, max_deg]
+    sampled = jnp.take_along_axis(rows, slots, axis=1)
+    # zero-degree: self-loop
+    return jnp.where(
+        degs[:, None] > 0, sampled, frontier_nodes[:, None]
+    ).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("fanouts",))
+def sample_subgraph(
+    g: EllGraph, seeds: jax.Array, fanouts: tuple, rng
+) -> SampledSubgraph:
+    """Layered fanout sampling: seeds [B] + fanouts (f1, f2, ...) ->
+    flat subgraph with child->parent edges (messages flow toward seeds)."""
+    layers = [seeds.astype(jnp.int32)]
+    offsets = [0]
+    total = seeds.shape[0]
+    rngs = jax.random.split(rng, len(fanouts))
+    for h, f in enumerate(fanouts):
+        cur = layers[-1]
+        sampled = sample_hop(g, cur, f, rngs[h])  # [n_cur, f]
+        layers.append(sampled.reshape(-1))
+        offsets.append(total)
+        total += cur.shape[0] * f
+    nodes = jnp.concatenate(layers)
+    srcs, dsts = [], []
+    for h, f in enumerate(fanouts):
+        n_parent = layers[h].shape[0]
+        parent_local = jnp.arange(n_parent, dtype=jnp.int32) + offsets[h]
+        child_local = (
+            jnp.arange(n_parent * f, dtype=jnp.int32) + offsets[h + 1]
+        )
+        srcs.append(child_local)
+        dsts.append(jnp.repeat(parent_local, f))
+    return SampledSubgraph(
+        nodes=nodes,
+        edge_src=jnp.concatenate(srcs),
+        edge_dst=jnp.concatenate(dsts),
+        seed_count=seeds.shape[0],
+    )

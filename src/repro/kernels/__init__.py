@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships as <name>/{<name>.py, ops.py, ref.py}: the pallas_call with
+explicit BlockSpec VMEM tiling, the jit'd wrapper, and the pure-jnp oracle.
+Kernels are validated in interpret mode on CPU (this container) and target
+real TPU lowering (interpret=False) in production.
+
+- msbfs_extend   : MS-BFS frontier extension (paper hot loop, MXU int8)
+- block_spmm     : block-sparse SpMM (GNN message passing)
+- flash_attention: causal online-softmax attention (LM prefill/train)
+"""

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for block_spmm."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_spmm_ref(
+    blocks: jax.Array,
+    block_rows: jax.Array,
+    block_cols: jax.Array,
+    x: jax.Array,
+) -> jax.Array:
+    G, B, F = x.shape
+    src = jnp.take(x, block_rows, axis=0)  # [nb, B, F]
+    partial = jnp.einsum(
+        "nuv,nuf->nvf", blocks.astype(jnp.float32), src.astype(jnp.float32)
+    )
+    out = jnp.zeros((G, B, F), jnp.float32)
+    return out.at[block_cols].add(partial, mode="drop")

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: causal flash attention forward (LM hot loop).
+
+Online-softmax accumulation over KV blocks with running (m, l, acc) carried in
+VMEM scratch across the innermost grid dimension. Grid =
+(batch·heads, q_blocks, kv_blocks); causal block skipping via pl.when.
+
+BlockSpec tiling (Bq = Bk = 128, d = head_dim):
+  q    (1, Bq, d)     — revisited across kv steps (stays in VMEM)
+  k/v  (1, Bk, d)     — streamed
+  out  (1, Bq, d)     — written once at the final kv step
+Scratch: m, l [Bq, 1] f32 + acc [Bq, d] f32 → ≈ (3·128·d + 2·128·128)·4 bytes
+per step, ≪ VMEM for d ≤ 256.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, causal, bq, bk):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # skip blocks fully above the causal diagonal (any bq/bk combination)
+    run = (not causal) or (kj * bk <= qi * bq + (bq - 1))
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale  # [Bq, d]
+        k = k_ref[0].astype(jnp.float32)  # [Bk, d]
+        v = v_ref[0].astype(jnp.float32)  # [Bk, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [Bq, Bk]
+        if causal:
+            # mask within the diagonal block
+            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = kj * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]  # [Bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # [Bq, Bk]
+        alpha = jnp.exp(m_prev - m_new)  # [Bq, 1]
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # [B, H, S, D]
+    k: jax.Array,  # [B, H, S, D]
+    v: jax.Array,  # [B, H, S, D]
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    B, H, S, D = q.shape
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    scale = 1.0 / (D ** 0.5)
+    qf = q.reshape(B * H, S, D)
+    kf = k.reshape(B * H, S, D)
+    vf = v.reshape(B * H, S, D)
+    grid = (B * H, S // block_q, S // block_k)
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, bq=block_q, bk=block_k
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, D)

@@ -1,0 +1,16 @@
+"""Backend-aware wrapper: Pallas kernel on TPU, interpret-mode on CPU."""
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention
+from .ref import attention_ref
+
+
+def mha(q, k, v, causal: bool = True, use_kernel: bool | None = None):
+    """Multi-head attention [B,H,S,D]. Chooses kernel vs oracle by backend."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        return flash_attention(q, k, v, causal=causal, interpret=False)
+    return attention_ref(q, k, v, causal=causal)

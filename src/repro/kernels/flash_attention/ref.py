@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for flash_attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True
+) -> jax.Array:
+    B, H, S, D = q.shape
+    scale = 1.0 / (D ** 0.5)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk",
+        q.astype(jnp.float32) * scale,
+        k.astype(jnp.float32),
+    )
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(
+        q.dtype
+    )

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: MS-BFS frontier extension (DESIGN.md §2).
+
+One grid step processes one nonzero 128×128 adjacency block: it computes
+``(A_blockᵀ @ F_block) > 0`` on the MXU (int8 inputs, int32 accumulation) and
+ORs it into the destination block of the next-frontier lane tensor. Blocks are
+pre-sorted by destination block so all contributions to an output block are
+consecutive grid steps — the output tile stays resident in VMEM and is written
+back exactly once (the standard Pallas revisiting-accumulator pattern).
+
+Block-sparsity via scalar prefetch: ``block_rows``/``block_cols`` are
+prefetched scalars indexing which frontier stripe to DMA and which output tile
+to accumulate — all-zero adjacency blocks are never touched. This is the
+paper's MS-BFS "share one scan across 64 lanes" economy, realized as
+block-sparse SpMM on the MXU.
+
+VMEM working set per step (B=128, L=64):
+  adj tile  128·128 int8   = 16 KiB
+  lane tile 128·64  int8   =  8 KiB
+  out tile  128·64  int32  = 32 KiB      → ~56 KiB ≪ 16 MiB VMEM; the
+pipeline depth is bounded by DMA of the adj tile stream (the dominant stream),
+which is exactly the term the block-sparse skip list minimizes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(rows_ref, cols_ref, adj_ref, lanes_ref, out_ref):
+    i = pl.program_id(0)
+    is_first = jnp.where(
+        i == 0, True, cols_ref[i] != cols_ref[jnp.maximum(i - 1, 0)]
+    )
+
+    @pl.when(is_first)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = adj_ref[0].astype(jnp.int8)  # [B, B]   A[u, v]
+    f = lanes_ref[0].astype(jnp.int8)  # [B, L]   F[u, l]
+    # OR-aggregation as saturating matmul: contract the source dim on the MXU.
+    partial = jax.lax.dot_general(
+        a,
+        f,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )  # [B(v), L]
+    out_ref[0] = out_ref[0] | (partial > 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def msbfs_extend_blocks(
+    blocks: jax.Array,  # [nb, B, B] int8, sorted by dst block
+    block_rows: jax.Array,  # [nb] int32 (src block ids)
+    block_cols: jax.Array,  # [nb] int32 (dst block ids, non-decreasing)
+    lanes: jax.Array,  # [G, B, L] int8/uint8 frontier lane blocks
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns reach counts [G, B, L] int32 (>0 where reached)."""
+    nb, B, _ = blocks.shape
+    G, _, L = lanes.shape
+    grid = (nb,)
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, B, B), lambda i, rows, cols: (i, 0, 0)),
+                pl.BlockSpec(
+                    (1, B, L), lambda i, rows, cols: (rows[i], 0, 0)
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, B, L), lambda i, rows, cols: (cols[i], 0, 0)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((G, B, L), jnp.int32),
+        interpret=interpret,
+    )(block_rows, block_cols, blocks, lanes.astype(jnp.int8))
+    return out

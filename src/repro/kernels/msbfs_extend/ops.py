@@ -1,0 +1,77 @@
+"""jit'd wrapper + host-side block preparation for the msbfs_extend kernel."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...graph.csr import BlockAdjacency, CSRGraph, blocks_from_csr
+from .msbfs_extend import msbfs_extend_blocks
+from .ref import msbfs_extend_ref
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class KernelBlocks:
+    """Column-sorted block-sparse adjacency for the kernel.
+
+    Every destination block id in [0, G) appears at least once (anchor zero
+    blocks are inserted for empty columns) so each output tile is initialized
+    by its first grid visit.
+    """
+
+    blocks: jax.Array  # [nb, B, B] int8
+    block_rows: jax.Array  # [nb] int32
+    block_cols: jax.Array  # [nb] int32 non-decreasing, covers all cols
+
+
+def prepare_kernel_blocks(adj: BlockAdjacency) -> KernelBlocks:
+    blocks = np.asarray(adj.blocks)
+    rows = np.asarray(adj.block_rows)
+    cols = np.asarray(adj.block_cols)
+    g = adj.n_row_blocks
+    missing = np.setdiff1d(np.arange(g, dtype=np.int32), cols)
+    if len(missing):
+        B = adj.block_size
+        blocks = np.concatenate(
+            [blocks, np.zeros((len(missing), B, B), np.int8)], axis=0
+        )
+        rows = np.concatenate([rows, np.zeros(len(missing), np.int32)])
+        cols = np.concatenate([cols, missing.astype(np.int32)])
+    order = np.argsort(cols, kind="stable")
+    return KernelBlocks(
+        blocks=jnp.asarray(blocks[order]),
+        block_rows=jnp.asarray(rows[order].astype(np.int32)),
+        block_cols=jnp.asarray(cols[order].astype(np.int32)),
+    )
+
+
+def kernel_blocks_from_csr(csr: CSRGraph, block: int = 128) -> KernelBlocks:
+    return prepare_kernel_blocks(blocks_from_csr(csr, block=block))
+
+
+@partial(jax.jit, static_argnames=("interpret", "use_ref"))
+def msbfs_extend(
+    kb: KernelBlocks,
+    lanes: jax.Array,  # [n, L] uint8 (n divisible by block size)
+    interpret: bool = True,
+    use_ref: bool = False,
+) -> jax.Array:
+    """Frontier lane extension: [n, L] uint8 -> [n, L] uint8 reach mask."""
+    n, L = lanes.shape
+    B = kb.blocks.shape[1]
+    G = n // B
+    lane_blocks = lanes.reshape(G, B, L)
+    if use_ref:
+        out = msbfs_extend_ref(
+            kb.blocks, kb.block_rows, kb.block_cols, lane_blocks
+        )
+    else:
+        out = msbfs_extend_blocks(
+            kb.blocks, kb.block_rows, kb.block_cols, lane_blocks,
+            interpret=interpret,
+        )
+    return (out > 0).astype(jnp.uint8).reshape(n, L)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the msbfs_extend kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def msbfs_extend_ref(
+    blocks: jax.Array,  # [nb, B, B] int8
+    block_rows: jax.Array,  # [nb] int32
+    block_cols: jax.Array,  # [nb] int32
+    lanes: jax.Array,  # [G, B, L] uint8/int8
+) -> jax.Array:
+    """Reach mask [G, B, L] int32 (1 where reached, 0 elsewhere)."""
+    G, B, L = lanes.shape
+    src = jnp.take(lanes.astype(jnp.int32), block_rows, axis=0)  # [nb,B,L]
+    partial = jnp.einsum(
+        "nuv,nul->nvl",
+        blocks.astype(jnp.int32),
+        src,
+        preferred_element_type=jnp.int32,
+    )
+    hit = (partial > 0).astype(jnp.int32)
+    out = jnp.zeros((G, B, L), jnp.int32)
+    return out.at[block_cols].max(hit, mode="drop")

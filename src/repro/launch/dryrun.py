@@ -1,0 +1,318 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax-importing module: XLA locks the
+# host device count at first init, and the production meshes below need 512
+# placeholder devices (2 pods x 16 x 16). Only the dry-run does this — smoke
+# tests and benchmarks see the real single device.
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh) cell.
+
+For each cell this prints/records:
+- ``compiled.memory_analysis()``  — proves the cell fits per-device HBM;
+- ``compiled.cost_analysis()``    — per-device HLO FLOPs / bytes;
+- the collective schedule parsed from the optimized HLO (op counts, bytes);
+- the three roofline terms (compute/memory/collective, seconds).
+
+Results land in ``results/dryrun/<arch>__<shape>__<mesh>[__tag].json`` —
+``benchmarks/roofline.py`` and EXPERIMENTS.md read from there. Already-done
+cells are skipped unless ``--force`` (the dry-run is resumable; this box has
+one core and ~40 compiles to do).
+
+Usage:
+    python -m repro.launch.dryrun --list
+    python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both [--subprocess]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def run_cell(arch: str, shape: str, mesh_tag: str, out_dir: str,
+             force: bool = False, tag: str = "",
+             overrides: dict | None = None) -> dict:
+    name = f"{arch}__{shape}__{mesh_tag}" + (f"__{tag}" if tag else "")
+    path = os.path.join(out_dir, name + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            rec = json.load(f)
+        print(f"[skip] {name}: cached ({rec.get('status')})")
+        return rec
+
+    import jax  # deferred: XLA_FLAGS must already be set
+
+    from .hlo_analysis import parse_collectives, roofline_terms
+    from .mesh import make_production_mesh
+    from .steps import build_cell, lower_cell
+
+    multi_pod = mesh_tag == "multi"
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_tag,
+        "status": "error", "tag": tag,
+    }
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_dev = mesh.size
+        cell = build_cell(arch, shape, mesh, multi_pod, **(overrides or {}))
+        lowered = lower_cell(cell, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        mem_rec = {}
+        if mem is not None:
+            for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes"):
+                mem_rec[f] = int(getattr(mem, f, 0))
+            # aliased (donated) outputs live in the argument buffers
+            mem_rec["total_bytes_per_device"] = (
+                mem_rec.get("argument_size_in_bytes", 0)
+                + mem_rec.get("output_size_in_bytes", 0)
+                + mem_rec.get("temp_size_in_bytes", 0)
+                - mem_rec.get("alias_size_in_bytes", 0)
+            )
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        cost = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float)) and k in
+                ("flops", "bytes accessed", "transcendentals",
+                 "utilization operand 0 {}", "optimal_seconds")}
+        hlo = compiled.as_text()
+        coll = parse_collectives(hlo)
+        rl = roofline_terms(
+            cost, coll, n_dev, cell.model_flops, cell.iters_scale
+        )
+        rec.update(
+            status="ok",
+            kind=cell.kind,
+            notes=cell.notes,
+            n_devices=n_dev,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=mem_rec,
+            cost=cost,
+            collective_counts={k: v for k, v in coll.counts.items() if v},
+            collective_out_bytes={
+                k: v for k, v in coll.out_bytes.items() if v
+            },
+            collective_wire_bytes={
+                k: v for k, v in coll.wire_bytes.items() if v
+            },
+            roofline=rl.as_dict(),
+        )
+        fit = mem_rec.get("total_bytes_per_device", 0) <= 16 * 2**30
+        rec["fits_16g_hbm"] = bool(fit)
+        print(
+            f"[ok]   {name}: compile {t_compile:.1f}s  "
+            f"mem/dev {mem_rec.get('total_bytes_per_device', 0)/2**30:.2f} GiB"
+            f"{'' if fit else ' (EXCEEDS 16G)'}  "
+            f"flops/dev {rl.flops:.3e}  dominant={rl.dominant}  "
+            f"terms c/m/x = {rl.compute_s:.2e}/{rl.memory_s:.2e}/"
+            f"{rl.collective_s:.2e} s"
+        )
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {name}: {rec['error']}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+    return rec
+
+
+def run_components(arch: str, shape: str, mesh_tag: str, out_dir: str,
+                   force: bool = False) -> dict:
+    """Compositional roofline for LM cells (see steps.lm_components):
+    sums trips x per-component terms — the correct accounting for programs
+    whose hot loops XLA's cost analysis counts only once."""
+    name = f"{arch}__{shape}__{mesh_tag}__comp"
+    path = os.path.join(out_dir, name + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            rec = json.load(f)
+        print(f"[skip] {name}: cached ({rec.get('status')})")
+        return rec
+
+    import jax
+
+    from .hlo_analysis import (
+        HBM_BW, ICI_BW, PEAK_FLOPS, parse_collectives,
+    )
+    from .mesh import make_production_mesh
+    from .steps import build_cell, lm_components, lower_cell
+
+    multi_pod = mesh_tag == "multi"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_tag,
+           "tag": "comp", "status": "error"}
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mono = build_cell(arch, shape, mesh, multi_pod)
+        comps = lm_components(arch, shape, mesh, multi_pod)
+        total = {"flops": 0.0, "bytes": 0.0, "wire": 0.0}
+        breakdown = []
+        t0 = time.time()
+        for c in comps:
+            lowered = lower_cell(c, mesh)
+            compiled = lowered.compile()
+            cost = compiled.cost_analysis()
+            cost = cost[0] if isinstance(cost, list) else cost
+            coll = parse_collectives(compiled.as_text())
+            f = float(cost.get("flops", 0.0)) * c.iters_scale
+            b = float(cost.get("bytes accessed", 0.0)) * c.iters_scale
+            w = coll.total_wire_bytes * c.iters_scale
+            total["flops"] += f
+            total["bytes"] += b
+            total["wire"] += w
+            breakdown.append({
+                "component": c.notes, "trips": c.iters_scale,
+                "flops": f, "bytes": b, "wire": w,
+                "collectives": {k: v for k, v in coll.counts.items() if v},
+            })
+        terms = {
+            "compute_s": total["flops"] / PEAK_FLOPS,
+            "memory_s": total["bytes"] / HBM_BW,
+            "collective_s": total["wire"] / ICI_BW,
+        }
+        dom = max(terms, key=terms.get).replace("_s", "")
+        model_fpd = mono.model_flops / mesh.size
+        bound = max(terms.values())
+        rec.update(
+            status="ok",
+            compile_s=round(time.time() - t0, 1),
+            n_devices=mesh.size,
+            components=breakdown,
+            roofline={
+                "flops_per_device": total["flops"],
+                "hbm_bytes_per_device": total["bytes"],
+                "wire_bytes_per_device": total["wire"],
+                **terms,
+                "dominant": dom,
+                "model_flops_per_device": model_fpd,
+                "useful_fraction": model_fpd / max(total["flops"], 1.0),
+                "roofline_fraction": (model_fpd / PEAK_FLOPS)
+                / max(bound, 1e-30),
+                "iters_scale": 1.0,
+            },
+        )
+        rl = rec["roofline"]
+        print(
+            f"[ok]   {name}: flops/dev {rl['flops_per_device']:.3e} "
+            f"useful {rl['useful_fraction']:.2f} dominant={dom} "
+            f"terms c/m/x = {terms['compute_s']:.2e}/"
+            f"{terms['memory_s']:.2e}/{terms['collective_s']:.2e} s "
+            f"roofline {rl['roofline_fraction']*100:.1f}%"
+        )
+    except Exception as e:  # noqa: BLE001
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {name}: {rec['error']}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+    return rec
+
+
+def iter_cells():
+    # config registry import is jax-free
+    from ..configs import base as cfgbase
+
+    cells, skips = cfgbase.all_cells()
+    return cells, skips
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="variant tag for perf sweeps")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--subprocess", action="store_true",
+                    help="isolate each cell in a fresh process")
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--override", action="append", default=[],
+                    help="key=value cell overrides (paper cells)")
+    ap.add_argument("--components", action="store_true",
+                    help="compositional roofline for LM cells")
+    args = ap.parse_args()
+
+    cells, skips = iter_cells()
+    if args.list:
+        for a, s in cells:
+            print(f"{a:28s} {s}")
+        for a, s, why in skips:
+            print(f"{a:28s} {s}  [SKIP: {why}]")
+        return 0
+
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        overrides[k] = v
+
+    if args.all:
+        todo = [(a, s, m) for a, s in cells for m in meshes]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape, m) for m in meshes]
+
+    failures = 0
+    for arch, shape, mesh_tag in todo:
+        if args.subprocess:
+            import subprocess
+
+            name = f"{arch}__{shape}__{mesh_tag}"
+            path = os.path.join(
+                args.out,
+                name + (f"__{args.tag}" if args.tag else "") + ".json",
+            )
+            if os.path.exists(path) and not args.force:
+                with open(path) as f:
+                    rec = json.load(f)
+                print(f"[skip] {name}: cached ({rec.get('status')})")
+                failures += rec.get("status") != "ok"
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh_tag,
+                   "--out", args.out]
+            if args.force:
+                cmd.append("--force")
+            if args.tag:
+                cmd += ["--tag", args.tag]
+            for kv in args.override:
+                cmd += ["--override", kv]
+            try:
+                r = subprocess.run(cmd, timeout=args.timeout)
+                failures += r.returncode != 0
+            except subprocess.TimeoutExpired:
+                print(f"[FAIL] {name}: timeout {args.timeout}s")
+                with open(path, "w") as f:
+                    json.dump({"arch": arch, "shape": shape,
+                               "mesh": mesh_tag, "status": "error",
+                               "error": f"timeout {args.timeout}s"}, f)
+                failures += 1
+        elif args.components:
+            rec = run_components(arch, shape, mesh_tag, args.out,
+                                 force=args.force)
+            failures += rec.get("status") != "ok"
+        else:
+            rec = run_cell(arch, shape, mesh_tag, args.out,
+                           force=args.force, tag=args.tag,
+                           overrides=overrides)
+            failures += rec.get("status") != "ok"
+    print(f"done: {len(todo) - failures}/{len(todo)} ok")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

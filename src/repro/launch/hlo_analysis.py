@@ -1,0 +1,187 @@
+"""Roofline terms from a compiled XLA artifact (DESIGN.md §7).
+
+``cost_analysis()`` gives per-device HLO FLOPs and bytes (XLA multiplies
+while/scan bodies by known trip counts). Collective bytes are NOT in
+cost_analysis — we parse the post-SPMD optimized HLO and sum operand sizes
+of every collective op, weighting each kind by its ring wire factor:
+
+    all-reduce          2·(K−1)/K · bytes     (reduce-scatter + all-gather)
+    all-gather          (K−1)/K · out_bytes   (out is the gathered shape)
+    reduce-scatter      (K−1)   · out_bytes   (in = K · out)
+    all-to-all          (K−1)/K · bytes
+    collective-permute  1 · bytes
+
+Hardware model (TPU v5e-like, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+Caveat recorded with every report: XLA's HLO cost analysis counts a
+*dynamic-trip-count* while body ONCE; the IFE query engine's frontier loop
+is such a body, so its terms carry an explicit ``iters_scale`` multiplier
+(expected iteration count). lax.scan layers (LM) have static trip counts
+and are counted correctly (verified against 6·N·D).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g. "f32[128,1024]{1,0}" or "u32[16]"  (shape layout braces optional)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        size = 1
+        if dims:
+            for d in dims.split(","):
+                size *= int(d)
+        total += size * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [n_groups, group_size]<=[N]
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(m.group(1).count(",") + 1, 1)
+    return 2  # conservative default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict  # kind -> op count
+    out_bytes: dict  # kind -> sum of result bytes
+    wire_bytes: dict  # kind -> ring-weighted bytes on the wire per device
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts = {k: 0 for k in _COLLECTIVES}
+    out_bytes = {k: 0.0 for k in _COLLECTIVES}
+    wire = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        k = _group_size(line)
+        counts[kind] += 1
+        out_bytes[kind] += b
+        if kind == "all-reduce":
+            wire[kind] += 2.0 * (k - 1) / k * b
+        elif kind == "all-gather":
+            wire[kind] += (k - 1) / k * b
+        elif kind == "reduce-scatter":
+            wire[kind] += (k - 1) * b
+        elif kind == "all-to-all":
+            wire[kind] += (k - 1) / k * b
+        else:  # collective-permute
+            wire[kind] += b
+    return CollectiveStats(counts=counts, out_bytes=out_bytes, wire_bytes=wire)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per-device HLO flops
+    hbm_bytes: float  # per-device HLO bytes accessed
+    wire_bytes: float  # per-device ring-weighted collective bytes
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_per_device: float
+    iters_scale: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        return self.model_flops_per_device / max(self.flops, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline actually achieved if the step
+        runs at the dominant-term rate: (useful flop time) / (bound time)."""
+        ideal = self.model_flops_per_device / PEAK_FLOPS
+        return ideal / max(self.bound_s, 1e-30)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "wire_bytes_per_device": self.wire_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops_per_device": self.model_flops_per_device,
+            "useful_fraction": self.useful_fraction,
+            "roofline_fraction": self.roofline_fraction,
+            "iters_scale": self.iters_scale,
+        }
+
+
+def roofline_terms(
+    cost: dict,
+    coll: CollectiveStats,
+    n_devices: int,
+    model_flops_total: float,
+    iters_scale: float = 1.0,
+) -> Roofline:
+    flops = float(cost.get("flops", 0.0)) * iters_scale
+    hbm = float(cost.get("bytes accessed", 0.0)) * iters_scale
+    wire = coll.total_wire_bytes * iters_scale
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        wire_bytes=wire,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=hbm / HBM_BW,
+        collective_s=wire / ICI_BW,
+        model_flops_per_device=model_flops_total / n_devices,
+        iters_scale=iters_scale,
+    )

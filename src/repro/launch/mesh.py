@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state. The dry-run forces 512 host devices before first jax init;
+real deployments get the same mesh over ICI-connected TPU chips.
+
+Single-pod: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — the pod axis
+extends data parallelism across pods (DCN-crossing collectives are gradient
+all-reduces only; frontier/TP collectives stay inside a pod).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def batch_axes(multi_pod: bool = False):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def all_axes(multi_pod: bool = False):
+    return ("pod", "data", "model") if multi_pod else ("data", "model")

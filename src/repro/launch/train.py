@@ -1,0 +1,124 @@
+"""Config-driven fault-tolerant training driver.
+
+End-to-end: arch config -> model init -> sharded data stream -> jit train
+step -> TrainGuard loop (checkpoint every N, crash-resume, straggler EWMA).
+On a real pod the same script runs under ``jax.distributed.initialize()``;
+on this box it drives the smoke-scale configs.
+
+    PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b \
+        --smoke --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.checkpoint import CheckpointManager
+from ..configs import base as cfgbase
+from ..data.pipeline import TokenStream
+from ..models import transformer as tfm
+from ..nn.module import count_params, split_boxed
+from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
+from ..optim.schedules import cosine_schedule, wsd_schedule
+from ..runtime.fault_tolerance import StragglerDetector, TrainGuard
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: dict
+    opt: object
+    step: int = 0
+
+
+def build(arch: str, smoke: bool, batch: int, seq: int, lr: float):
+    spec = cfgbase.get(arch)
+    assert spec.family == "lm", "train.py drives the LM family"
+    cfg = spec.smoke_config() if smoke else spec.full_config()
+    params, _ = split_boxed(tfm.init(jax.random.PRNGKey(0), cfg))
+    ocfg = AdamWConfig(lr=lr)
+    opt = adamw_init(params, ocfg)
+    sched = (
+        wsd_schedule(warmup=20, total=10_000)
+        if spec.schedule == "wsd"
+        else cosine_schedule(warmup=20, total=10_000)
+    )
+    stream = TokenStream(vocab=cfg.vocab, seq_len=seq, global_batch=batch)
+
+    @jax.jit
+    def train_step(params, opt, batch, lr_scale):
+        loss, grads = jax.value_and_grad(tfm.loss_fn)(params, cfg, batch)
+        params, opt, gnorm = adamw_update(
+            grads, opt, params, ocfg, lr_scale=lr_scale
+        )
+        return params, opt, loss, gnorm
+
+    return cfg, params, opt, sched, stream, train_step
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm-2b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg, params, opt, sched, stream, train_step = build(
+        args.arch, args.smoke, args.batch, args.seq, args.lr
+    )
+    print(f"{cfg.name}: {count_params(params)/1e6:.1f}M params")
+    ckpt = CheckpointManager(args.ckpt_dir, keep=3)
+    detector = StragglerDetector()
+    guard = TrainGuard(
+        ckpt=ckpt, save_every=args.save_every, detector=detector
+    )
+
+    # resume if a checkpoint exists (crash-restart path)
+    state = {"params": params, "opt": opt}
+    start = 0
+    latest = ckpt.latest_step()
+    if latest is not None:
+        state, start = ckpt.restore(state)[0], latest
+        print(f"resumed from step {start}")
+
+    losses = []
+
+    def step_fn(state, step):
+        batch = jax.tree.map(jnp.asarray, stream.batch(step))
+        p, o, loss, gnorm = train_step(
+            state["params"], state["opt"], batch, sched(step)
+        )
+        if step % args.log_every == 0:
+            print(
+                f"step {step:5d}  loss {float(loss):.4f}  "
+                f"gnorm {float(gnorm):.3f}  lr x{sched(step):.3f}"
+            )
+        losses.append(float(loss))
+        return {"params": p, "opt": o}
+
+    t0 = time.time()
+    state, end = guard.run(state, step_fn, args.steps, start_step=start)
+    dt = time.time() - t0
+    tok_s = (end - start) * args.batch * args.seq / max(dt, 1e-9)
+    print(
+        f"done: steps {start}->{end} in {dt:.1f}s ({tok_s:.0f} tok/s); "
+        f"loss {losses[0]:.3f} -> {losses[-1]:.3f}; "
+        f"stragglers flagged: {len(detector.incidents)}"
+    )
+    ckpt.wait()
+    assert losses[-1] < losses[0], "training must descend"
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

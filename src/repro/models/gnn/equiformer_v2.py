@@ -1,0 +1,217 @@
+"""EquiformerV2 [arXiv:2306.12059] — equivariant graph attention via eSCN
+SO(2) convolutions.
+
+Assigned config: n_layers=12, d_hidden=128, l_max=6, m_max=2, n_heads=8.
+
+The eSCN trick: rotate neighbor irreps into the edge-aligned frame (Wigner
+blocks from irreps.align_matrices), where the SO(3) tensor product reduces to
+per-|m| SO(2) linear maps (O(L³) instead of O(L⁶)); components with
+|m| > m_max are truncated. Attention logits come from the frame's scalar
+channel + radial basis; values are the SO(2)-convolved irreps, rotated back
+after aggregation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...nn.module import boxed_param, shard_activation
+from ..gnn import common
+from .irreps import align_matrices, lm_index, n_lm, rotate_irreps
+
+
+@dataclasses.dataclass(frozen=True)
+class EquiformerV2Config:
+    name: str = "equiformer-v2"
+    n_layers: int = 12
+    d_hidden: int = 128
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    n_rbf: int = 32
+    cutoff: float = 8.0
+    n_species: int = 32
+    d_feat: int = 0
+    n_out: int = 1
+
+
+def _m_indices(cfg):
+    """For each m in 0..m_max: flat lm indices of (l, ±m) components."""
+    out = []
+    for m in range(cfg.m_max + 1):
+        ls = [l for l in range(m, cfg.l_max + 1)]
+        pos = [lm_index(l, m) for l in ls]
+        neg = [lm_index(l, -m) for l in ls]
+        out.append((np.array(pos), np.array(neg), len(ls)))
+    return out
+
+
+def _so2_init(rng, cfg):
+    """Per-|m| SO(2) linear weights over the l-stack (+ channel mix)."""
+    p = {}
+    rs = jax.random.split(rng, 2 * (cfg.m_max + 1) + 1)
+    for m in range(cfg.m_max + 1):
+        nl = cfg.l_max + 1 - m
+        p[f"wr_{m}"] = {
+            "kernel": boxed_param(
+                rs[2 * m], (nl, nl), (None, None), scale=1.0 / np.sqrt(nl)
+            )
+        }
+        if m > 0:
+            p[f"wi_{m}"] = {
+                "kernel": boxed_param(
+                    rs[2 * m + 1], (nl, nl), (None, None),
+                    scale=1.0 / np.sqrt(nl),
+                )
+            }
+    p["channel"] = {
+        "kernel": boxed_param(
+            rs[-1], (cfg.d_hidden, cfg.d_hidden), (None, None),
+            scale=1.0 / np.sqrt(cfg.d_hidden),
+        )
+    }
+    return p
+
+
+def _so2_apply(p, cfg, x_rot, midx):
+    """SO(2) conv in the edge frame: x_rot [E, nlm, C] -> [E, nlm, C]
+    (m > m_max truncated to 0)."""
+    E, nlm, C = x_rot.shape
+    out = jnp.zeros_like(x_rot)
+    for m, (pos, neg, nl) in enumerate(midx):
+        wr = p[f"wr_{m}"]["kernel"]  # [nl, nl]
+        xc = x_rot[:, pos, :]  # [E, nl, C] cos components
+        if m == 0:
+            yc = jnp.einsum("elc,lk->ekc", xc, wr)
+            out = out.at[:, pos, :].set(yc)
+        else:
+            wi = p[f"wi_{m}"]["kernel"]
+            xs = x_rot[:, neg, :]
+            yc = jnp.einsum("elc,lk->ekc", xc, wr) - jnp.einsum(
+                "elc,lk->ekc", xs, wi
+            )
+            ys = jnp.einsum("elc,lk->ekc", xc, wi) + jnp.einsum(
+                "elc,lk->ekc", xs, wr
+            )
+            out = out.at[:, pos, :].set(yc)
+            out = out.at[:, neg, :].set(ys)
+    return out @ p["channel"]["kernel"]
+
+
+def _eq_layernorm(x, eps=1e-6):
+    """Equivariant norm: per-l RMS over (m, C)."""
+    outs = []
+    l_max = int(np.sqrt(x.shape[1])) - 1
+    for l in range(l_max + 1):
+        blk = x[:, l * l : (l + 1) ** 2, :]
+        rms = jnp.sqrt(jnp.mean(jnp.square(blk), axis=(1, 2), keepdims=True))
+        outs.append(blk / jnp.maximum(rms, eps))
+    return jnp.concatenate(outs, axis=1)
+
+
+def init(rng, cfg: EquiformerV2Config):
+    rs = jax.random.split(rng, 4 + cfg.n_layers)
+    params = {
+        "species_embed": {
+            "kernel": boxed_param(
+                rs[0], (cfg.n_species, cfg.d_hidden), (None, None), scale=1.0
+            )
+        },
+        "readout": {
+            "kernel": boxed_param(rs[1], (cfg.d_hidden, cfg.n_out), (None, None))
+        },
+    }
+    if cfg.d_feat:
+        params["feat_proj"] = {
+            "kernel": boxed_param(rs[2], (cfg.d_feat, cfg.d_hidden), ("embed", None))
+        }
+    C, H = cfg.d_hidden, cfg.n_heads
+    for i in range(cfg.n_layers):
+        r = jax.random.split(rs[3 + i], 6)
+        params[f"layer_{i}"] = {
+            "so2": _so2_init(r[0], cfg),
+            "alpha": {
+                "kernel": boxed_param(
+                    r[1], (2 * C + cfg.n_rbf, H), (None, None)
+                )
+            },
+            "ffn_scalar": {
+                "w1": {"kernel": boxed_param(r[2], (C, 2 * C), (None, None))},
+                "w2": {"kernel": boxed_param(r[3], (2 * C, C), (None, None))},
+            },
+            "gate": {"kernel": boxed_param(r[4], (C, cfg.l_max * C), (None, None))},
+            "proj": {"kernel": boxed_param(r[5], (C, C), (None, None))},
+        }
+    return params
+
+
+def apply(params, cfg: EquiformerV2Config, batch):
+    pos = batch["positions"]
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    N = pos.shape[0]
+    nlm = n_lm(cfg.l_max)
+    C, H = cfg.d_hidden, cfg.n_heads
+    midx = _m_indices(cfg)
+
+    x = jnp.zeros((N, nlm, C), jnp.float32)
+    x0 = jnp.take(
+        params["species_embed"]["kernel"],
+        jnp.clip(batch["species"], 0, cfg.n_species - 1),
+        axis=0,
+    )
+    if cfg.d_feat and "node_feat" in batch:
+        x0 = x0 + batch["node_feat"].astype(jnp.float32) @ params["feat_proj"]["kernel"]
+    x = x.at[:, 0, :].set(x0)
+
+    vec, r, valid = common.edge_vectors(pos, src, dst)
+    mats = align_matrices(cfg.l_max, vec)  # per-l [E, 2l+1, 2l+1]
+    rbf = common.gaussian_rbf(r, cfg.n_rbf, cfg.cutoff)
+
+    # NOTE (EXPERIMENTS §Perf C): at ogb_products scale the per-edge irrep
+    # tensors ([E, (l_max+1)^2, C] = 49C-wide at l_max=6) exceed any static
+    # sharding budget; the production path needs STREAMED edge chunks
+    # (two-pass online-softmax attention over edge slabs). Not implemented
+    # — the cell compiles and its roofline is recorded, with memory far
+    # over budget by design of the measurement.
+    for i in range(cfg.n_layers):
+        lp = params[f"layer_{i}"]
+        xn = _eq_layernorm(x)
+        xj = jnp.take(xn, src, axis=0)  # [E, nlm, C]
+        xj_rot = rotate_irreps(mats, xj, cfg.l_max)  # into edge frame
+        msg = _so2_apply(lp["so2"], cfg, xj_rot, midx)  # [E, nlm, C]
+        msg = msg * valid[:, None, None]  # degenerate edges carry no message
+        # attention logits: frame scalars of i and conv output + rbf
+        xi_scal = jnp.take(xn[:, 0, :], dst, axis=0)  # [E, C]
+        feats = jnp.concatenate([xi_scal, msg[:, 0, :], rbf], axis=-1)
+        logits = jax.nn.leaky_relu(feats @ lp["alpha"]["kernel"])  # [E, H]
+        alpha = common.segment_softmax(logits, dst, N)  # [E, H]
+        vals = msg.reshape(-1, nlm, H, C // H) * alpha[:, None, :, None]
+        vals = vals.reshape(-1, nlm, C)
+        vals = rotate_irreps(mats, vals, cfg.l_max, inverse=True)
+        agg = common.aggregate(vals, dst, N, "sum")  # [N, nlm, C]
+        x = x + agg @ lp["proj"]["kernel"]
+        # FFN: scalar MLP + gated non-scalars
+        xn2 = _eq_layernorm(x)
+        s = xn2[:, 0, :]
+        h = jax.nn.silu(s @ lp["ffn_scalar"]["w1"]["kernel"])
+        s_out = h @ lp["ffn_scalar"]["w2"]["kernel"]
+        gates = jax.nn.sigmoid(s @ lp["gate"]["kernel"]).reshape(
+            -1, cfg.l_max, C
+        )
+        gl = jnp.repeat(
+            gates,
+            np.array([2 * l + 1 for l in range(1, cfg.l_max + 1)]),
+            axis=1,
+        )  # [N, nlm-1, C]
+        upd = jnp.concatenate([s_out[:, None, :], xn2[:, 1:, :] * gl], axis=1)
+        x = x + upd
+    node_out = x[:, 0, :] @ params["readout"]["kernel"]
+    out = {"node_out": node_out}
+    if "graph_ids" in batch:
+        out["graph_out"] = jax.ops.segment_sum(
+            node_out, batch["graph_ids"], num_segments=batch["n_graphs"]
+        )
+    return out

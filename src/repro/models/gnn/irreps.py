@@ -1,0 +1,251 @@
+"""Real spherical-harmonic irreps machinery (e3nn is not available offline).
+
+Provides, for l <= LMAX:
+- ``sph_harm_real``      : real SH values Y_lm(n̂), flat (l,m) layout [.., (L+1)²]
+- ``gaunt_tensor``       : real Gaunt coefficients ∫ Y_a Y_b Y_c dΩ computed by
+                           Gauss–Legendre × uniform-φ quadrature (exact for
+                           band-limited integrands) — the CG-contraction tensor
+                           used by MACE-style tensor products.
+- ``align_matrices``     : per-edge block-diagonal Wigner rotations W(n̂) with
+                           W(n̂) @ sh(n̂) = sh(ẑ) — the eSCN trick
+                           (EquiformerV2): rotate features into the edge frame
+                           where tensor products become SO(2)-sparse.
+
+Wigner small-d matrices come from the eigen-decomposition of J_y per l
+(numpy, at import); the real-basis change is the standard complex→real SH
+unitary. Conventions are locked by tests (alignment property + orthogonality).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LMAX = 6
+
+
+def n_lm(l_max: int) -> int:
+    return (l_max + 1) ** 2
+
+
+def lm_index(l: int, m: int) -> int:
+    return l * l + l + m
+
+
+# ---------------------------------------------------------------------------
+# Associated Legendre + real SH (static unroll over (l, m); jnp-traceable).
+# ---------------------------------------------------------------------------
+
+def _legendre_all(l_max: int, x):
+    """P_l^m(x) for 0<=m<=l<=l_max, dict[(l,m)] -> array like x."""
+    P = {(0, 0): jnp.ones_like(x)}
+    somx2 = jnp.sqrt(jnp.maximum(1.0 - x * x, 0.0))
+    for m in range(1, l_max + 1):
+        P[(m, m)] = -(2 * m - 1) * somx2 * P[(m - 1, m - 1)]
+    for m in range(0, l_max):
+        P[(m + 1, m)] = (2 * m + 1) * x * P[(m, m)]
+    for m in range(0, l_max + 1):
+        for l in range(m + 2, l_max + 1):
+            P[(l, m)] = (
+                (2 * l - 1) * x * P[(l - 1, m)] - (l + m - 1) * P[(l - 2, m)]
+            ) / (l - m)
+    return P
+
+
+def sph_harm_real(l_max: int, vecs):
+    """Real orthonormal SH evaluated at unit vectors [..., 3] ->
+    [..., (l_max+1)^2] in flat (l, m=-l..l) order."""
+    x, y, z = vecs[..., 0], vecs[..., 1], vecs[..., 2]
+    phi = jnp.arctan2(y, x)
+    ct = jnp.clip(z, -1.0, 1.0)
+    P = _legendre_all(l_max, ct)
+    out = []
+    for l in range(l_max + 1):
+        row = [None] * (2 * l + 1)
+        for m in range(0, l + 1):
+            # orthonormal normalization
+            norm = np.sqrt(
+                (2 * l + 1)
+                / (4 * np.pi)
+                * _factorial_ratio(l - m, l + m)
+            )
+            if m == 0:
+                row[l] = norm * P[(l, 0)]
+            else:
+                base = np.sqrt(2.0) * norm * P[(l, m)]
+                row[l + m] = base * jnp.cos(m * phi)
+                row[l - m] = base * jnp.sin(m * phi)
+        out.extend(row)
+    return jnp.stack(out, axis=-1)
+
+
+def _factorial_ratio(a: int, b: int) -> float:
+    """a! / b! for small ints."""
+    out = 1.0
+    if a >= b:
+        for k in range(b + 1, a + 1):
+            out *= k
+        return out
+    for k in range(a + 1, b + 1):
+        out /= k
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Gaunt tensor via quadrature.
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def gaunt_tensor(l1: int, l2: int, l3: int) -> np.ndarray:
+    """G[a, b, c] = ∫ Y_{l1,a} Y_{l2,b} Y_{l3,c} dΩ (real SH), numpy."""
+    n_theta = 2 * (l1 + l2 + l3) + 8
+    n_phi = 2 * (l1 + l2 + l3) + 9
+    xs, wts = np.polynomial.legendre.leggauss(n_theta)
+    phis = np.linspace(0, 2 * np.pi, n_phi, endpoint=False)
+    wphi = 2 * np.pi / n_phi
+    ct, ph = np.meshgrid(xs, phis, indexing="ij")
+    st = np.sqrt(1 - ct**2)
+    pts = np.stack(
+        [st * np.cos(ph), st * np.sin(ph), ct], axis=-1
+    ).reshape(-1, 3)
+    w = (wts[:, None] * np.ones_like(ph) * wphi).reshape(-1)
+    lmax = max(l1, l2, l3)
+    # host-side quadrature: must stay concrete even when first called inside
+    # a jit trace (the dry-run traces apply() before any eager call warms
+    # the lru_cache)
+    with jax.ensure_compile_time_eval():
+        Y = np.asarray(sph_harm_real(lmax, jnp.asarray(pts)))  # [P,(L+1)^2]
+
+    def block(l):
+        return Y[:, l * l : (l + 1) * (l + 1)]
+
+    Y1, Y2, Y3 = block(l1), block(l2), block(l3)
+    return np.einsum("pa,pb,pc,p->abc", Y1, Y2, Y3, w)
+
+
+@functools.lru_cache(maxsize=None)
+def gaunt_full(l_max: int) -> np.ndarray:
+    """Dense [(L+1)², (L+1)², (L+1)²] Gaunt tensor (small for l_max<=3)."""
+    n = n_lm(l_max)
+    G = np.zeros((n, n, n))
+    for l1 in range(l_max + 1):
+        for l2 in range(l_max + 1):
+            for l3 in range(l_max + 1):
+                if (l1 + l2 + l3) % 2 or l3 < abs(l1 - l2) or l3 > l1 + l2:
+                    continue
+                g = gaunt_tensor(l1, l2, l3)
+                G[
+                    l1 * l1 : (l1 + 1) ** 2,
+                    l2 * l2 : (l2 + 1) ** 2,
+                    l3 * l3 : (l3 + 1) ** 2,
+                ] = g
+    return G
+
+
+# ---------------------------------------------------------------------------
+# Wigner rotations (real basis) for edge-frame alignment (eSCN).
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _jy_eig(l: int):
+    """Eigendecomposition of J_y in the complex |l,m> basis."""
+    m = np.arange(-l, l + 1)
+    dim = 2 * l + 1
+    jp = np.zeros((dim, dim), complex)  # J+
+    for i in range(dim - 1):
+        mm = m[i]
+        jp[i + 1, i] = np.sqrt(l * (l + 1) - mm * (mm + 1))
+    jm = jp.conj().T
+    jy = (jp - jm) / 2j
+    w, V = np.linalg.eigh(jy)
+    return w, V
+
+
+@functools.lru_cache(maxsize=None)
+def _complex_to_real(l: int) -> np.ndarray:
+    """Unitary T with Y_real = T @ Y_complex (rows: m=-l..l real;
+    cols: m=-l..l complex), Condon–Shortley convention."""
+    dim = 2 * l + 1
+    T = np.zeros((dim, dim), complex)
+    for m in range(1, l + 1):
+        i_pos, i_neg = l + m, l - m
+        T[i_neg, l - m] = 1j / np.sqrt(2)
+        T[i_neg, l + m] = -1j * (-1) ** m / np.sqrt(2)
+        T[i_pos, l - m] = 1 / np.sqrt(2)
+        T[i_pos, l + m] = (-1) ** m / np.sqrt(2)
+    T[l, l] = 1.0
+    return T
+
+
+def _dy_real_parts(l: int):
+    """Returns (A, w, B) with d_real(β) = Re( A @ diag(e^{-iβw}) @ B )."""
+    w, V = _jy_eig(l)
+    T = _complex_to_real(l)
+    A = T @ V
+    B = V.conj().T @ T.conj().T
+    return A, w, B
+
+
+def _dz_real(l: int, alpha):
+    """Rotation about z by alpha in the real SH basis: block 2x2 rotations
+    mixing (m, -m): returns [..., dim, dim]."""
+    dim = 2 * l + 1
+    shape = alpha.shape
+    out = jnp.zeros((*shape, dim, dim), jnp.float32)
+    out = out.at[..., l, l].set(1.0)
+    for m in range(1, l + 1):
+        c, s = jnp.cos(m * alpha), jnp.sin(m * alpha)
+        i, j = l + m, l - m
+        out = out.at[..., i, i].set(c)
+        out = out.at[..., j, j].set(c)
+        out = out.at[..., i, j].set(s)
+        out = out.at[..., j, i].set(-s)
+    return out
+
+
+def _dy_real(l: int, beta):
+    A, w, B = _dy_real_parts(l)
+    Aj = jnp.asarray(A.astype(np.complex64))
+    Bj = jnp.asarray(B.astype(np.complex64))
+    wj = jnp.asarray(w.astype(np.float32))
+    phases = jnp.exp(-1j * beta[..., None] * wj)  # [..., dim]
+    M = jnp.einsum("ij,...j,jk->...ik", Aj, phases.astype(jnp.complex64), Bj)
+    return jnp.real(M).astype(jnp.float32)
+
+
+def align_matrices(l_max: int, unit_vecs):
+    """Per-l Wigner rotations W_l(n̂) [..., 2l+1, 2l+1] (real basis) with
+
+        blockdiag(W) @ sph_harm_real(n̂) == sph_harm_real(ẑ)
+
+    i.e. rotation into the edge-aligned frame (eSCN). Returns list per l.
+    Inverse transform is the transpose (orthogonal).
+    """
+    x, y, z = unit_vecs[..., 0], unit_vecs[..., 1], unit_vecs[..., 2]
+    alpha = jnp.arctan2(y, x)
+    # arctan2 form: stable where arccos'(z) blows up near the poles (f32)
+    beta = jnp.arctan2(jnp.sqrt(jnp.maximum(x * x + y * y, 0.0)), z)
+    mats = []
+    for l in range(l_max + 1):
+        # convention (locked by tests): _d*_real(l, γ) is the matrix of the
+        # argument rotation by R(-γ), so W = dy(+β) dz(+α) realizes
+        # n̂ -> Rz(-α) -> xz-plane -> Ry(-β) -> ẑ.
+        Ry = _dy_real(l, beta)
+        Rz = _dz_real(l, alpha)
+        mats.append(jnp.einsum("...ij,...jk->...ik", Ry, Rz))
+    return mats
+
+
+def rotate_irreps(mats, feats, l_max: int, inverse: bool = False):
+    """Apply per-l rotation blocks to flat irreps [..., (L+1)², C]."""
+    out = []
+    for l in range(l_max + 1):
+        blk = feats[..., l * l : (l + 1) ** 2, :]
+        M = mats[l]
+        if inverse:
+            out.append(jnp.einsum("...ji,...jc->...ic", M, blk))
+        else:
+            out.append(jnp.einsum("...ij,...jc->...ic", M, blk))
+    return jnp.concatenate(out, axis=-2)

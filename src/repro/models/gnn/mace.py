@@ -1,0 +1,165 @@
+"""MACE [arXiv:2206.07697] — higher-order equivariant message passing (E(3)-ACE).
+
+Assigned config: n_layers=2, d_hidden=128, l_max=2, correlation_order=3,
+n_rbf=8. Irreps features are flat [N, (l_max+1)², C]; products use the real
+Gaunt tensor (irreps.gaunt_full). The ACE symmetric contraction to correlation
+order ν is realized by iterated Gaunt products (B₂ = G·A·A, B₃ = G·B₂·A) with
+per-order, per-l channelwise linear weights — the same product basis at
+matching capacity, without e3nn.
+
+Works on any shape cell: geometric inputs (positions, species) drive the edge
+basis; optional node features project into the l=0 channels (full-graph node
+classification cells).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...nn.module import boxed_param
+from ..gnn import common
+from .irreps import gaunt_full, n_lm, sph_harm_real
+
+
+@dataclasses.dataclass(frozen=True)
+class MACEConfig:
+    name: str = "mace"
+    n_layers: int = 2
+    d_hidden: int = 128
+    l_max: int = 2
+    correlation_order: int = 3
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 32
+    d_feat: int = 0  # >0: project node features into l=0
+    n_out: int = 1  # 1 = energy; >1 = node classes
+
+
+def _per_l_linear_init(rng, cfg, name_dims):
+    """Per-l channel linear weights: dict l -> [C, C]."""
+    rs = jax.random.split(rng, cfg.l_max + 1)
+    return {
+        f"l{l}": {
+            "kernel": boxed_param(
+                rs[l], (cfg.d_hidden, cfg.d_hidden), (None, None),
+                scale=1.0 / np.sqrt(cfg.d_hidden),
+            )
+        }
+        for l in range(cfg.l_max + 1)
+    }
+
+
+def _per_l_apply(p, cfg, x):
+    """x [N, n_lm, C] -> same, block-diagonal per-l channel mixing."""
+    out = []
+    for l in range(cfg.l_max + 1):
+        blk = x[:, l * l : (l + 1) ** 2, :]
+        out.append(blk @ p[f"l{l}"]["kernel"])
+    return jnp.concatenate(out, axis=1)
+
+
+def init(rng, cfg: MACEConfig):
+    rs = jax.random.split(rng, 4 + cfg.n_layers)
+    params = {
+        "species_embed": {
+            "kernel": boxed_param(
+                rs[0], (cfg.n_species, cfg.d_hidden), (None, None), scale=1.0
+            )
+        },
+        "readout": {
+            "kernel": boxed_param(
+                rs[1], (cfg.d_hidden, cfg.n_out), (None, None)
+            )
+        },
+    }
+    if cfg.d_feat:
+        params["feat_proj"] = {
+            "kernel": boxed_param(
+                rs[2], (cfg.d_feat, cfg.d_hidden), ("embed", None)
+            )
+        }
+    for i in range(cfg.n_layers):
+        r = jax.random.split(rs[3 + i], 6)
+        params[f"layer_{i}"] = {
+            "radial": {
+                "kernel": boxed_param(
+                    r[0],
+                    (cfg.n_rbf, (cfg.l_max + 1) * cfg.d_hidden),
+                    (None, None),
+                )
+            },
+            "w_A": _per_l_linear_init(r[1], cfg, None),
+            "w_B2": _per_l_linear_init(r[2], cfg, None),
+            "w_B3": _per_l_linear_init(r[3], cfg, None),
+            "w_self": _per_l_linear_init(r[4], cfg, None),
+            "readout": {
+                "kernel": boxed_param(
+                    r[5], (cfg.d_hidden, cfg.n_out), (None, None)
+                )
+            },
+        }
+    return params
+
+
+def apply(params, cfg: MACEConfig, batch):
+    """batch: positions [N,3], species [N], edge_src/dst [E],
+    optional node_feat [N,d_feat], optional graph_ids [N] (+ n_graphs).
+    Returns per-node outputs [N, n_out] (and graph outputs if graph_ids)."""
+    pos = batch["positions"]
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    N = pos.shape[0]
+    nlm = n_lm(cfg.l_max)
+    G = jnp.asarray(gaunt_full(cfg.l_max), jnp.float32)  # [a(Y), b(h), c(out)]
+
+    h = jnp.zeros((N, nlm, cfg.d_hidden), jnp.float32)
+    h0 = jnp.take(
+        params["species_embed"]["kernel"],
+        jnp.clip(batch["species"], 0, cfg.n_species - 1),
+        axis=0,
+    )
+    if cfg.d_feat and "node_feat" in batch:
+        h0 = h0 + batch["node_feat"].astype(jnp.float32) @ params["feat_proj"]["kernel"]
+    h = h.at[:, 0, :].set(h0)
+
+    vec, r, valid = common.edge_vectors(pos, src, dst)
+    Y = sph_harm_real(cfg.l_max, vec)  # [E, nlm]
+    rbf = common.bessel_rbf(r, cfg.n_rbf, cfg.cutoff)  # [E, n_rbf]
+    rbf = rbf * valid[:, None]  # degenerate edges carry no message
+
+    node_out = jnp.zeros((N, cfg.n_out), jnp.float32)
+    for i in range(cfg.n_layers):
+        lp = params[f"layer_{i}"]
+        # radial weights per output-l, per channel
+        R = (rbf @ lp["radial"]["kernel"]).reshape(
+            -1, cfg.l_max + 1, cfg.d_hidden
+        )  # [E, L+1, C]
+        R_lm = jnp.repeat(
+            R, np.array([2 * l + 1 for l in range(cfg.l_max + 1)]), axis=1
+        )  # [E, nlm, C]
+        hj = jnp.take(h, src, axis=0)  # [E, nlm, C]
+        # tensor product via Gaunt: m[c(out)] = G[a,b,c] Y[a] h[b]
+        msg = jnp.einsum("ea,abc,ebk->eck", Y, G, hj) * R_lm
+        A = common.aggregate(msg, dst, N, "sum")  # [N, nlm, C]
+        # ACE product basis (correlation order up to 3)
+        B2 = jnp.einsum("abc,nak,nbk->nck", G, A, A)
+        terms = (
+            _per_l_apply(lp["w_A"], cfg, A)
+            + _per_l_apply(lp["w_B2"], cfg, B2)
+        )
+        if cfg.correlation_order >= 3:
+            B3 = jnp.einsum("abc,nak,nbk->nck", G, B2, A)
+            terms = terms + _per_l_apply(lp["w_B3"], cfg, B3)
+        h = _per_l_apply(lp["w_self"], cfg, h) + terms
+        # per-layer scalar readout (MACE sums site energies per interaction)
+        node_out = node_out + jax.nn.silu(h[:, 0, :]) @ lp["readout"]["kernel"]
+
+    node_out = node_out + h[:, 0, :] @ params["readout"]["kernel"]
+    out = {"node_out": node_out}
+    if "graph_ids" in batch:
+        out["graph_out"] = jax.ops.segment_sum(
+            node_out, batch["graph_ids"], num_segments=batch["n_graphs"]
+        )
+    return out

@@ -1,0 +1,84 @@
+"""SchNet [arXiv:1706.08566] — continuous-filter convolutions.
+
+Assigned config: n_interactions=3, d_hidden=64, rbf=300, cutoff=10.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ...nn.module import boxed_param
+from ..gnn import common
+
+
+@dataclasses.dataclass(frozen=True)
+class SchNetConfig:
+    name: str = "schnet"
+    n_interactions: int = 3
+    d_hidden: int = 64
+    n_rbf: int = 300
+    cutoff: float = 10.0
+    n_species: int = 32
+    d_feat: int = 0
+    n_out: int = 1
+
+
+def init(rng, cfg: SchNetConfig):
+    rs = jax.random.split(rng, 3 + 4 * cfg.n_interactions)
+    d = cfg.d_hidden
+    params = {
+        "species_embed": {
+            "kernel": boxed_param(rs[0], (cfg.n_species, d), (None, None), scale=1.0)
+        },
+        "out1": {"kernel": boxed_param(rs[1], (d, d // 2), (None, None))},
+        "out2": {"kernel": boxed_param(rs[2], (d // 2, cfg.n_out), (None, None))},
+    }
+    if cfg.d_feat:
+        params["feat_proj"] = {
+            "kernel": boxed_param(rs[-1], (cfg.d_feat, d), ("embed", None))
+        }
+    for i in range(cfg.n_interactions):
+        r = rs[3 + 4 * i : 7 + 4 * i]
+        params[f"interaction_{i}"] = {
+            "filter1": {"kernel": boxed_param(r[0], (cfg.n_rbf, d), (None, None))},
+            "filter2": {"kernel": boxed_param(r[1], (d, d), (None, None))},
+            "in_proj": {"kernel": boxed_param(r[2], (d, d), (None, None))},
+            "out_proj": {"kernel": boxed_param(r[3], (d, d), (None, None))},
+        }
+    return params
+
+
+def apply(params, cfg: SchNetConfig, batch):
+    pos = batch["positions"]
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    N = pos.shape[0]
+    x = jnp.take(
+        params["species_embed"]["kernel"],
+        jnp.clip(batch["species"], 0, cfg.n_species - 1),
+        axis=0,
+    )
+    if cfg.d_feat and "node_feat" in batch:
+        x = x + batch["node_feat"].astype(jnp.float32) @ params["feat_proj"]["kernel"]
+    _, r, valid = common.edge_vectors(pos, src, dst)
+    rbf = common.gaussian_rbf(r, cfg.n_rbf, cfg.cutoff)  # [E, n_rbf]
+    rbf = rbf * valid[:, None]  # degenerate edges carry no message
+
+    for i in range(cfg.n_interactions):
+        lp = params[f"interaction_{i}"]
+        W = common.shifted_softplus(rbf @ lp["filter1"]["kernel"])
+        W = W @ lp["filter2"]["kernel"]  # [E, d] continuous filter
+        hj = jnp.take(x @ lp["in_proj"]["kernel"], src, axis=0)
+        msg = hj * W
+        agg = common.aggregate(msg, dst, N, "sum")
+        v = common.shifted_softplus(agg @ lp["out_proj"]["kernel"])
+        x = x + v
+    h = common.shifted_softplus(x @ params["out1"]["kernel"])
+    node_out = h @ params["out2"]["kernel"]
+    out = {"node_out": node_out}
+    if "graph_ids" in batch:
+        out["graph_out"] = jax.ops.segment_sum(
+            node_out, batch["graph_ids"], num_segments=batch["n_graphs"]
+        )
+    return out

@@ -1,0 +1,415 @@
+"""Config-driven transformer LM family (scan-over-layers + remat).
+
+Covers the five assigned LM archs through one composable definition:
+- llama-style GQA + SwiGLU (deepseek-coder-33b, minicpm-2b)
+- local/global alternating attention + logit softcaps + post-norms (gemma2-2b)
+- full MoE every layer (olmoe-1b-7b) / interleaved MoE + chunked-local
+  attention + NoPE global layers (llama4-maverick-400b)
+
+Layers are grouped by the repeating (attention-kind × moe-interleave) pattern
+and scanned with ``lax.scan`` (stacked params, one group of layers per step),
+keeping HLO size independent of depth; remat policy per config.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.attention import (
+    AttnSettings,
+    KVCache,
+    attn_init,
+    attention_scan,
+    decode_step as attn_decode,
+    init_cache as attn_init_cache,
+    prefill_kv,
+)
+from ..nn.layers import (
+    embedding_init,
+    rmsnorm,
+    rmsnorm_init,
+    softcap,
+)
+from ..nn.module import shard_activation
+from ..nn.moe import MoESettings, ffn, ffn_init, moe, moe_init
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    rope_theta: float = 1e4
+    layer_pattern: tuple = ("global",)  # cycled attention kinds
+    window: int = 4096  # for local/chunk kinds
+    attn_logit_softcap: Optional[float] = None
+    final_logit_softcap: Optional[float] = None
+    use_post_norm: bool = False  # gemma2 sandwich norms
+    qk_norm: bool = False
+    moe: Optional[MoESettings] = None
+    tie_embeddings: bool = True
+    emb_scale: Optional[float] = None
+    logit_scale: float = 1.0
+    residual_scale: float = 1.0
+    norm_eps: float = 1e-6
+    zero_centered_norm: bool = False
+    dtype: Any = jnp.float32
+    remat: str = "dots"  # none | dots | full
+    attn_chunk: int = 512
+    query_scale: Optional[float] = None
+    # cross-entropy sequence chunk: the [B, S, vocab] logits tensor is never
+    # materialized — the loss streams over S in ce_chunk slices with the
+    # unembed rematerialized in the backward pass (a 256k-vocab model at
+    # S=4096 would otherwise hold ~4 GB/device of logits alone).
+    ce_chunk: int = 512
+
+    @property
+    def vocab_padded(self) -> int:
+        return -(-self.vocab // 256) * 256
+
+    @property
+    def group_size(self) -> int:
+        p = len(self.layer_pattern)
+        m = self.moe.every if self.moe else 1
+        return p * m // math.gcd(p, m)
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % self.group_size == 0, (
+            self.n_layers, self.group_size
+        )
+        return self.n_layers // self.group_size
+
+    def layer_kind(self, i: int) -> str:
+        return self.layer_pattern[i % len(self.layer_pattern)]
+
+    def layer_is_moe(self, i: int) -> bool:
+        return self.moe is not None and (i % self.moe.every == self.moe.every - 1)
+
+    def attn_settings(self, kind: str) -> AttnSettings:
+        return AttnSettings(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            d_head=self.d_head,
+            rope_theta=self.rope_theta,
+            kind=kind,
+            window=self.window,
+            logit_softcap=self.attn_logit_softcap,
+            qk_norm=self.qk_norm,
+            chunk_q=self.attn_chunk,
+            query_scale=self.query_scale,
+        )
+
+    def active_params(self) -> int:
+        """Analytic active-parameter count (for MODEL_FLOPS = 6·N·D)."""
+        d, hd = self.d_model, self.d_head
+        attn = d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+        per_layer = attn
+        dense_ffn = 3 * d * self.d_ff
+        n_moe = sum(self.layer_is_moe(i) for i in range(self.n_layers))
+        n_dense = self.n_layers - n_moe
+        total = per_layer * self.n_layers + dense_ffn * n_dense
+        if self.moe:
+            act = 3 * d * self.moe.d_ff * (
+                self.moe.top_k + self.moe.n_shared
+            ) + d * self.moe.n_experts
+            total += act * n_moe
+        total += self.vocab * d * (1 if self.tie_embeddings else 2)
+        return total
+
+    def total_params(self) -> int:
+        d = self.d_model
+        total = self.active_params()
+        if self.moe:
+            n_moe = sum(self.layer_is_moe(i) for i in range(self.n_layers))
+            total += (
+                3 * d * self.moe.d_ff
+                * (self.moe.n_experts - self.moe.top_k)
+                * n_moe
+            )
+        return total
+
+
+# ----------------------------------------------------------------- init ----
+
+def _layer_init(rng, cfg: TransformerConfig, i: int):
+    r = jax.random.split(rng, 4)
+    kind = cfg.layer_kind(i)
+    p = {
+        "ln_attn": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "attn": attn_init(r[0], cfg.attn_settings(kind), cfg.dtype),
+        "ln_mlp": rmsnorm_init(cfg.d_model, cfg.dtype),
+    }
+    if cfg.layer_is_moe(i):
+        p["moe"] = moe_init(r[1], cfg.d_model, cfg.moe, cfg.dtype)
+    else:
+        p["mlp"] = ffn_init(r[2], cfg.d_model, cfg.d_ff, cfg.dtype)
+    if cfg.use_post_norm:
+        p["ln_attn_post"] = rmsnorm_init(cfg.d_model, cfg.dtype)
+        p["ln_mlp_post"] = rmsnorm_init(cfg.d_model, cfg.dtype)
+    return p
+
+
+def _group_init(rng, cfg: TransformerConfig):
+    rs = jax.random.split(rng, cfg.group_size)
+    return {
+        f"layer_{j}": _layer_init(rs[j], cfg, j) for j in range(cfg.group_size)
+    }
+
+
+def init(rng, cfg: TransformerConfig):
+    r_emb, r_blocks, r_head = jax.random.split(rng, 3)
+    group_rngs = jax.random.split(r_blocks, cfg.n_groups)
+    blocks = jax.vmap(lambda r: _group_init(r, cfg))(group_rngs)
+    # vmapped Boxed values gained a leading stack dim; axes stay as declared
+    # (aux data) — prepend the "stack" logical axis.
+    from ..nn.module import Boxed, is_boxed
+
+    blocks = jax.tree.map(
+        lambda b: Boxed(b.value, ("stack",) + b.axes),
+        blocks,
+        is_leaf=is_boxed,
+    )
+    params = {
+        "embed": embedding_init(
+            r_emb, cfg.vocab_padded, cfg.d_model, cfg.dtype
+        ),
+        "blocks": blocks,
+        "ln_final": rmsnorm_init(cfg.d_model, cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = embedding_init(
+            r_head, cfg.vocab_padded, cfg.d_model, cfg.dtype
+        )
+    return params
+
+
+# -------------------------------------------------------------- forward ----
+
+def _norm(cfg, p, x):
+    return rmsnorm(p, x, cfg.norm_eps, cfg.zero_centered_norm)
+
+
+def _layer_apply(lp, cfg: TransformerConfig, i: int, x, positions):
+    from jax.ad_checkpoint import checkpoint_name
+
+    kind = cfg.layer_kind(i)
+    # SP gather point AFTER the norm (EXPERIMENTS.md §Perf iteration 3):
+    # rmsnorm is per-token, so it runs on the seq-SHARDED residual; only its
+    # bf16 output crosses the wire (XLA otherwise hoists the norm's f32
+    # upcast before the gather and doubles the bytes). No-op without SP.
+    # optimization_barrier pins the norm's bf16 output cast BEFORE the
+    # gather — XLA otherwise commutes the f32 upcast past the collective
+    # and ships 2x the bytes
+    h_in = shard_activation(
+        jax.lax.optimization_barrier(_norm(cfg, lp["ln_attn"], x)),
+        ("batch", None, None),
+    )
+    h = attention_scan(lp["attn"], cfg.attn_settings(kind), h_in, positions)
+    h = checkpoint_name(h, "attn_out")
+    if cfg.use_post_norm:
+        h = _norm(cfg, lp["ln_attn_post"], h)
+    x = x + h * cfg.residual_scale
+    aux = jnp.float32(0.0)
+    m_in = shard_activation(
+        jax.lax.optimization_barrier(_norm(cfg, lp["ln_mlp"], x)),
+        ("batch", None, None),
+    )
+    if cfg.layer_is_moe(i):
+        h, aux = moe(lp["moe"], cfg.moe, m_in)
+    else:
+        h = ffn(lp["mlp"], m_in)
+    h = checkpoint_name(h, "mlp_out")
+    if cfg.use_post_norm:
+        h = _norm(cfg, lp["ln_mlp_post"], h)
+    x = x + h * cfg.residual_scale
+    x = shard_activation(x, ("batch", "res_seq", None))
+    return x, aux
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    if cfg.remat == "minimal":
+        # save only the d_model-wide layer outputs; everything wide
+        # (attention internals, 2·d_ff gate/up, expert buffers) recomputes
+        # in backward — the stacked per-scan-step saves stay O(S·d), not
+        # O(S·d_ff) (the difference is 8x for gemma2).
+        policy = jax.checkpoint_policies.save_only_these_names(
+            "attn_out", "mlp_out"
+        )
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # full
+
+
+def _embed_tokens(params, cfg, tokens):
+    x = jnp.take(params["embed"]["table"], tokens, axis=0)
+    if cfg.emb_scale is not None:
+        x = x * jnp.asarray(cfg.emb_scale, x.dtype)
+    return shard_activation(x, ("batch", "res_seq", None))
+
+
+def _unembed(params, cfg, x):
+    table = (
+        params["embed"]["table"]
+        if cfg.tie_embeddings
+        else params["unembed"]["table"]
+    )
+    logits = (x @ table.T).astype(jnp.float32) * cfg.logit_scale
+    if cfg.final_logit_softcap:
+        logits = softcap(logits, cfg.final_logit_softcap)
+    # mask vocab padding
+    if cfg.vocab_padded != cfg.vocab:
+        pad = cfg.vocab_padded - cfg.vocab
+        logits = jnp.concatenate(
+            [logits[..., : cfg.vocab],
+             jnp.full((*logits.shape[:-1], pad), -1e30, logits.dtype)],
+            axis=-1,
+        )
+    return shard_activation(logits, ("batch", None, "act_vocab"))
+
+
+def hidden_states(params, cfg: TransformerConfig, tokens, positions=None):
+    """tokens [B,S] -> (final-norm hidden [B,S,d], total aux loss)."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = _embed_tokens(params, cfg, tokens)
+
+    def group_fn(x, gp):
+        aux = jnp.float32(0.0)
+        for j in range(cfg.group_size):
+            x, a = _layer_apply(gp[f"layer_{j}"], cfg, j, x, positions)
+            aux = aux + a
+        return x, aux
+
+    body = _remat(cfg, group_fn)
+    x, auxs = jax.lax.scan(body, x, params["blocks"])
+    return _norm(cfg, params["ln_final"], x), auxs.sum()
+
+
+def forward(params, cfg: TransformerConfig, tokens, positions=None):
+    """tokens [B,S] -> logits [B,S,vocab_padded] (+ total aux loss)."""
+    x, aux = hidden_states(params, cfg, tokens, positions)
+    return _unembed(params, cfg, x), aux
+
+
+def loss_fn(params, cfg: TransformerConfig, batch):
+    """batch: {"tokens": [B,S], "labels": [B,S]} -> scalar loss.
+
+    Streamed cross-entropy: logits are computed per ce_chunk sequence slice
+    inside a rematerialized scan body, so the full [B,S,vocab] tensor never
+    exists (fwd or bwd)."""
+    x, aux = hidden_states(params, cfg, batch["tokens"])
+    B, S, d = x.shape
+    C = min(cfg.ce_chunk, S)
+    assert S % C == 0, (S, C)
+    nc = S // C
+    xs = jnp.moveaxis(x.reshape(B, nc, C, d), 1, 0)
+    ys = jnp.moveaxis(
+        batch["labels"].astype(jnp.int32).reshape(B, nc, C), 1, 0
+    )
+
+    def chunk_nll(total, xy):
+        x_c, y_c = xy
+        logits = _unembed(params, cfg, x_c)  # [B, C, vocab_padded] f32
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, y_c[..., None], axis=-1)[..., 0]
+        return total + ll.sum(), None
+
+    total, _ = jax.lax.scan(
+        jax.checkpoint(chunk_nll), jnp.float32(0.0), (xs, ys)
+    )
+    return -total / (B * S) + aux
+
+
+# --------------------------------------------------------------- serving ---
+
+def init_model_cache(
+    cfg: TransformerConfig, batch: int, max_seq: int, dtype=jnp.bfloat16
+):
+    one_group = {}
+    for j in range(cfg.group_size):
+        s = cfg.attn_settings(cfg.layer_kind(j))
+        one_group[f"layer_{j}"] = attn_init_cache(s, batch, max_seq, dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_groups, *a.shape)).copy(),
+        one_group,
+    )
+
+
+def _layer_decode(lp, cfg, i, x, cache: KVCache, pos):
+    kind = cfg.layer_kind(i)
+    h, cache = attn_decode(
+        lp["attn"], cfg.attn_settings(kind), _norm(cfg, lp["ln_attn"], x),
+        cache, pos,
+    )
+    if cfg.use_post_norm:
+        h = _norm(cfg, lp["ln_attn_post"], h)
+    x = x + h * cfg.residual_scale
+    if cfg.layer_is_moe(i):
+        h, _ = moe(lp["moe"], cfg.moe, _norm(cfg, lp["ln_mlp"], x))
+    else:
+        h = ffn(lp["mlp"], _norm(cfg, lp["ln_mlp"], x))
+    if cfg.use_post_norm:
+        h = _norm(cfg, lp["ln_mlp_post"], h)
+    return x + h * cfg.residual_scale, cache
+
+
+def decode(params, cfg: TransformerConfig, caches, tokens, pos):
+    """One decode step: tokens [B,1], pos scalar int32 ->
+    (logits [B,1,vocab_padded], new caches)."""
+    x = _embed_tokens(params, cfg, tokens)
+
+    def body(x, inputs):
+        gp, gcache = inputs
+        new_caches = {}
+        for j in range(cfg.group_size):
+            key = f"layer_{j}"
+            x, c = _layer_decode(gp[key], cfg, j, x, gcache[key], pos)
+            new_caches[key] = c
+        return x, new_caches
+
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    x = _norm(cfg, params["ln_final"], x)
+    return _unembed(params, cfg, x), new_caches
+
+
+def prefill(params, cfg: TransformerConfig, tokens, max_seq=None):
+    """Prefill: tokens [B,S] -> (last-position logits [B,vocab_padded],
+    caches ready for decode at pos=S)."""
+    B, S = tokens.shape
+    max_seq = max_seq or S
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = _embed_tokens(params, cfg, tokens)
+
+    def group_fn(x, gp):
+        caches = {}
+        for j in range(cfg.group_size):
+            key = f"layer_{j}"
+            lp = gp[key]
+            kind = cfg.layer_kind(j)
+            s = cfg.attn_settings(kind)
+            xin = _norm(cfg, lp["ln_attn"], x)
+            caches[key] = prefill_kv(lp["attn"], s, xin, positions, max_seq)
+            x, _ = _layer_apply(lp, cfg, j, x, positions)
+        return x, caches
+
+    body = _remat(cfg, group_fn)
+    x, caches = jax.lax.scan(body, x, params["blocks"])
+    x = _norm(cfg, params["ln_final"], x)
+    logits = _unembed(params, cfg, x[:, -1:, :])
+    return logits[:, 0, :], caches

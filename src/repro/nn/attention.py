@@ -1,0 +1,269 @@
+"""GQA attention: chunked-flash prefill/train, KV-cache decode.
+
+Supports the attention variants of the assigned LM archs:
+- grouped KV heads (GQA), uneven head counts handled via activation
+  sharding constraints (params keep fused divisible dims);
+- attention kinds: "global", "local" (sliding window, Gemma-2),
+  "chunk" (chunked/iRoPE-style local, Llama-4), "global_nope" (no RoPE);
+- attention logit softcapping (Gemma-2);
+- optional QK-norm (OLMoE).
+
+Train/prefill uses an online-softmax scan over KV chunks (the pure-jnp
+flash formulation; ``kernels/flash_attention`` is the Pallas TPU version of
+the same math). Decode uses a (optionally ring-buffered) KV cache with
+absolute per-slot positions, so sliding-window caches stay O(window).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, softcap
+from .module import boxed_ones, boxed_param, shard_activation
+from .rope import apply_rope
+
+NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSettings:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    rope_theta: float = 1e4
+    kind: str = "global"  # global | local | chunk | global_nope
+    window: int = 4096  # window size (local) or chunk size (chunk)
+    logit_softcap: Optional[float] = None
+    qk_norm: bool = False
+    chunk_q: int = 512  # kv-chunk for the online-softmax scan
+    query_scale: Optional[float] = None  # default 1/sqrt(d_head)
+
+
+def attn_init(rng, s: AttnSettings, dtype=jnp.float32):
+    r = jax.random.split(rng, 5)
+    d, H, KV, hd = s.d_model, s.n_heads, s.n_kv_heads, s.d_head
+    p = {
+        "wq": dense_init(r[0], d, H * hd, ("embed", "mlp"), dtype),
+        "wk": dense_init(r[1], d, KV * hd, ("embed", "mlp"), dtype),
+        "wv": dense_init(r[2], d, KV * hd, ("embed", "mlp"), dtype),
+        "wo": dense_init(r[3], H * hd, d, ("mlp", "embed"), dtype),
+    }
+    if s.qk_norm:
+        p["q_norm"] = {"scale": boxed_ones((hd,), (None,), dtype)}
+        p["k_norm"] = {"scale": boxed_ones((hd,), (None,), dtype)}
+    return p
+
+
+def _qk_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (
+        x.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * scale
+    ).astype(x.dtype)
+
+
+def _project_qkv(params, s: AttnSettings, x, positions):
+    B, S, _ = x.shape
+    H, KV, hd = s.n_heads, s.n_kv_heads, s.d_head
+    q = (x @ params["wq"]["kernel"]).reshape(B, S, H, hd)
+    k = (x @ params["wk"]["kernel"]).reshape(B, S, KV, hd)
+    v = (x @ params["wv"]["kernel"]).reshape(B, S, KV, hd)
+    if s.qk_norm:
+        q = _qk_norm(q, params["q_norm"]["scale"])
+        k = _qk_norm(k, params["k_norm"]["scale"])
+    if s.kind != "global_nope":
+        q = apply_rope(q, positions, s.rope_theta)
+        k = apply_rope(k, positions, s.rope_theta)
+    # No per-head constraints: head counts (8..56) rarely divide the TP
+    # axis (16); pinning them forces involuntary full rematerialization in
+    # GSPMD. Propagation from the fused H*hd projection picks an even joint
+    # (heads x head_dim) split instead.
+    return q, k, v
+
+
+def _mask_logits(s, qpos, kpos, logits):
+    """Apply softcap + causal/local/chunk masking.
+    qpos: [..., Sq, 1]; kpos: [..., 1, Sk] broadcastable int32."""
+    if s.logit_softcap is not None:
+        logits = softcap(logits, s.logit_softcap)
+    ok = kpos <= qpos
+    if s.kind == "local":
+        ok &= kpos > qpos - s.window
+    elif s.kind == "chunk":
+        ok &= (kpos // s.window) == (qpos // s.window)
+    ok &= kpos >= 0
+    return jnp.where(ok, logits, NEG)
+
+
+def attention_scan(params, s: AttnSettings, x, positions):
+    """Train/prefill attention: [B,S,d] -> [B,S,d], online softmax over KV
+    chunks (memory O(S·chunk) instead of O(S²))."""
+    B, S, _ = x.shape
+    H, KV, hd = s.n_heads, s.n_kv_heads, s.d_head
+    G = H // KV
+    q, k, v = _project_qkv(params, s, x, positions)
+    # Sequence-parallel attention (EXPERIMENTS.md §Perf iteration 1):
+    # queries stay seq-sharded (each device owns its q rows); keys/values
+    # gather to full sequence — k/v are GQA-small, so this moves
+    # 2·S·KV·hd bytes/layer instead of letting GSPMD replicate the full
+    # H-wide activations. No-op when the res_seq rule is off (TP mode).
+    q = shard_activation(q, ("batch", "res_seq", None, None))
+    k = shard_activation(k, ("batch", None, None, None))
+    v = shard_activation(v, ("batch", None, None, None))
+    scale = s.query_scale if s.query_scale is not None else hd ** -0.5
+    q = q.reshape(B, S, KV, G, hd) * scale
+    C = min(s.chunk_q, S)
+    nC = S // C
+    assert S % C == 0, (S, C)
+    # scan over kv chunks, carrying online-softmax state
+    ks = jnp.moveaxis(k.reshape(B, nC, C, KV, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nC, C, KV, hd), 1, 0)
+    kpos = jnp.moveaxis(positions.reshape(B, nC, C), 1, 0)
+    qpos = positions  # [B, S]
+
+    def step(carry, chunk):
+        m, l, acc = carry
+        kc, vc, kp = chunk
+        # operands stay bf16 (accumulation in f32 via preferred_element_type)
+        # — an explicit .astype(f32) here gets hoisted out of the scan by
+        # XLA and materializes EVERY kv chunk in f32 (28 GB/device on
+        # deepseek train_4k)
+        sc = jnp.einsum(
+            "bsgnd,bcgd->bsgnc",
+            q,
+            kc,
+            preferred_element_type=jnp.float32,
+        )  # [B,S,KV(g),G(n),C] — einsum dims: g=kv group, n=q-per-kv, c=chunk
+        sc = _mask_logits(
+            s,
+            qpos[:, :, None, None, None],
+            kp[:, None, None, None, :],
+            sc,
+        )
+        m_cur = sc.max(axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.exp(sc - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum(
+            "bsgnc,bcgd->bsgnd",
+            p.astype(vc.dtype),
+            vc,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, KV, G, 1), NEG, jnp.float32)
+    l0 = jnp.zeros((B, S, KV, G, 1), jnp.float32)
+    a0 = jnp.zeros((B, S, KV, G, hd), jnp.float32)
+    # flash-style backward: checkpoint the chunk step so the [S, C] logits
+    # and probabilities are RECOMPUTED per chunk in bwd instead of stacked
+    # for all chunks (28 GB/device of f32 attention matrices on deepseek
+    # train_4k otherwise)
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(step), (m0, l0, a0), (ks, vs, kpos)
+    )
+    out = (acc / jnp.maximum(l, 1e-30)).astype(x.dtype)
+    out = out.reshape(B, S, H * hd)
+    return out @ params["wo"]["kernel"]
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, W, KV, hd]
+    v: jax.Array  # [B, W, KV, hd]
+    slot_pos: jax.Array  # [W] int32 absolute position per slot (-1 empty)
+
+
+def init_cache(
+    s: AttnSettings, batch: int, max_seq: int, dtype=jnp.bfloat16
+) -> KVCache:
+    W = (
+        min(s.window, max_seq)
+        if s.kind in ("local", "chunk")
+        else max_seq
+    )
+    return KVCache(
+        k=jnp.zeros((batch, W, s.n_kv_heads, s.d_head), dtype),
+        v=jnp.zeros((batch, W, s.n_kv_heads, s.d_head), dtype),
+        slot_pos=jnp.full((W,), -1, jnp.int32),
+    )
+
+
+def cache_axes() -> KVCache:
+    """Logical axes for cache sharding (seq sharded over model for
+    flash-decoding-style distributed attention)."""
+    return KVCache(
+        k=("batch", "act_model", None, None),
+        v=("batch", "act_model", None, None),
+        slot_pos=(None,),
+    )
+
+
+def decode_step(params, s: AttnSettings, x, cache: KVCache, pos):
+    """One-token decode: x [B,1,d], pos scalar int32 -> ([B,1,d], cache)."""
+    B = x.shape[0]
+    H, KV, hd = s.n_heads, s.n_kv_heads, s.d_head
+    G = H // KV
+    W = cache.k.shape[1]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    q, k_new, v_new = _project_qkv(params, s, x, positions)
+    slot = pos % W  # ring buffer for local/chunk; plain index for global
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k_new.astype(cache.k.dtype), slot, axis=1
+    )
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v_new.astype(cache.v.dtype), slot, axis=1
+    )
+    slot_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache.slot_pos, pos[None], slot, axis=0
+    )
+    k = shard_activation(k, ("batch", "act_model", None, None))
+    v = shard_activation(v, ("batch", "act_model", None, None))
+    scale = s.query_scale if s.query_scale is not None else hd ** -0.5
+    qg = q.reshape(B, KV, G, hd) * scale
+    logits = jnp.einsum(
+        "bgnd,bwgd->bgnw",
+        qg.astype(k.dtype),
+        k,
+        preferred_element_type=jnp.float32,
+    )  # [B, KV, G, W] — bf16 operands, f32 accumulation (no f32 cache copy)
+    logits = _mask_logits(
+        s, pos.astype(jnp.int32), slot_pos[None, None, None, :], logits
+    )
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bgnw,bwgd->bgnd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    out = out.reshape(B, 1, H * hd).astype(x.dtype)
+    return out @ params["wo"]["kernel"], KVCache(k=k, v=v, slot_pos=slot_pos)
+
+
+def prefill_kv(params, s: AttnSettings, x, positions, max_seq):
+    """Compute the cache that decode_step expects after a prefill of length S
+    (global kinds: slots 0..S-1; local/chunk kinds: last W positions)."""
+    B, S, _ = x.shape
+    _, k, v = _project_qkv(params, s, x, positions)
+    cache = init_cache(s, B, max_seq, dtype=k.dtype)
+    W = cache.k.shape[1]
+    if W >= S:
+        k_pad = jnp.pad(k, ((0, 0), (0, W - S), (0, 0), (0, 0)))
+        v_pad = jnp.pad(v, ((0, 0), (0, W - S), (0, 0), (0, 0)))
+        sp = jnp.pad(
+            positions[0], (0, W - S), constant_values=-1
+        )
+        return KVCache(k=k_pad, v=v_pad, slot_pos=sp)
+    # ring layout: slot = pos % W for the last W tokens
+    last_k = k[:, S - W :, :, :]
+    last_v = v[:, S - W :, :, :]
+    last_pos = positions[0, S - W :]
+    slots = last_pos % W
+    order = jnp.argsort(slots)
+    return KVCache(
+        k=jnp.take(last_k, order, axis=1),
+        v=jnp.take(last_v, order, axis=1),
+        slot_pos=jnp.take(last_pos, order),
+    )

@@ -1,0 +1,63 @@
+"""Basic layers: Dense, Embedding, RMSNorm, LayerNorm."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .module import Boxed, boxed_ones, boxed_param
+
+
+def dense_init(rng, d_in, d_out, axes=("embed", "mlp"), dtype=jnp.float32,
+               scale=None):
+    return {"kernel": boxed_param(rng, (d_in, d_out), axes, dtype, scale)}
+
+
+def dense(params, x):
+    return x @ params["kernel"]
+
+
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"scale": boxed_ones((d,), ("embed",), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6, zero_centered=False):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    scale = params["scale"].astype(jnp.float32)
+    if zero_centered:  # gemma-style (1 + scale)
+        scale = 1.0 + scale
+    return (y * scale).astype(x.dtype)
+
+
+def layernorm_init(d, dtype=jnp.float32):
+    return {
+        "scale": boxed_ones((d,), ("embed",), dtype),
+        "bias": Boxed(jnp.zeros((d,), dtype), ("embed",)),
+    }
+
+
+def layernorm(params, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = jnp.square(xf - mu).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(x.dtype)
+
+
+def embedding_init(rng, vocab, d, dtype=jnp.float32, scale=1.0):
+    return {
+        "table": boxed_param(rng, (vocab, d), ("vocab", "embed"), dtype, scale)
+    }
+
+
+def embed(params, ids):
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def unembed(params, x):
+    """Tied unembedding: logits over vocab."""
+    return x @ params["table"].T
+
+
+def softcap(x, cap):
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,167 @@
+"""Minimal functional module system (flax is not available offline).
+
+Every layer is an (init, apply) pair. ``init`` returns a nested dict whose
+leaves are ``Boxed(value, logical_axes)``; ``split_boxed`` separates the value
+tree from the logical-axes tree. Logical axes map to mesh axes through
+``sharding_rules`` (MaxText-style), giving PartitionSpec trees for
+``jit(in_shardings=...)`` and activation constraints.
+
+Logical axes:
+  embed   — d_model dims                → FSDP axes ("data" / ("pod","data"))
+  mlp     — ffn / fused head dims       → TP axis ("model",)
+  vocab   — vocabulary                  → TP axis ("model",)
+  experts — MoE expert dim              → EP axis ("model",)
+  heads/kv/layers/stack/... — unsharded param dims
+Activations:
+  batch   — ("data",) or ("pod","data")
+  act_seq — None by default; ("model",) under sequence parallelism
+  act_model — ("model",)
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class Boxed:
+    """A param leaf tagged with logical axis names. Registered as a pytree
+    node with ``axes`` as static aux data, so Boxed trees pass through
+    jax.eval_shape / jit (the dry-run inits models abstractly)."""
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        return f"Boxed({self.value!r}, axes={self.axes})"
+
+
+jax.tree_util.register_pytree_node(
+    Boxed,
+    lambda b: ((b.value,), b.axes),
+    lambda axes, children: Boxed(children[0], axes),
+)
+
+
+def is_boxed(x) -> bool:
+    return isinstance(x, Boxed)
+
+
+def split_boxed(tree):
+    params = jax.tree.map(lambda b: b.value, tree, is_leaf=is_boxed)
+    axes = jax.tree.map(lambda b: b.axes, tree, is_leaf=is_boxed)
+    return params, axes
+
+
+def sharding_rules(multi_pod: bool = False, seq_parallel: bool = False) -> dict:
+    """seq_parallel (Megatron-SP style): the residual stream BETWEEN layers
+    (logical axis ``res_seq``) is sharded over the model axis along sequence,
+    so scan carries saved for backward shrink by the TP degree. Layer
+    interiors keep TP feature sharding (``act_model``); GSPMD turns the
+    boundary reshards into the standard SP all-gather/reduce-scatter pair
+    (same wire volume as the TP all-reduce it replaces)."""
+    fsdp = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "embed": fsdp,
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "experts": ("model",),
+        "heads": (),
+        "kv": (),
+        "head_dim": (),
+        "stack": (),
+        "batch": fsdp,
+        "act_seq": (),
+        "act_model": ("model",),
+        "act_vocab": ("model",),  # logits vocab dim — always TP
+        "res_seq": ("model",) if seq_parallel else (),
+        "seq_shard": fsdp + ("model",),  # long-context KV sharding
+        "edges": fsdp + ("model",),  # GNN edge-parallel message tensors
+        "edges_dp": fsdp,  # edge dim when channels claim "model"
+        None: (),
+    }
+
+
+def logical_to_spec(axes: tuple, rules: dict) -> P:
+    parts = []
+    for a in axes:
+        mesh_axes = rules.get(a, ())
+        if not mesh_axes:
+            parts.append(None)
+        elif len(mesh_axes) == 1:
+            parts.append(mesh_axes[0])
+        else:
+            parts.append(tuple(mesh_axes))
+    return P(*parts)
+
+
+def specs_from_axes(axes_tree, rules: dict):
+    return jax.tree.map(
+        lambda axes: logical_to_spec(axes, rules),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def shardings_from_axes(axes_tree, mesh: Mesh, rules: dict):
+    specs = specs_from_axes(axes_tree, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+_ACTIVATION_RULES: dict | None = None
+
+
+def set_activation_rules(rules: dict | None):
+    """Install the logical->mesh rules used by shard_activation. None disables
+    constraints (single-device smoke tests)."""
+    global _ACTIVATION_RULES
+    _ACTIVATION_RULES = rules
+
+
+def shard_activation(x: jax.Array, axes: tuple) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op when rules unset).
+    Uneven dims are fine here — GSPMD pads internally."""
+    if _ACTIVATION_RULES is None:
+        return x
+    spec = logical_to_spec(axes, _ACTIVATION_RULES)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# --------------------------------------------------------------- inits -----
+
+def normal_init(rng, shape, dtype, scale: float):
+    return (scale * jax.random.normal(rng, shape)).astype(dtype)
+
+
+def boxed_param(
+    rng, shape, axes, dtype=jnp.float32, scale: float | None = None
+) -> Boxed:
+    if scale is None:
+        fan_in = shape[0] if len(shape) > 1 else shape[0]
+        scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return Boxed(normal_init(rng, shape, dtype, scale), axes)
+
+
+def boxed_zeros(shape, axes, dtype=jnp.float32) -> Boxed:
+    return Boxed(jnp.zeros(shape, dtype), axes)
+
+
+def boxed_ones(shape, axes, dtype=jnp.float32) -> Boxed:
+    return Boxed(jnp.ones(shape, dtype), axes)
+
+
+def abstract_init(init_fn, *args):
+    """Run an init function abstractly: returns the Boxed tree with
+    ShapeDtypeStruct values (dry-run: no allocation, any model size)."""
+    return jax.eval_shape(init_fn, *args)
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(v.shape)) for v in jax.tree.leaves(params))

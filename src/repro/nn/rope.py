@@ -1,0 +1,27 @@
+"""Rotary position embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_frequencies(d_head: int, theta: float = 1e4) -> jax.Array:
+    half = d_head // 2
+    return 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+
+
+def apply_rope(
+    x: jax.Array,  # [..., S, H, D]
+    positions: jax.Array,  # [..., S] int32
+    theta: float = 1e4,
+) -> jax.Array:
+    D = x.shape[-1]
+    freqs = rope_frequencies(D, theta)  # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

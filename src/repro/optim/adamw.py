@@ -1,0 +1,89 @@
+"""AdamW with dtype-controlled moments (optax is not available offline).
+
+Moments can be held in bf16 (with fp32 math) to halve optimizer HBM — the
+lever that lets llama4-maverick-400b fit a 256-chip pod (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4  # peak; scaled by the schedule
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: Any = jnp.float32
+    clip_norm: float | None = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any  # pytree like params
+    nu: Any
+
+
+def adamw_init(params, cfg: AdamWConfig) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree)
+        )
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    grads, state: AdamWState, params, cfg: AdamWConfig, lr_scale=1.0
+):
+    """Returns (new_params, new_state, grad_norm)."""
+    norm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        grads, _ = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu32 = mu.astype(jnp.float32) * b1 + g32 * (1 - b1)
+        nu32 = nu.astype(jnp.float32) * b2 + jnp.square(g32) * (1 - b2)
+        mhat = mu32 / c1
+        vhat = nu32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (
+            (p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+            mu32.astype(cfg.moment_dtype),
+            nu32.astype(cfg.moment_dtype),
+        )
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = treedef.unflatten([l[0] for l in leaves])
+    new_mu = treedef.unflatten([l[1] for l in leaves])
+    new_nu = treedef.unflatten([l[2] for l in leaves])
+    return new_p, AdamWState(step=step, mu=new_mu, nu=new_nu), norm

@@ -1,0 +1,43 @@
+"""LR schedules: cosine and WSD (Warmup-Stable-Decay, MiniCPM arXiv:2404.06395).
+
+Each returns lr_scale(step) in [0, 1] multiplying the optimizer's peak lr.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(warmup: int, total: int, min_ratio: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup, 1)
+        t = (step - warmup) / jnp.maximum(total - warmup, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+
+    return f
+
+
+def wsd_schedule(
+    warmup: int, total: int, decay_frac: float = 0.1, min_ratio: float = 0.01
+):
+    """Warmup -> stable plateau at 1.0 -> sharp decay over the last
+    ``decay_frac`` of training (MiniCPM's schedule: enables continual
+    pretraining from the stable phase)."""
+    decay_start = int(total * (1 - decay_frac))
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup, 1)
+        t = (step - decay_start) / jnp.maximum(total - decay_start, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        # exponential-style decay (MiniCPM uses ~exp decay to 10% then cut)
+        decay = min_ratio ** t
+        out = jnp.where(step < warmup, warm, 1.0)
+        return jnp.where(step >= decay_start, decay, out)
+
+    return f
+
+
+SCHEDULES = {"cosine": cosine_schedule, "wsd": wsd_schedule}

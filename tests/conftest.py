@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run alone forces 512); keep any
+# inherited XLA_FLAGS from leaking a device-count override into tests.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.dirname(__file__))  # proptest/oracle importable

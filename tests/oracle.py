@@ -1,0 +1,49 @@
+"""Pure-numpy oracles for the recursive query engine."""
+from __future__ import annotations
+
+import collections
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+
+def bfs_levels(csr: CSRGraph, sources) -> np.ndarray:
+    levels = np.full(csr.n_nodes, -1, dtype=np.int32)
+    q = collections.deque()
+    for s in np.atleast_1d(sources):
+        s = int(s)
+        if 0 <= s < csr.n_nodes and levels[s] < 0:
+            levels[s] = 0
+            q.append(s)
+    while q:
+        u = q.popleft()
+        for v in csr.neighbors(u):
+            v = int(v)
+            if levels[v] < 0:
+                levels[v] = levels[u] + 1
+                q.append(v)
+    return levels
+
+
+def sssp(csr: CSRGraph, sources) -> np.ndarray:
+    """Bellman-Ford distances (weights required)."""
+    import heapq
+
+    assert csr.weights is not None
+    dist = np.full(csr.n_nodes, np.inf, dtype=np.float64)
+    heap = []
+    for s in np.atleast_1d(sources):
+        dist[int(s)] = 0.0
+        heapq.heappush(heap, (0.0, int(s)))
+    while heap:
+        d, u = heapq.heappop(heap)
+        if d > dist[u]:
+            continue
+        lo, hi = csr.indptr[u], csr.indptr[u + 1]
+        for v, w in zip(csr.indices[lo:hi], csr.weights[lo:hi]):
+            nd = d + float(w)
+            if nd < dist[int(v)] - 1e-12:
+                dist[int(v)] = nd
+                heapq.heappush(heap, (nd, int(v)))
+    return dist

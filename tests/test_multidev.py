@@ -1,0 +1,120 @@
+"""Multi-device (8 fake CPU devices) parity for collectives + policies.
+
+Runs in a subprocess because XLA device count is locked at first jax init —
+the main test process must keep seeing exactly 1 device.
+"""
+import os
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.collectives import or_allreduce, ring_or_u32
+from repro.core import (run_recursive_query, policy_1t1s, policy_nt1s,
+                        policy_ntks, policy_ntkms)
+from repro.graph.generators import powerlaw
+import collections
+
+def bfs_levels(csr, sources):
+    levels = np.full(csr.n_nodes, -1, dtype=np.int32)
+    q = collections.deque()
+    for s in np.atleast_1d(sources):
+        s = int(s)
+        if levels[s] < 0:
+            levels[s] = 0; q.append(s)
+    while q:
+        u = q.popleft()
+        for v in csr.neighbors(u):
+            if levels[int(v)] < 0:
+                levels[int(v)] = levels[u] + 1; q.append(int(v))
+    return levels
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+
+# --- collective parity: every or_allreduce impl must agree -----------------
+rng = np.random.default_rng(0)
+x = (rng.random((8, 1000)) < 0.2)
+def run(impl):
+    def f(xs):
+        return or_allreduce(xs[0], ("data", "model"), impl)[None]
+    sm = jax.shard_map(f, mesh=mesh, in_specs=P(("data","model"), None),
+                       out_specs=P(("data","model"), None), check_vma=False)
+    return np.asarray(jax.jit(sm)(jnp.asarray(x)))
+ref = np.broadcast_to(x.any(axis=0), (8, 1000))
+for impl in ("pmax", "allgather", "ring"):
+    got = run(impl) != 0
+    assert (got == ref).all(), f"or_allreduce[{impl}] mismatch"
+print("collectives OK")
+
+# --- ring on uint32 over one axis ------------------------------------------
+xu = rng.integers(0, 2**32, size=(8, 37), dtype=np.uint32)
+def fu(xs):
+    return ring_or_u32(xs[0], "model")[None]
+sm = jax.shard_map(fu, mesh=mesh, in_specs=P(("data","model"), None),
+                   out_specs=P(("data","model"), None), check_vma=False)
+got = np.asarray(jax.jit(sm)(jnp.asarray(xu)))
+expect = np.zeros_like(xu)
+for d in range(2):
+    grp = xu[d*4:(d+1)*4]
+    r = np.bitwise_or.reduce(grp, axis=0)
+    expect[d*4:(d+1)*4] = r
+assert (got == expect).all(), "ring_or_u32 mismatch"
+print("ring_or_u32 OK")
+
+# --- policy parity on a real 2x4 mesh ---------------------------------------
+csr = powerlaw(300, 5.0, seed=1)
+sources = np.array([0, 3, 17, 44, 123, 200, 250, 280, 5, 9], dtype=np.int32)
+expected = np.stack([bfs_levels(csr, [s]) for s in sources])
+for pol in (policy_1t1s(), policy_nt1s(or_impl="ring"),
+            policy_ntks(or_impl="allgather"), policy_ntks(or_impl="ring"),
+            policy_ntks(or_impl="pmax")):
+    res = run_recursive_query(mesh, csr, sources, pol, "sp_lengths")
+    got = np.asarray(res.state.levels)[: len(sources), : csr.n_nodes]
+    assert (got == expected).all(), f"policy {pol.name}/{pol.or_impl} mismatch"
+print("policies OK")
+
+# nTkMS on multi-device with 70 sources -> 2 morsels over data axis
+srcs70 = np.arange(70, dtype=np.int32) * 4 % csr.n_nodes
+res = run_recursive_query(mesh, csr, srcs70, policy_ntkms(or_impl="ring"),
+                          "msbfs_lengths")
+lanes = np.asarray(res.state.levels)  # [2, n_pad, 64]
+for i, s in enumerate(srcs70):
+    m, l = divmod(i, 64)
+    got = lanes[m, : csr.n_nodes, l].astype(np.int32)
+    got[got == 255] = -1
+    exp = bfs_levels(csr, [s])
+    assert (got == exp).all(), f"ntkms lane {i} mismatch"
+print("ntkms OK")
+
+# Bellman-Ford merge=min across shards
+res = run_recursive_query(mesh, csr, np.array([7], np.int32),
+                          policy_ntks(), "bellman_ford")
+dist = np.asarray(res.state.dist)[0, : csr.n_nodes]
+lv = bfs_levels(csr, [7]).astype(np.float64)
+lv[lv < 0] = np.inf
+assert np.allclose(dist, lv), "bellman-ford (unit weights) != bfs levels"
+print("bellman OK")
+print("ALL_MULTIDEV_OK")
+"""
+
+
+def test_multidev_subprocess():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=900,
+        env=env,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    assert "ALL_MULTIDEV_OK" in r.stdout

@@ -1,0 +1,134 @@
+"""Policy dispatcher correctness on a 1x1 mesh (degenerate but full code path)
+plus policy-equivalence invariants. Real multi-device parity is covered by
+test_multidev.py (subprocess with forced host device count)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from oracle import bfs_levels
+from proptest import given, st_ints, st_seeds
+
+from repro.graph.generators import erdos_renyi, powerlaw
+from repro.core import (
+    run_recursive_query,
+    policy_1t1s,
+    policy_nt1s,
+    policy_ntks,
+    policy_ntkms,
+    recommend_policy,
+    recommend_k,
+)
+
+
+def mesh11():
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def _levels(res):
+    return np.asarray(res.state.levels)
+
+
+def test_all_policies_agree_with_oracle():
+    csr = erdos_renyi(96, 4.0, seed=4)
+    mesh = mesh11()
+    sources = np.array([0, 7, 23], dtype=np.int32)
+    expected = np.stack([bfs_levels(csr, [s]) for s in sources])
+
+    for pol in (policy_1t1s(), policy_nt1s(), policy_ntks()):
+        res = run_recursive_query(mesh, csr, sources, pol, "sp_lengths")
+        got = _levels(res)[: len(sources), : csr.n_nodes]
+        np.testing.assert_array_equal(got, expected, err_msg=pol.name)
+
+    # nTkMS: one 64-lane morsel, first 3 lanes are our sources
+    res = run_recursive_query(
+        mesh, csr, sources, policy_ntkms(), "msbfs_lengths"
+    )
+    lanes = _levels(res)  # [n_morsels, n_pad, 64] uint8
+    got = np.transpose(lanes[0, : csr.n_nodes, :3], (1, 0)).astype(np.int32)
+    got[got == 255] = -1
+    np.testing.assert_array_equal(got, expected)
+
+
+@given(st_seeds(), st_ints(32, 160), st_ints(1, 12))
+def test_prop_policy_equivalence(seed, n, n_sources):
+    csr = powerlaw(n, 4.0, seed=seed)
+    mesh = mesh11()
+    rng = np.random.default_rng(seed)
+    sources = rng.integers(0, csr.n_nodes, size=n_sources).astype(np.int32)
+    ref = None
+    for pol in (policy_1t1s(), policy_ntks(or_impl="ring")):
+        res = run_recursive_query(mesh, csr, sources, pol, "sp_lengths")
+        got = _levels(res)[: len(sources), : csr.n_nodes]
+        if ref is None:
+            ref = got
+        else:
+            np.testing.assert_array_equal(got, ref)
+
+
+def test_ntkms_empty_lanes_are_inert():
+    csr = erdos_renyi(80, 3.0, seed=6)
+    mesh = mesh11()
+    res = run_recursive_query(
+        mesh, csr, np.array([5], dtype=np.int32), policy_ntkms(), "msbfs_lengths"
+    )
+    lanes = _levels(res)[0]  # [n_pad, 64]
+    # lanes 1..63 were padded -> never reach anything
+    assert (lanes[:, 1:] == 255).all()
+    got = lanes[: csr.n_nodes, 0].astype(np.int32)
+    got[got == 255] = -1
+    np.testing.assert_array_equal(got, bfs_levels(csr, [5]))
+
+
+def test_parents_policy_invariant():
+    from repro.core.ife import validate_parents
+
+    csr = erdos_renyi(120, 4.0, seed=8)
+    mesh = mesh11()
+    src = np.array([11], dtype=np.int32)
+    for pol in (policy_1t1s(), policy_ntks()):
+        res = run_recursive_query(mesh, csr, src, pol, "sp_parents")
+        st = jax.tree.map(lambda x: x[0], res.state)
+        assert bool(
+            validate_parents(
+                st.levels[: csr.n_nodes],
+                st.parents[: csr.n_nodes],
+                jnp.asarray(src),
+            )
+        ), pol.name
+
+
+def test_recommendations():
+    assert recommend_policy(1, 32, 40.0) == "ntks"
+    assert recommend_policy(8, 32, 40.0) == "ntks"
+    assert recommend_policy(128, 32, 40.0) == "ntkms"
+    # path outputs with huge graph: fall back (paper §5.6 OOM finding)
+    assert (
+        recommend_policy(
+            256, 32, 35.0, returns_paths=True, n_nodes=120_000_000
+        )
+        == "ntks"
+    )
+    assert recommend_k(44.0) == 32
+    assert recommend_k(535.0) == 4
+    assert recommend_k(250.0) == 8
+
+
+def test_block_extend_matches_ell():
+    from repro.graph.csr import ell_from_csr, blocks_from_csr
+    from repro.graph.partition import pad_ell
+    from repro.core.msbfs import block_extend_lanes
+    from repro.core.edge_compute import ell_reach_lanes
+    from repro.core.frontier import lanes_from_sources
+
+    csr = erdos_renyi(200, 5.0, seed=10)
+    block = 64
+    n_pad = -(-csr.n_nodes // block) * block
+    g = pad_ell(ell_from_csr(csr), shards=1, block=block)
+    adj = blocks_from_csr(csr, block=block)
+    lanes = lanes_from_sources(n_pad, jnp.arange(64, dtype=jnp.int32) * 3)
+    ref = ell_reach_lanes(g, lanes)
+    got = block_extend_lanes(adj, lanes)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))

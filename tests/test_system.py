@@ -1,0 +1,277 @@
+"""System-level tests: sharded-state engine, dst-aligned slab aggregation,
+query serving end-to-end, the dry-run cell builder, elastic checkpoints,
+and the fault-tolerant train driver."""
+import collections
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+def _bfs(csr, s):
+    lv = np.full(csr.n_nodes, -1, np.int32)
+    lv[s] = 0
+    q = collections.deque([s])
+    while q:
+        u = q.popleft()
+        for v in csr.neighbors(u):
+            if lv[int(v)] < 0:
+                lv[int(v)] = lv[u] + 1
+                q.append(int(v))
+    return lv
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parser (pure string-level unit test)
+# ---------------------------------------------------------------------------
+
+def test_hlo_collective_parser():
+    from repro.launch.hlo_analysis import parse_collectives, roofline_terms
+
+    hlo = """
+  %ag = f32[16,1024]{1,0} all-gather(f32[1,1024] %x), replica_groups=[32,16]<=[512], dimensions={0}
+  %ar = bf16[128]{0} all-reduce(bf16[128] %y), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %cp = u32[64]{0} collective-permute(u32[64] %z), source_target_pairs={{0,1}}
+  %rs = f32[8]{0} reduce-scatter(f32[128] %w), replica_groups=[32,16]<=[512], dimensions={0}
+"""
+    st = parse_collectives(hlo)
+    assert st.counts["all-gather"] == 1
+    assert st.counts["all-reduce"] == 1
+    assert st.counts["collective-permute"] == 1
+    assert st.counts["reduce-scatter"] == 1
+    assert st.out_bytes["all-gather"] == 16 * 1024 * 4
+    assert st.out_bytes["all-reduce"] == 128 * 2
+    # ring factors: AG (K-1)/K x out, AR 2(K-1)/K, RS (K-1) x out, CP 1x
+    assert abs(st.wire_bytes["all-gather"] - 15 / 16 * 16 * 1024 * 4) < 1
+    assert abs(st.wire_bytes["all-reduce"] - 2 * 3 / 4 * 256) < 1
+    assert st.wire_bytes["collective-permute"] == 64 * 4
+    assert abs(st.wire_bytes["reduce-scatter"] - 15 * 32) < 1
+
+    rl = roofline_terms(
+        {"flops": 1e12, "bytes accessed": 1e9}, st, 256, 2.56e14,
+        iters_scale=2.0,
+    )
+    assert rl.flops == 2e12
+    assert rl.dominant in ("compute", "memory", "collective")
+    assert 0 < rl.useful_fraction < 1
+
+
+# ---------------------------------------------------------------------------
+# dst-aligned slab aggregation == flat aggregation (all GNN models)
+# ---------------------------------------------------------------------------
+
+def test_slab_aggregation_matches_flat():
+    import dataclasses
+
+    from repro.graph.partition import slab_edges
+    from repro.models.gnn import common as C
+    from repro.models.gnn import equiformer_v2 as eqv2_m
+    from repro.models.gnn import pna as pna_m
+    from repro.models.gnn import schnet as schnet_m
+    from repro.nn.module import split_boxed
+    from repro.configs.equiformer_v2 import smoke_config as eqv2_smoke
+    from repro.configs.pna import smoke_config as pna_smoke
+    from repro.configs.schnet import smoke_config as schnet_smoke
+
+    rng = np.random.default_rng(0)
+    n, e, K = 32, 120, 4
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    batch = {
+        "edge_src": jnp.asarray(src),
+        "edge_dst": jnp.asarray(dst),
+        "node_feat": jnp.asarray(rng.standard_normal((n, 16)), jnp.float32),
+        "positions": jnp.asarray(
+            rng.standard_normal((n, 3)) * 2, jnp.float32
+        ),
+        "species": jnp.asarray(rng.integers(0, 8, n), jnp.int32),
+    }
+    ssrc, sdst = slab_edges(src, dst, n, K)
+    assert len(ssrc) % K == 0
+    batch_slab = dict(
+        batch, edge_src=jnp.asarray(ssrc), edge_dst=jnp.asarray(sdst)
+    )
+    for name, (mod, smoke) in {
+        "pna": (pna_m, pna_smoke),
+        "schnet": (schnet_m, schnet_smoke),
+        "eqv2": (eqv2_m, eqv2_smoke),
+    }.items():
+        cfg = smoke()
+        if name != "pna":
+            cfg = dataclasses.replace(cfg, d_feat=16)
+        params, _ = split_boxed(mod.init(jax.random.PRNGKey(0), cfg))
+        C.set_edge_slabs(None)
+        out_flat = mod.apply(params, cfg, batch)["node_out"]
+        try:
+            C.set_edge_slabs(K)
+            out_slab = mod.apply(params, cfg, batch_slab)["node_out"]
+        finally:
+            C.set_edge_slabs(None)
+        np.testing.assert_allclose(
+            np.asarray(out_flat), np.asarray(out_slab),
+            rtol=2e-5, atol=2e-5, err_msg=name,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Query serving end-to-end (engine reuse + policy recommendation + outputs)
+# ---------------------------------------------------------------------------
+
+def test_query_service_end_to_end():
+    from repro.graph.generators import powerlaw, pick_sources
+    from repro.launch.serve import QueryService
+
+    csr = powerlaw(400, 6.0, seed=5)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    svc = QueryService(mesh, csr, max_iters=64)
+
+    srcs = pick_sources(csr, 4, seed=1)
+    res, pol = svc.query(srcs, returns_paths=False)
+    assert pol == "ntks"  # < 64 sources -> hybrid (paper §5 recommendation)
+    got = np.asarray(res.state.levels)[: len(srcs), : csr.n_nodes]
+    for i, s in enumerate(srcs):
+        np.testing.assert_array_equal(got[i], _bfs(csr, int(s)))
+
+    # engine reuse: same (policy, ec) key must not recompile
+    n_engines = len(svc._engines)
+    svc.query(pick_sources(csr, 4, seed=2), returns_paths=False)
+    assert len(svc._engines) == n_engines
+
+    # >= 64 sources -> lane-packed multi-source morsels
+    srcs64 = pick_sources(csr, 64, seed=3)
+    res, pol = svc.query(srcs64, returns_paths=False)
+    assert pol == "ntkms"
+    lanes = np.asarray(res.state.levels)[0, : csr.n_nodes, :]
+    lv = lanes[:, 7].astype(np.int32)
+    lv[lv == 255] = -1
+    np.testing.assert_array_equal(lv, _bfs(csr, int(srcs64[7])))
+
+    # paths workload routes to the parents edge compute
+    res, pol = svc.query(srcs, returns_paths=True)
+    assert np.asarray(res.state.parents).shape[-1] >= csr.n_nodes
+
+
+# ---------------------------------------------------------------------------
+# multi-device system paths (subprocess: needs its own XLA device count)
+# ---------------------------------------------------------------------------
+
+SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+import collections
+
+from repro.core import run_recursive_query, policy_ntks, policy_ntkms
+from repro.graph.generators import powerlaw
+
+def bfs(csr, s):
+    lv = np.full(csr.n_nodes, -1, np.int32); lv[s] = 0
+    q = collections.deque([s])
+    while q:
+        u = q.popleft()
+        for v in csr.neighbors(u):
+            if lv[int(v)] < 0: lv[int(v)] = lv[u]+1; q.append(int(v))
+    return lv
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+csr = powerlaw(300, 5.0, seed=1)
+srcs = np.array([0, 3, 17, 44, 123, 200, 250, 280], np.int32)
+exp = np.stack([bfs(csr, int(s)) for s in srcs])
+
+# 1. sharded-state engine == replicated-state engine == oracle
+for layout in ("replicated", "sharded"):
+    for impl in ("ring", "allgather"):
+        r = run_recursive_query(mesh, csr, srcs, policy_ntks(or_impl=impl),
+                                "sp_lengths", state_layout=layout)
+        got = np.asarray(r.state.levels)[: len(srcs), : csr.n_nodes]
+        assert (got == exp).all(), (layout, impl)
+print("engine layouts OK")
+
+# 2. sharded-state msbfs lanes
+r = run_recursive_query(mesh, csr, srcs, policy_ntkms(or_impl="ring"),
+                        "msbfs_lengths", state_layout="sharded")
+lanes = np.asarray(r.state.levels)[0, : csr.n_nodes]
+for i, s in enumerate(srcs):
+    got = lanes[:, i].astype(np.int32); got[got == 255] = -1
+    assert (got == exp[i]).all(), i
+print("sharded msbfs OK")
+
+# 3. elastic checkpoint: save under (2,4) sharding, restore under (4,2)
+from repro.checkpoint.checkpoint import CheckpointManager
+import tempfile
+d = tempfile.mkdtemp()
+ck = CheckpointManager(d, async_write=False)
+x = jax.device_put(np.arange(64, dtype=np.float32).reshape(8, 8),
+                   NamedSharding(mesh, P("data", "model")))
+state = {"w": x, "step": jnp.int32(7)}
+ck.save(3, state, blocking=True)
+mesh2 = jax.make_mesh((4, 2), ("data", "model"),
+                      axis_types=(jax.sharding.AxisType.Auto,)*2)
+sh2 = {"w": NamedSharding(mesh2, P("model", "data")),
+       "step": NamedSharding(mesh2, P())}
+restored, step = ck.restore(state, shardings=sh2)
+assert step == 3
+assert (np.asarray(restored["w"]) == np.asarray(x)).all()
+assert restored["w"].sharding.mesh.shape["data"] == 4
+print("elastic checkpoint OK")
+
+# 4. dry-run cell builder: paper engine on this 8-device mesh
+from repro.launch.steps import build_cell, lower_cell
+from repro.launch.hlo_analysis import parse_collectives
+cell = build_cell("paper-bfs-engine", "ldbc100", mesh, False)
+lowered = lower_cell(cell, mesh)
+compiled = lowered.compile()
+cost = compiled.cost_analysis()
+cost = cost[0] if isinstance(cost, list) else cost
+assert cost.get("flops", 0) > 0
+st = parse_collectives(compiled.as_text())
+assert sum(st.counts.values()) > 0, "graph-partitioned engine must communicate"
+print("cell builder OK")
+print("ALL_SYSTEM_OK")
+"""
+
+
+def test_multidevice_system_subprocess():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", SUBPROC],
+        capture_output=True, text=True, timeout=900, env=env,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    assert "ALL_SYSTEM_OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant train driver end-to-end (tiny; includes resume)
+# ---------------------------------------------------------------------------
+
+def test_train_driver_resumes(tmp_path):
+    from repro.launch.train import main
+
+    rc = main([
+        "--arch", "minicpm-2b", "--steps", "30", "--batch", "4",
+        "--seq", "32", "--ckpt-dir", str(tmp_path), "--save-every", "10",
+        "--log-every", "100",
+    ])
+    assert rc == 0
+    assert (tmp_path / "step_30").exists()
+    # crash-restart: second invocation resumes from 30 and continues
+    rc = main([
+        "--arch", "minicpm-2b", "--steps", "40", "--batch", "4",
+        "--seq", "32", "--ckpt-dir", str(tmp_path), "--save-every", "10",
+        "--log-every", "100",
+    ])
+    assert rc == 0
+    assert (tmp_path / "step_40").exists()
