@@ -1,0 +1,136 @@
+"""Static nTkS vs adaptive two-phase hybrid on a skewed source set.
+
+The adversarial workload for static source-morsel dispatch (paper §5.4):
+most sources sit in a small-diameter powerlaw component and converge in a
+few IFE iterations, while one source starts at the head of a long path
+component and needs ~diameter iterations. Static nTkS reduces its
+convergence check over source AND graph axes, so every source shard's
+while_loop for a given morsel slot spins until the slowest shard's morsel
+in that slot finishes — almost all of it inert. The adaptive runtime runs
+phase 1 with per-shard convergence under a learned iteration budget, then
+re-dispatches only the path morsel under nT1S frontier parallelism (ring
+frontier union) with every device cooperating.
+
+Runs on 8 forced host devices, mesh (4, 2): 4 source shards × 2 graph
+shards, so the static waste is real (4 shards × inert slot iterations).
+Standalone on purpose (NOT in benchmarks/run.py): it must force its own
+XLA device count before first jax init, which would leak into sibling
+suites in a shared process.
+
+    PYTHONPATH=src python benchmarks/hybrid_adaptive.py
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
+)
+
+import numpy as np
+
+import common
+
+
+def skewed_graph(n_pl: int = 400, path_len: int = 96, seed: int = 0):
+    """Powerlaw component (small diameter) + a path component (diameter ≈
+    path_len) in one CSR. Returns (csr, powerlaw_sources, path_head)."""
+    from repro.graph.csr import csr_from_edges
+    from repro.graph.generators import powerlaw
+
+    pl = powerlaw(n_pl, 5.0, seed=seed)
+    src_pl, dst_pl = pl.edge_list()
+    p = np.arange(path_len - 1, dtype=np.int32) + n_pl
+    src = np.concatenate([src_pl, p, p + 1])
+    dst = np.concatenate([dst_pl, p + 1, p])
+    csr = csr_from_edges(n_pl + path_len, src, dst)
+    rng = np.random.default_rng(seed + 1)
+    pl_sources = rng.integers(0, n_pl, 7).astype(np.int32)
+    return csr, pl_sources, np.int32(n_pl)
+
+
+def main() -> int:
+    import jax
+
+    from repro.core import (
+        build_engine,
+        pad_sources,
+        policy_ntks,
+        prepare_graph,
+    )
+    from repro.core.dispatcher import _axes_size
+    from repro.launch.mesh import make_mesh
+    from repro.runtime.scheduler import AdaptiveScheduler
+
+    if jax.device_count() >= 8:
+        mesh = make_mesh((4, 2), ("data", "model"))
+    else:  # degraded single-device fallback (no inert spins to recover)
+        mesh = make_mesh((1, jax.device_count()), ("data", "model"))
+    csr, pl_sources, path_src = skewed_graph()
+    # the path source shares a morsel SLOT with powerlaw sources on the
+    # other shards: its slot spins every shard under static global sync
+    sources = np.concatenate([pl_sources, [path_src]]).astype(np.int32)
+    max_iters = 128
+
+    print(
+        f"skewed workload: {csr.n_nodes} nodes ({len(pl_sources)} powerlaw "
+        f"sources + 1 path source, path diameter ~96), mesh {dict(mesh.shape)}"
+    )
+
+    # --- static nTkS: one engine, globally-synchronized convergence --------
+    pol = policy_ntks()
+    g, n_pad = prepare_graph(csr, mesh, pol, pad_shards=mesh.size)
+    eng = build_engine(mesh, pol, "sp_lengths", n_pad, max_iters)
+    morsels = jax.numpy.asarray(
+        pad_sources(sources, _axes_size(mesh, pol.source_axes), 1, n_pad)
+    )
+    static_res = jax.block_until_ready(eng(g, morsels))
+    static_iters = np.asarray(static_res.iterations)[: len(sources)]
+    static_us = common.time_fn(lambda: eng(g, morsels))
+
+    # --- adaptive hybrid: warm it on the easy sources, then hit the skew ---
+    sched = AdaptiveScheduler(mesh, csr, max_iters=max_iters)
+    for _ in range(3):  # learn the phase-1 budget from easy batches
+        sched.query(pl_sources)
+    sched.query(sources)  # compile the skewed-batch shapes once
+    out = sched.query(sources)
+    adaptive_iters = np.asarray(out.result.iterations)[: len(sources)]
+    # freeze the budget for the timed reps: otherwise the skewed batches
+    # feed the learner mid-measurement and later reps time a different
+    # (bigger-budget, no-phase-2) configuration than the one reported
+    sched.phase1_iters = out.phase1_budget
+    adaptive_us = common.time_fn(lambda: sched.query(sources).result)
+
+    lv_s = np.asarray(static_res.state.levels)[: len(sources), : csr.n_nodes]
+    lv_a = np.asarray(out.result.state.levels)[: len(sources), : csr.n_nodes]
+    assert (lv_s == lv_a).all(), "hybrid result != static result"
+
+    # iteration-slots: static reports each morsel's while trip count, which
+    # under global sync is the max over its slot's source-shard group (inert
+    # spins included); adaptive reports each morsel's own convergence point
+    slots_static = int(static_iters.sum())
+    slots_adaptive = int(adaptive_iters.sum())
+    print(f"per-morsel iterations (static)  : {static_iters}")
+    print(f"per-morsel iterations (adaptive): {adaptive_iters}")
+    print(
+        f"phase-1 budget {out.phase1_budget}, re-dispatched "
+        f"{out.redispatched} morsel(s); phase latencies "
+        f"p1 {out.phase_ms['phase1']:.1f} ms / "
+        f"p2 {out.phase_ms['phase2']:.1f} ms"
+    )
+    common.emit("hybrid_adaptive.static_ntks", static_us,
+                f"iter_slots={slots_static}")
+    common.emit("hybrid_adaptive.adaptive", adaptive_us,
+                f"iter_slots={slots_adaptive}")
+    speedup = static_us / max(adaptive_us, 1e-9)
+    print(
+        f"iteration-slots: static {slots_static} vs adaptive "
+        f"{slots_adaptive} ({slots_static / max(slots_adaptive, 1):.1f}x "
+        f"fewer); wall: {static_us:.0f} us vs {adaptive_us:.0f} us "
+        f"({speedup:.2f}x)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

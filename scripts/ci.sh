@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 CI runner with a wall-clock budget and a fast/full marker split.
+#
+#   scripts/ci.sh          # fast lane: -m "not slow" (skips subprocess /
+#                          # multi-device / train-driver tests; ~3 min on
+#                          # the 1-core reference box)
+#   scripts/ci.sh --full   # the whole tier-1 suite (~6 min)
+#
+# CI_BUDGET_SECONDS caps the run (default 1800); a hung XLA compile or
+# subprocess fails the lane instead of wedging the pipeline.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+BUDGET="${CI_BUDGET_SECONDS:-1800}"
+
+if [[ "${1:-}" == "--full" ]]; then
+  exec timeout --signal=INT "$BUDGET" python -m pytest -x -q
+else
+  exec timeout --signal=INT "$BUDGET" python -m pytest -x -q -m "not slow"
+fi

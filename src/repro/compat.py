@@ -1,0 +1,67 @@
+"""jax version-compatibility shims.
+
+Supported jax range: 0.4.35 — 0.8.x. The repo targets the newest API
+surface (top-level ``jax.shard_map``, ``lax.axis_size``, explicit mesh
+``axis_types``) but must also run on the 0.4.3x line, where those names
+do not exist yet. Every version-dependent spelling lives here so the
+rest of the codebase imports one stable name:
+
+- ``shard_map(f, mesh, in_specs, out_specs)`` — top-level ``jax.shard_map``
+  (>= 0.8, kwarg ``check_vma``) or ``jax.experimental.shard_map.shard_map``
+  (0.4.x, kwarg ``check_rep``). Replication checking is disabled in both
+  spellings: the IFE engines produce group-replicated outputs that the
+  checker cannot prove.
+- ``axis_size(name)`` — ``lax.axis_size`` where available, else the
+  portable ``lax.psum(1, name)`` (static int for a literal operand).
+- ``mesh_context(mesh)`` — ``jax.set_mesh`` (>= 0.7) /
+  ``jax.sharding.use_mesh`` (0.5-0.6) / the Mesh object's own context
+  manager (0.4.x): the ambient-mesh scope for jit lowering.
+
+Mesh construction compat (``axis_types``) lives in ``repro.launch.mesh``
+next to the production mesh builders.
+"""
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+try:  # jax >= 0.8 top-level
+    from jax import shard_map as _shard_map_new
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map_new(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+except ImportError:  # pragma: no cover - exercised on jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map_old(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False,
+        )
+
+
+if hasattr(lax, "axis_size"):
+
+    def axis_size(name) -> int:
+        """Static size of one named mesh axis inside shard_map/pmap."""
+        return lax.axis_size(name)
+
+else:  # jax 0.4.x: psum of a Python literal binds statically
+
+    def axis_size(name) -> int:
+        """Static size of one named mesh axis inside shard_map/pmap."""
+        return lax.psum(1, name)
+
+
+def mesh_context(mesh):
+    """Ambient-mesh scope: ``with mesh_context(mesh): jf.lower(...)``."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    return mesh  # 0.4.x: Mesh itself is the context manager

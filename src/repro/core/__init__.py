@@ -16,16 +16,23 @@ from .policies import (
     policy_nt1s,
     policy_ntks,
     policy_ntkms,
+    hybrid_phases,
     recommend_policy,
     recommend_k,
 )
 from .dispatcher import (
     QueryEngine,
     build_engine,
+    build_resume_engine,
     run_recursive_query,
     prepare_graph,
     pad_sources,
 )
-from .collectives import or_allreduce, min_allreduce, ring_or_u32
+from .collectives import (
+    REDISPATCH_OR_IMPL,
+    or_allreduce,
+    min_allreduce,
+    ring_or_u32,
+)
 from .msbfs import block_extend_lanes, block_extend_dense
 from . import frontier

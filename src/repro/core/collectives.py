@@ -22,7 +22,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from ..compat import axis_size
+
 PACK = 32
+
+#: Frontier-union impl for the hybrid's re-dispatch phase. Phase 2 runs nT1S
+#: with the graph over ALL mesh axes, so the union spans the largest K in the
+#: system — where ring's 2·(K−1)/K·N/8 wire bytes beat allgather's (K−1)·N/8
+#: by ~2× and pmax's unpacked lanes by ~8×. Phase-1/static engines keep their
+#: policy's own ``or_impl`` (allgather is the paper-faithful baseline).
+REDISPATCH_OR_IMPL = "ring"
 
 
 def _pack_bits(x: jax.Array) -> jax.Array:
@@ -51,14 +60,14 @@ def _axis_size(axis_names) -> int:
         axis_names = (axis_names,)
     s = 1
     for a in axis_names:
-        s *= lax.axis_size(a)
+        s *= axis_size(a)
     return s
 
 
 def ring_or_u32(x: jax.Array, axis_name: str) -> jax.Array:
     """Bitwise-OR all-reduce of a uint32 array over one mesh axis via
     ring reduce-scatter + ring all-gather (ppermute)."""
-    K = lax.axis_size(axis_name)
+    K = axis_size(axis_name)
     if K == 1:
         return x
     d = lax.axis_index(axis_name)
@@ -135,7 +144,7 @@ def ring_reduce_scatter(x: jax.Array, axis_name: str, op) -> jax.Array:
     """Generic ring reduce-scatter over one mesh axis: x (flat, length
     divisible by K) -> this device's fully-reduced chunk [n/K].
     ``op(a, b)`` combines chunks (e.g. bitwise_or, minimum)."""
-    K = lax.axis_size(axis_name)
+    K = axis_size(axis_name)
     flat = x.reshape(-1)
     if K == 1:
         return flat
@@ -177,7 +186,7 @@ def or_reduce_scatter(x: jax.Array, axis_names, impl: str = "ring") -> jax.Array
         rows = x.shape[0] // _axis_size(axis_names)
         idx = jnp.int32(0)
         for a in axis_names:
-            idx = idx * lax.axis_size(a) + lax.axis_index(a)
+            idx = idx * axis_size(a) + lax.axis_index(a)
         return lax.dynamic_slice_in_dim(full, idx * rows, rows, axis=0)
     # ring on packed bits, sequentially over axes (major axis first)
     flat = (x != 0).reshape(1, -1)

@@ -8,6 +8,18 @@ partition, and each device runs the IFE while_loop over its local morsels
 grabbing the next). Collectives run only over the graph axes, so source groups
 iterate independently — divergent per-morsel trip counts across source shards
 are safe by construction.
+
+Two engine flavors realize the paper's *hybrid* policy at runtime (§5.4,
+driven by ``repro.runtime.scheduler``):
+
+- ``build_engine(..., sync="shard")`` — phase 1: nTkS where the convergence
+  check reduces over the graph axes only, so a source-shard group whose
+  morsels have all converged exits its while_loop immediately instead of
+  burning inert iterations until the globally slowest morsel finishes.
+- ``build_resume_engine`` — phase 2: surviving (unconverged) morsels are
+  re-dispatched with their saved state under nT1S frontier parallelism:
+  every device cooperates on one morsel's frontier at a time, picking up
+  at the iteration counter where phase 1 stopped.
 """
 from __future__ import annotations
 
@@ -22,29 +34,13 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import axis_size, shard_map
 from ..graph.csr import CSRGraph, EllGraph, ell_from_csr
 from ..graph.partition import pad_ell
 from .collectives import merge_contribution, merge_scatter
 from .edge_compute import EDGE_COMPUTES
 from .ife import IFEResult
 from .policies import MorselPolicy
-
-try:  # jax >= 0.8 top-level
-    from jax import shard_map as _shard_map
-
-    def shard_map(f, mesh, in_specs, out_specs):
-        return _shard_map(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=False,
-        )
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map_old
-
-    def shard_map(f, mesh, in_specs, out_specs):
-        return _shard_map_old(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_rep=False,
-        )
 
 
 def _axes_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
@@ -56,7 +52,7 @@ def _flat_axis_index(axes: tuple[str, ...]):
     matching how PartitionSpec((a0, a1)) tiles a dimension)."""
     idx = jnp.int32(0)
     for a in axes:
-        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+        idx = idx * axis_size(a) + lax.axis_index(a)
     return idx
 
 
@@ -85,8 +81,10 @@ class QueryEngine:
     max_iters: int
     fn: Any  # jitted shard_map program
 
-    def __call__(self, graph: EllGraph, source_morsels: jax.Array) -> IFEResult:
-        return self.fn(graph, source_morsels)
+    def __call__(self, graph: EllGraph, *args) -> IFEResult:
+        """Static/phase-1 engines: ``engine(graph, source_morsels)``.
+        Resume engines: ``engine(graph, state0, it0)``."""
+        return self.fn(graph, *args)
 
 
 def build_engine(
@@ -96,6 +94,7 @@ def build_engine(
     n_nodes_padded: int,
     max_iters: int | None = None,
     state_layout: str = "replicated",
+    sync: str = "global",
 ) -> QueryEngine:
     """``state_layout``:
 
@@ -107,6 +106,20 @@ def build_engine(
       OR/MIN *reduce-scatter* (half the wire bytes of allgather+fold, and
       per-device state drops from O(n) to O(n/K) — what lets Graph500-28
       scale MS-BFS morsels fit a 16 GB chip).
+
+    ``sync``:
+
+    - "global" — the loop condition (the paper's checkIfFrontierFinished
+      pipeline break) is reduced over source AND graph axes: every device
+      runs the same trip count; source shards whose morsels converged early
+      burn inert iterations (empty frontier => no-op) until the slowest
+      morsel finishes.
+    - "shard" — the condition is reduced over the graph axes only. Each
+      source-shard group exits as soon as ITS morsels converge; collectives
+      inside the body only span a group's graph shards, so divergent trip
+      counts across source groups are deadlock-free. This is phase 1 of the
+      adaptive hybrid: the saved inert iterations are handed to
+      ``build_resume_engine`` instead of wasted.
     """
     ec = EDGE_COMPUTES[edge_compute]
     ga = policy.graph_axes
@@ -114,13 +127,14 @@ def build_engine(
     cap = int(max_iters if max_iters is not None else n_nodes_padded)
     n = n_nodes_padded
     sharded = state_layout == "sharded" and bool(ga)
-    # When the body contains collectives (graph partitioned), every device must
-    # execute them the same number of times: the loop condition is the paper's
-    # checkIfFrontierFinished pipeline break, globally reduced. Devices whose
-    # morsel converged early run inert iterations (empty frontier => no-op)
-    # until the slowest source group finishes — the SPMD analogue of nTkS
-    # keeping threads busy on other sources' denser frontiers.
-    sync_axes = tuple(sa) + tuple(ga) if ga else ()
+    if sync not in ("global", "shard"):
+        raise ValueError(f"unknown sync mode: {sync}")
+    if not ga:
+        sync_axes = ()
+    elif sync == "global":
+        sync_axes = tuple(sa) + tuple(ga)
+    else:
+        sync_axes = tuple(ga)
 
     def worker(g_shard: EllGraph, sources_local: jax.Array):
         rows_local = g_shard.indices.shape[0]
@@ -209,15 +223,113 @@ def build_engine(
     )
 
 
+def build_resume_engine(
+    mesh: Mesh,
+    policy: MorselPolicy,
+    edge_compute: str,
+    n_nodes_padded: int,
+    max_iters: int | None = None,
+) -> QueryEngine:
+    """Phase-2 (re-dispatch) engine of the adaptive hybrid.
+
+    Takes morsels *mid-flight*: instead of source ids it consumes a stacked
+    replicated state pytree (leaves ``[m, n_pad, ...]``) plus per-morsel
+    iteration counters ``it0 [m]``, and continues each morsel's IFE loop from
+    ``it0`` under ``policy``'s (typically nT1S: graph over ALL mesh axes)
+    frontier parallelism. Because BFS-style edge computes are deterministic
+    functions of (state, iteration), resuming is bit-identical to having run
+    the whole query under one engine. Morsels whose frontier is already
+    empty are inert (zero-trip while_loop), so callers may pad the morsel
+    batch freely to stabilize trace shapes.
+
+    The returned engine's ``fn`` signature is ``fn(graph, state0, it0)``.
+    """
+    ec = EDGE_COMPUTES[edge_compute]
+    ga = policy.graph_axes
+    sa = policy.source_axes
+    if sa:
+        raise ValueError(
+            "resume engine re-dispatches under frontier parallelism; "
+            f"policy must not shard sources (got source_axes={sa})"
+        )
+    cap = int(max_iters if max_iters is not None else n_nodes_padded)
+    sync_axes = tuple(ga)
+
+    def worker(g_shard: EllGraph, state0, it0):
+        rows_local = g_shard.indices.shape[0]
+        offset = _flat_axis_index(ga) * rows_local if ga else None
+
+        def one_morsel(args):
+            state_m, it_m = args
+
+            def cond(carry):
+                state, it = carry
+                active = jnp.any(state.frontier != 0)
+                if sync_axes:
+                    active = (
+                        lax.psum(active.astype(jnp.int32), sync_axes) > 0
+                    )
+                return active & (it < cap)
+
+            def body(carry):
+                state, it = carry
+                contribution = ec.local_extend(g_shard, state, offset)
+                merged = merge_contribution(
+                    ec.MERGE, contribution, ga, policy.or_impl
+                )
+                return ec.apply(state, merged, it), it + 1
+
+            state, iters = lax.while_loop(cond, body, (state_m, it_m))
+            return IFEResult(state=state, iterations=iters)
+
+        return lax.map(one_morsel, (state0, it0))
+
+    g_specs = EllGraph(
+        indices=P(ga if ga else None, None),
+        degrees=P(ga if ga else None),
+        weights=None,
+    )
+    # state/it0 replicated in, outputs replicated (post-merge state is
+    # identical on every device of the graph group)
+    fn = jax.jit(
+        shard_map(
+            worker,
+            mesh,
+            in_specs=(g_specs, P(), P()),
+            out_specs=IFEResult(state=P(), iterations=P()),
+        )
+    )
+    return QueryEngine(
+        mesh=mesh,
+        policy=policy,
+        edge_compute=edge_compute,
+        n_nodes_padded=n_nodes_padded,
+        max_iters=cap,
+        fn=fn,
+    )
+
+
 def prepare_graph(
-    csr: CSRGraph, mesh: Mesh, policy: MorselPolicy, max_deg: int | None = None
+    csr: CSRGraph,
+    mesh: Mesh,
+    policy: MorselPolicy,
+    max_deg: int | None = None,
+    pad_shards: int | None = None,
 ) -> tuple[EllGraph, int]:
     """Host-side: CSR → padded, device-placed ELL for this policy's mesh.
 
     Rows pad to a multiple of shards×32 so the sharded-state engine's
-    bit-packed ring reduce-scatter stays word-aligned per shard."""
+    bit-packed ring reduce-scatter stays word-aligned per shard.
+
+    ``pad_shards``: pad rows for this many shards (lcm'd with the policy's
+    own shard count) instead of the policy's alone. The adaptive scheduler
+    passes ``mesh.size`` so the phase-1 (nTkS, graph over a subset of axes)
+    and phase-2 (nT1S, graph over all axes) graphs share one ``n_pad`` and
+    state arrays can flow between the two engines unchanged."""
     g = ell_from_csr(csr, max_deg=max_deg)
     shards = _axes_size(mesh, policy.graph_axes)
+    if pad_shards is not None:
+        shards = int(np.lcm(shards, int(pad_shards)))
     g = pad_ell(g, shards, block=32)
     ga = policy.graph_axes
     sharding = NamedSharding(mesh, P(ga if ga else None, None))

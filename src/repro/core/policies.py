@@ -14,11 +14,20 @@ mesh ``("data", "model")`` of 16×16:
 the hybrid is the default; lane packing turns on only when sources saturate
 the 64-wide lanes; high average degree caps effective k (cache/HBM locality,
 paper §5.5 + Fig 13).
+
+``hybrid_phases`` returns the two policies the *adaptive* hybrid runtime
+(repro.runtime.scheduler) executes in sequence: phase 1 issues source-level
+morsels (nTkS, per-shard convergence), phase 2 re-dispatches the surviving
+morsels as frontier-level morsels (nT1S over every mesh axis) — the paper's
+"morsels at both the source node and frontier levels", realized at runtime
+instead of as a static mesh assignment.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Sequence
+
+from .collectives import REDISPATCH_OR_IMPL
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +80,32 @@ POLICIES = {
     "ntks": policy_ntks,
     "ntkms": policy_ntkms,
 }
+
+
+def hybrid_phases(
+    source_axes: Sequence[str] = ("data",),
+    graph_axes: Sequence[str] = ("model",),
+    lanes: int = 1,
+    or_impl: str = "allgather",
+) -> tuple[MorselPolicy, MorselPolicy]:
+    """The adaptive hybrid's (phase-1, phase-2) policy pair.
+
+    Phase 1: nTkS (or nTkMS when ``lanes`` > 1) with the caller's
+    ``or_impl`` — source morsels over ``source_axes``, graph over
+    ``graph_axes``. Phase 2: nT1S over BOTH axis groups with the ring
+    frontier union (collectives.REDISPATCH_OR_IMPL): all devices gang up
+    on each surviving morsel's frontier.
+    """
+    p1 = MorselPolicy(
+        "nTkMS" if lanes > 1 else "nTkS",
+        tuple(source_axes), tuple(graph_axes),
+        lanes=lanes, or_impl=or_impl,
+    )
+    p2 = MorselPolicy(
+        "nT1S", (), tuple(source_axes) + tuple(graph_axes),
+        lanes=lanes, or_impl=REDISPATCH_OR_IMPL,
+    )
+    return p1, p2
 
 
 def recommend_policy(

@@ -1,11 +1,14 @@
 """Recursive-query serving driver — the paper-kind end-to-end example.
 
-A resident query service: the graph is loaded and ELL-partitioned once,
-engines are compiled per (policy × edge-compute) and reused across request
-batches (the paper's IFETask with a warm buffer pool). Each request batch
-is a set of source nodes + an output kind (lengths histogram or actual
-paths); the dispatcher picks the policy by the paper's robustness rule
-(``recommend_policy``) unless pinned.
+A resident query service backed by the adaptive morsel runtime
+(repro.runtime.scheduler): the graph is loaded and ELL-partitioned once,
+engines are compiled per (kind × policy × edge-compute) into a shared cache
+and reused across request batches, and each batch executes as the paper's
+hybrid — phase 1 issues source-level morsels with per-shard convergence,
+phase 2 re-dispatches stragglers at the frontier level — with the policy
+picked per batch by the paper's robustness rule (``recommend_policy``)
+unless pinned. The driver reports per-phase latency percentiles so the
+hybrid's split is observable in serving terms.
 
     PYTHONPATH=src python -m repro.launch.serve --dataset ldbc \
         --batches 20 --sources-per-batch 8
@@ -18,73 +21,45 @@ import time
 import jax
 import numpy as np
 
-from ..core import (
-    POLICIES,
-    build_engine,
-    histogram_lengths,
-    pad_sources,
-    prepare_graph,
-    recommend_policy,
-    reconstruct_paths,
-)
-from ..core.dispatcher import _axes_size
+from ..core import histogram_lengths, reconstruct_paths
 from ..graph.generators import PAPER_DATASETS, pick_sources
+from ..runtime.scheduler import AdaptiveScheduler
+from .mesh import make_mesh
 
 
 class QueryService:
-    """Compile-once, serve-many recursive query engine pool."""
+    """Compile-once, serve-many recursive query engine pool.
 
-    def __init__(self, mesh, csr, max_deg=None, max_iters=64):
+    Thin façade over AdaptiveScheduler kept for API stability: ``query``
+    returns ``(IFEResult, policy_name)`` like the original static service,
+    while the scheduler underneath decides static vs two-phase execution.
+    """
+
+    def __init__(self, mesh, csr, max_deg=None, max_iters=64, adaptive=True):
         self.mesh = mesh
         self.csr = csr
         self.max_iters = max_iters
-        self._graphs = {}  # policy graph axes -> (EllGraph, n_pad)
-        self._engines = {}  # (policy name, or_impl, ec, layout) -> engine
         self.max_deg = max_deg
+        self.scheduler = AdaptiveScheduler(
+            mesh, csr, max_deg=max_deg, max_iters=max_iters,
+            adaptive=adaptive,
+        )
+        self.last_outcome = None  # per-phase latency of the last query
 
-    def _graph_for(self, policy):
-        key = policy.graph_axes
-        if key not in self._graphs:
-            self._graphs[key] = prepare_graph(
-                self.csr, self.mesh, policy, self.max_deg
-            )
-        return self._graphs[key]
-
-    def _engine_for(self, policy, edge_compute, n_pad, layout):
-        key = (policy.name, policy.or_impl, edge_compute, layout)
-        if key not in self._engines:
-            self._engines[key] = build_engine(
-                self.mesh, policy, edge_compute, n_pad, self.max_iters,
-                state_layout=layout,
-            )
-        return self._engines[key]
+    @property
+    def _engines(self):
+        """Engine-cache view (kept for callers/tests counting compiles)."""
+        return self.scheduler.cache._engines
 
     def query(self, sources, returns_paths=False, policy=None,
               state_layout="replicated"):
         """One request batch -> (result state, policy used)."""
-        n_sources = len(sources)
-        name = policy or recommend_policy(
-            n_sources,
-            self.mesh.size,
-            self.csr.avg_degree,
-            returns_paths=returns_paths,
-            n_nodes=self.csr.n_nodes,
+        out = self.scheduler.query(
+            sources, returns_paths=returns_paths, policy=policy,
+            state_layout=state_layout,
         )
-        pol = POLICIES[name]()
-        if pol.is_multi_source:
-            ec = "msbfs_parents" if returns_paths else "msbfs_lengths"
-        else:
-            ec = "sp_parents" if returns_paths else "sp_lengths"
-        g, n_pad = self._graph_for(pol)
-        engine = self._engine_for(pol, ec, n_pad, state_layout)
-        morsels = pad_sources(
-            np.asarray(sources, np.int32),
-            _axes_size(self.mesh, pol.source_axes),
-            pol.lanes,
-            n_pad,
-        )
-        res = engine(g, jax.numpy.asarray(morsels))
-        return res, name
+        self.last_outcome = out
+        return out.result, out.policy
 
 
 def main(argv=None) -> int:
@@ -98,21 +73,21 @@ def main(argv=None) -> int:
                     help="return actual paths (parents), not lengths")
     ap.add_argument("--policy", default=None,
                     choices=(None, "1t1s", "nt1s", "ntks", "ntkms"))
+    ap.add_argument("--static", action="store_true",
+                    help="disable the adaptive hybrid (static dispatch)")
     args = ap.parse_args(argv)
 
     csr = PAPER_DATASETS[args.dataset](args.scale)
-    mesh = jax.make_mesh(
-        (1, jax.device_count()), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
-    svc = QueryService(mesh, csr)
+    mesh = make_mesh((1, jax.device_count()), ("data", "model"))
+    svc = QueryService(mesh, csr, adaptive=not args.static)
     print(
         f"serving {args.dataset} proxy: {csr.n_nodes} nodes, "
         f"{csr.n_edges} edges, avg degree {csr.avg_degree:.0f}"
     )
 
     rng = np.random.default_rng(0)
-    lat, used = [], {}
+    lat, p1_ms, p2_ms, used = [], [], [], {}
+    redispatched = 0
     for b in range(args.batches):
         sources = pick_sources(
             csr, args.sources_per_batch, seed=100 + b
@@ -132,15 +107,34 @@ def main(argv=None) -> int:
         dt = (time.perf_counter() - t0) * 1e3
         lat.append(dt)
         used[pol] = used.get(pol, 0) + 1
+        out = svc.last_outcome
+        p1_ms.append(out.phase_ms["phase1"])
+        p2_ms.append(out.phase_ms["phase2"])
+        redispatched += out.redispatched
         if b < 3 or b == args.batches - 1:
+            phase = (
+                f"p1 {out.phase_ms['phase1']:7.1f} ms"
+                f" p2 {out.phase_ms['phase2']:7.1f} ms"
+                if out.hybrid else "static"
+            )
             print(f"batch {b:3d}: {len(sources)} sources -> {pol:6s} "
-                  f"{dt:8.1f} ms")
-    lat = np.asarray(lat)
+                  f"{dt:8.1f} ms  [{phase}]")
+    lat, p1_ms, p2_ms = map(np.asarray, (lat, p1_ms, p2_ms))
+    cache = svc.scheduler.cache
     print(
         f"served {args.batches} batches: policies {used}; "
         f"p50 {np.percentile(lat, 50):.1f} ms, "
         f"p99 {np.percentile(lat, 99):.1f} ms "
         f"(first batch includes compile)"
+    )
+    print(
+        f"phase1 p50/p99 {np.percentile(p1_ms, 50):.1f}/"
+        f"{np.percentile(p1_ms, 99):.1f} ms; "
+        f"phase2 p50/p99 {np.percentile(p2_ms, 50):.1f}/"
+        f"{np.percentile(p2_ms, 99):.1f} ms; "
+        f"{redispatched} morsels re-dispatched; "
+        f"engine cache {len(cache)} compiled, "
+        f"{cache.hits} hits / {cache.misses} misses"
     )
     return 0
 

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import mesh_context
 from ..configs import base as cfgbase
 from ..core.dispatcher import build_engine, pad_sources, _axes_size
 from ..core.policies import POLICIES
@@ -836,5 +837,5 @@ def lower_cell(cell: Cell, mesh: Mesh):
             donate_argnums=cell.donate,
             **kw,
         )
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         return jf.lower(*cell.args)

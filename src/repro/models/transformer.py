@@ -38,6 +38,26 @@ from ..nn.module import shard_activation
 from ..nn.moe import MoESettings, ffn, ffn_init, moe, moe_init
 
 
+@jax.custom_jvp
+def grad_safe_barrier(x):
+    """``lax.optimization_barrier`` that is transparent to autodiff.
+
+    jax 0.4.x has no differentiation rule for ``optimization_barrier``
+    (NotImplementedError under grad-of-scan-of-remat); newer jax added one.
+    A custom_jvp identity passthrough makes the barrier version-independent:
+    the primal keeps the scheduling barrier, tangents/cotangents flow
+    through unbarriered (the barrier has no numeric effect, so derivatives
+    are exactly the identity).
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+@grad_safe_barrier.defjvp
+def _grad_safe_barrier_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return grad_safe_barrier(x), t
+
+
 @dataclasses.dataclass(frozen=True)
 class TransformerConfig:
     name: str
@@ -212,7 +232,7 @@ def _layer_apply(lp, cfg: TransformerConfig, i: int, x, positions):
     # gather — XLA otherwise commutes the f32 upcast past the collective
     # and ships 2x the bytes
     h_in = shard_activation(
-        jax.lax.optimization_barrier(_norm(cfg, lp["ln_attn"], x)),
+        grad_safe_barrier(_norm(cfg, lp["ln_attn"], x)),
         ("batch", None, None),
     )
     h = attention_scan(lp["attn"], cfg.attn_settings(kind), h_in, positions)
@@ -222,7 +242,7 @@ def _layer_apply(lp, cfg: TransformerConfig, i: int, x, positions):
     x = x + h * cfg.residual_scale
     aux = jnp.float32(0.0)
     m_in = shard_activation(
-        jax.lax.optimization_barrier(_norm(cfg, lp["ln_mlp"], x)),
+        grad_safe_barrier(_norm(cfg, lp["ln_mlp"], x)),
         ("batch", None, None),
     )
     if cfg.layer_is_moe(i):

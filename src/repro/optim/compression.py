@@ -13,6 +13,8 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..compat import axis_size
+
 
 class CompressionState(NamedTuple):
     residual: Any  # pytree like grads (fp32 residuals)
@@ -68,7 +70,7 @@ def compressed_psum(grads, state: CompressionState, axis_name: str):
     """End-to-end compressed DP all-reduce inside shard_map: quantize,
     psum int8 payloads (as int32), dequantize with the psum'd scale."""
     qs, scales, state = compress_grads(grads, state)
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     summed = jax.tree.map(
         lambda q: jax.lax.psum(q.astype(jnp.int32), axis_name), qs
     )

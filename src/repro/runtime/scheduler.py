@@ -1,0 +1,439 @@
+"""Adaptive morsel runtime: compiled-engine cache + dynamic hybrid dispatch
++ multi-tenant admission (paper §5.4/§5.6, realized at runtime).
+
+The static dispatcher (core/dispatcher.py) encodes one morsel policy as one
+mesh-axis assignment: robust, but a converged source shard burns inert
+iterations until the globally slowest morsel finishes, and every caller pays
+a fresh trace for every (policy, shape) combination. This module is the
+serving layer that fixes both:
+
+1. **Engine cache** — compiled ``QueryEngine``s keyed by (engine kind,
+   policy, edge compute, padded graph shape, iteration cap, state layout).
+   Serving never re-traces a combination it has seen; hit/miss counters make
+   the warm/cold split observable.
+
+2. **Dynamic hybrid dispatch** — the paper's hybrid policy ("issue morsels
+   at both the source node and frontier levels") as a two-phase schedule:
+
+   - *Phase 1* runs nTkS with per-shard convergence (``sync="shard"``) under
+     an adaptive iteration budget learned from recent batches: source-shard
+     groups whose morsels converge exit immediately.
+   - *Phase 2* re-dispatches the surviving (unconverged) morsels with their
+     saved state under nT1S frontier parallelism over ALL mesh axes (ring
+     frontier union — collectives.REDISPATCH_OR_IMPL), so the stragglers
+     get every device instead of idling most of them.
+
+   Both graphs are padded to one shared row count (``prepare_graph
+   pad_shards=mesh.size``) so state flows between phases unchanged, making
+   the hybrid bit-identical in final state to a single-phase nTkS run.
+
+3. **Multi-tenant admission** — ``submit``/``flush`` pack queries from many
+   callers into 64-wide MS-BFS lane morsels only when ``recommend_policy``
+   says packing wins (enough sources to saturate lanes); otherwise each
+   query runs under the hybrid. ``recommend_k`` caps in-flight source
+   morsels per shard on dense graphs (paper Fig 13's locality cliff).
+
+Supported jax range: 0.4.35 — 0.8.x (see repro.compat / repro.launch.mesh).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import (
+    POLICIES,
+    IFEResult,
+    MorselPolicy,
+    build_engine,
+    build_resume_engine,
+    hybrid_phases,
+    pad_sources,
+    prepare_graph,
+    recommend_k,
+    recommend_policy,
+)
+from ..core.dispatcher import _axes_size
+from ..graph.csr import CSRGraph
+
+
+def _pow2ceil(x: int) -> int:
+    return 1 if x <= 1 else 1 << (int(x) - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineKey:
+    """Cache identity of one compiled engine. ``kind`` distinguishes the
+    static single-phase program, the per-shard-sync phase-1 program, and
+    the state-resuming phase-2 program — same policy tuple, different HLO."""
+
+    kind: str  # "static" | "phase1" | "resume"
+    policy: MorselPolicy
+    edge_compute: str
+    n_nodes_padded: int
+    max_iters: int
+    state_layout: str
+
+
+class EngineCache:
+    """Compiled-QueryEngine cache with hit/miss accounting."""
+
+    def __init__(self):
+        self._engines: dict[EngineKey, Any] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._engines)
+
+    def get_or_build(self, key: EngineKey, builder: Callable[[], Any]):
+        eng = self._engines.get(key)
+        if eng is not None:
+            self.hits += 1
+            return eng
+        self.misses += 1
+        eng = builder()
+        self._engines[key] = eng
+        return eng
+
+
+@dataclasses.dataclass
+class QueryOutcome:
+    """One served batch: result + how the runtime chose to execute it."""
+
+    result: IFEResult
+    policy: str  # base policy name ("ntks", "ntkms", ...)
+    hybrid: bool  # did a phase-2 re-dispatch run?
+    redispatched: int  # morsels handed to phase 2
+    phase_ms: dict  # {"phase1": ms, "phase2": ms}; static runs use phase1
+    phase1_budget: int  # iteration cap phase 1 ran under (0 = static)
+
+
+class AdaptiveScheduler:
+    """Compile-once, serve-many recursive-query runtime over one graph.
+
+    ``adaptive=True`` enables two-phase hybrid dispatch for any policy
+    with source morsels (nTkS/nTkMS/1T1S) under the replicated state
+    layout — pinning a policy picks WHICH morsels are issued, not the
+    execution mode, and the hybrid is bit-identical in result state.
+    ``adaptive=False`` degrades everything to the static dispatcher (one
+    engine per policy), which is also the fallback for the sharded-state
+    layout and for nT1S (no source morsels to re-dispatch).
+    """
+
+    def __init__(
+        self,
+        mesh,
+        csr: CSRGraph,
+        max_deg: int | None = None,
+        max_iters: int = 64,
+        adaptive: bool = True,
+        phase1_iters: int | None = None,
+        max_inflight: int | None = None,
+    ):
+        self.mesh = mesh
+        self.csr = csr
+        self.max_deg = max_deg
+        self.max_iters = max_iters
+        self.adaptive = adaptive
+        self.phase1_iters = phase1_iters  # pin the phase-1 budget (tests)
+        self.max_inflight = max_inflight  # override recommend_k (tests)
+        self.cache = EngineCache()
+        self._graphs: dict[tuple, tuple] = {}  # graph_axes -> (EllGraph, n_pad)
+        # p90 per-morsel iteration count of recent batches drives the
+        # phase-1 budget: most morsels should converge inside phase 1.
+        self._iter_p90s: collections.deque = collections.deque(maxlen=32)
+        self._pending: list[tuple[str, np.ndarray]] = []
+        self._next_qid = 0
+        self.admissions = {"ntkms": 0, "per_query": 0}
+
+    # ------------------------------------------------------------- engines
+
+    def _graph_for(self, policy: MorselPolicy):
+        key = policy.graph_axes
+        if key not in self._graphs:
+            # pad for mesh.size so every policy's graph shares one n_pad and
+            # phase-1 state can resume on the phase-2 graph unchanged
+            self._graphs[key] = prepare_graph(
+                self.csr, self.mesh, policy, self.max_deg,
+                pad_shards=self.mesh.size,
+            )
+        return self._graphs[key]
+
+    def engine(
+        self,
+        kind: str,
+        policy: MorselPolicy,
+        edge_compute: str,
+        n_pad: int,
+        max_iters: int | None = None,
+        state_layout: str = "replicated",
+    ):
+        cap = int(max_iters if max_iters is not None else self.max_iters)
+        key = EngineKey(kind, policy, edge_compute, n_pad, cap, state_layout)
+        if kind == "static":
+            builder = lambda: build_engine(
+                self.mesh, policy, edge_compute, n_pad, cap,
+                state_layout=state_layout,
+            )
+        elif kind == "phase1":
+            builder = lambda: build_engine(
+                self.mesh, policy, edge_compute, n_pad, cap,
+                state_layout=state_layout, sync="shard",
+            )
+        elif kind == "resume":
+            builder = lambda: build_resume_engine(
+                self.mesh, policy, edge_compute, n_pad, cap
+            )
+        else:
+            raise ValueError(f"unknown engine kind: {kind}")
+        return self.cache.get_or_build(key, builder)
+
+    # ------------------------------------------------------------ dispatch
+
+    def _phase1_budget(self) -> int:
+        """Iteration cap for phase 1, pow2-quantized so the budget only
+        compiles O(log max_iters) distinct phase-1 engines."""
+        if self.phase1_iters is not None:
+            return max(1, min(self.phase1_iters, self.max_iters))
+        if self._iter_p90s:
+            b = _pow2ceil(int(np.median(self._iter_p90s)) + 1)
+        else:
+            b = 8  # cold start: small-world graphs converge in a few hops
+        return max(4, min(b, self.max_iters))
+
+    def _record_iters(self, iters: np.ndarray):
+        if iters.size:
+            self._iter_p90s.append(float(np.percentile(iters, 90)))
+
+    def _run_hybrid(self, pol, ec, g, n_pad, morsels, state_layout):
+        """Two-phase hybrid on one morsel batch. Returns a QueryOutcome
+        whose result state is bit-identical to the static engine's."""
+        p1, p2 = hybrid_phases(
+            pol.source_axes, pol.graph_axes, lanes=pol.lanes,
+            or_impl=pol.or_impl,
+        )
+        budget = self._phase1_budget()
+        eng1 = self.engine("phase1", p1, ec, n_pad, max_iters=budget)
+        t0 = time.perf_counter()
+        res1 = jax.block_until_ready(eng1(g, morsels))
+        t1 = time.perf_counter()
+
+        # survivor test reads ONLY the frontier leaf; the full state pytree
+        # crosses to host just once, and only when phase 2 actually runs
+        frontier1 = np.asarray(res1.state.frontier)
+        m = frontier1.shape[0]
+        active = frontier1.reshape(m, -1).any(axis=1)
+        idx = np.nonzero(active)[0]
+        phase_ms = {"phase1": (t1 - t0) * 1e3, "phase2": 0.0}
+        if idx.size == 0:
+            return QueryOutcome(
+                result=res1, policy=pol.name, hybrid=True, redispatched=0,
+                phase_ms=phase_ms, phase1_budget=budget,
+            )
+        state1 = jax.tree.map(np.asarray, res1.state)
+        iters1 = np.asarray(res1.iterations)
+
+        # pad survivors to a pow2 morsel count: stable resume-trace shapes
+        # (pad morsels are all-zero state => zero-trip while_loops)
+        kp = _pow2ceil(idx.size)
+
+        def pick(x):
+            out = np.zeros((kp,) + x.shape[1:], np.asarray(x).dtype)
+            out[: idx.size] = np.asarray(x)[idx]
+            return out
+
+        sub_state = jax.tree.map(pick, state1)
+        sub_it = np.zeros((kp,), iters1.dtype)
+        sub_it[: idx.size] = iters1[idx]
+
+        g2, n_pad2 = self._graph_for(p2)
+        assert n_pad2 == n_pad, (n_pad2, n_pad)
+        eng2 = self.engine("resume", p2, ec, n_pad)
+        res2 = jax.block_until_ready(eng2(g2, sub_state, sub_it))
+        t2 = time.perf_counter()
+        phase_ms["phase2"] = (t2 - t1) * 1e3
+
+        state2 = jax.tree.map(np.asarray, res2.state)
+        iters2 = np.asarray(res2.iterations)
+
+        def put(full, sub):
+            out = np.asarray(full).copy()
+            out[idx] = sub[: idx.size]
+            return out
+
+        final_state = jax.tree.map(put, state1, state2)
+        final_iters = iters1.copy()
+        final_iters[idx] = iters2[: idx.size]
+        return QueryOutcome(
+            result=IFEResult(
+                state=jax.tree.map(jnp.asarray, final_state),
+                iterations=jnp.asarray(final_iters),
+            ),
+            policy=pol.name, hybrid=True, redispatched=int(idx.size),
+            phase_ms=phase_ms, phase1_budget=budget,
+        )
+
+    def _run_static(self, pol, ec, g, n_pad, morsels, state_layout):
+        eng = self.engine(
+            "static", pol, ec, n_pad, state_layout=state_layout
+        )
+        t0 = time.perf_counter()
+        res = jax.block_until_ready(eng(g, morsels))
+        t1 = time.perf_counter()
+        return QueryOutcome(
+            result=res, policy=pol.name, hybrid=False, redispatched=0,
+            phase_ms={"phase1": (t1 - t0) * 1e3, "phase2": 0.0},
+            phase1_budget=0,
+        )
+
+    def query(
+        self,
+        sources,
+        returns_paths: bool = False,
+        policy: str | None = None,
+        state_layout: str = "replicated",
+    ) -> QueryOutcome:
+        """Serve one request batch of source nodes.
+
+        Policy is chosen per batch via ``recommend_policy`` unless pinned;
+        execution is two-phase hybrid whenever eligible (adaptive mode,
+        replicated state, source-level morsels to re-dispatch).
+        """
+        sources = np.asarray(sources, np.int32).reshape(-1)
+        name = policy or recommend_policy(
+            len(sources),
+            self.mesh.size,
+            self.csr.avg_degree,
+            returns_paths=returns_paths,
+            n_nodes=self.csr.n_nodes,
+        )
+        pol = POLICIES[name]()
+        if pol.is_multi_source:
+            ec = "msbfs_parents" if returns_paths else "msbfs_lengths"
+        else:
+            ec = "sp_parents" if returns_paths else "sp_lengths"
+        g, n_pad = self._graph_for(pol)
+        src_shards = _axes_size(self.mesh, pol.source_axes)
+        morsels = pad_sources(sources, src_shards, pol.lanes, n_pad)
+
+        use_hybrid = (
+            self.adaptive
+            and state_layout == "replicated"
+            and bool(pol.source_axes)  # nT1S has no source morsels to split
+        )
+        run = self._run_hybrid if use_hybrid else self._run_static
+
+        # paper Fig 13: dense graphs cap concurrent source morsels (k);
+        # oversized batches run in fixed-size chunks, stitched on host.
+        k = (
+            self.max_inflight
+            if self.max_inflight is not None
+            else recommend_k(self.csr.avg_degree)
+        )
+        chunk = max(src_shards, k * src_shards)
+        # budget learning sees only the real morsels: pad/inert ones exit at
+        # 0 iterations and would drag the learned phase-1 budget below every
+        # true convergence depth (permanent re-dispatch)
+        n_real = max(1, -(-len(sources) // pol.lanes))
+        if morsels.shape[0] <= chunk:
+            outcome = run(pol, ec, g, n_pad, jnp.asarray(morsels), state_layout)
+            outcome.policy = name
+            self._record_iters(
+                np.asarray(outcome.result.iterations)[:n_real]
+            )
+            return outcome
+
+        outcomes = []
+        for i in range(0, morsels.shape[0], chunk):
+            part = morsels[i : i + chunk]
+            if part.shape[0] < chunk:  # keep one trace shape per chunk size
+                pad = np.full(
+                    (chunk - part.shape[0], part.shape[1]), n_pad, np.int32
+                )
+                part = np.concatenate([part, pad], axis=0)
+            outcomes.append(
+                run(pol, ec, g, n_pad, jnp.asarray(part), state_layout)
+            )
+        result = IFEResult(
+            state=jax.tree.map(
+                lambda *xs: jnp.concatenate([jnp.asarray(x) for x in xs]),
+                *[o.result.state for o in outcomes],
+            ),
+            iterations=jnp.concatenate(
+                [jnp.asarray(o.result.iterations) for o in outcomes]
+            ),
+        )
+        self._record_iters(np.asarray(result.iterations)[:n_real])
+        return QueryOutcome(
+            result=result,
+            policy=name,
+            hybrid=any(o.hybrid for o in outcomes),
+            redispatched=sum(o.redispatched for o in outcomes),
+            phase_ms={
+                "phase1": sum(o.phase_ms["phase1"] for o in outcomes),
+                "phase2": sum(o.phase_ms["phase2"] for o in outcomes),
+            },
+            phase1_budget=max(o.phase1_budget for o in outcomes),
+        )
+
+    # ----------------------------------------------------------- admission
+
+    def submit(self, sources, qid: str | None = None) -> str:
+        """Queue one tenant's query for the next ``flush``."""
+        if qid is None:
+            qid = f"q{self._next_qid}"
+            self._next_qid += 1
+        self._pending.append(
+            (qid, np.asarray(sources, np.int32).reshape(-1))
+        )
+        return qid
+
+    def flush(self) -> dict[str, np.ndarray]:
+        """Run all queued queries; returns {qid: levels [k, n_nodes] int32}
+        (-1 = unreached), one row per submitted source.
+
+        Admission rule (paper Fig 14): pack every tenant's sources into
+        shared 64-wide MS-BFS lane morsels only when ``recommend_policy``
+        says the pooled batch saturates the lanes; otherwise each query
+        runs by itself under the hybrid (packing with too few sources
+        would scan the graph for mostly-empty lanes).
+        """
+        if not self._pending:
+            return {}
+        pending, self._pending = self._pending, []
+        qids = [q for q, _ in pending]
+        srcs = [s for _, s in pending]
+        all_src = np.concatenate(srcs) if srcs else np.zeros(0, np.int32)
+        n = self.csr.n_nodes
+        name = recommend_policy(
+            len(all_src), self.mesh.size, self.csr.avg_degree,
+            n_nodes=n,
+        )
+        out: dict[str, np.ndarray] = {}
+        if name == "ntkms":
+            self.admissions["ntkms"] += 1
+            outcome = self.query(all_src, policy="ntkms")
+            lanes = np.asarray(outcome.result.state.levels)  # [m, n_pad, L]
+            L = lanes.shape[-1]
+            per_src = (
+                lanes[:, :n, :].transpose(0, 2, 1).reshape(-1, n)
+            ).astype(np.int32)
+            per_src[per_src == 255] = -1
+            i = 0
+            for qid, s in zip(qids, srcs):
+                out[qid] = per_src[i : i + len(s)]
+                i += len(s)
+        else:
+            self.admissions["per_query"] += 1
+            for qid, s in zip(qids, srcs):
+                outcome = self.query(s)
+                out[qid] = np.asarray(outcome.result.state.levels)[
+                    : len(s), :n
+                ].astype(np.int32)
+        return out

@@ -6,3 +6,11 @@ import sys
 os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.dirname(__file__))  # proptest/oracle importable
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: subprocess / multi-device / multi-minute tests excluded from "
+        "the fast CI lane (scripts/ci.sh runs them only with --full)",
+    )

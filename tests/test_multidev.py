@@ -13,10 +13,12 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.collectives import or_allreduce, ring_or_u32
 from repro.core import (run_recursive_query, policy_1t1s, policy_nt1s,
                         policy_ntks, policy_ntkms)
 from repro.graph.generators import powerlaw
+from repro.launch.mesh import make_mesh
 import collections
 
 def bfs_levels(csr, sources):
@@ -33,8 +35,7 @@ def bfs_levels(csr, sources):
                 levels[int(v)] = levels[u] + 1; q.append(int(v))
     return levels
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 
 # --- collective parity: every or_allreduce impl must agree -----------------
 rng = np.random.default_rng(0)
@@ -42,8 +43,8 @@ x = (rng.random((8, 1000)) < 0.2)
 def run(impl):
     def f(xs):
         return or_allreduce(xs[0], ("data", "model"), impl)[None]
-    sm = jax.shard_map(f, mesh=mesh, in_specs=P(("data","model"), None),
-                       out_specs=P(("data","model"), None), check_vma=False)
+    sm = shard_map(f, mesh, P(("data","model"), None),
+                   P(("data","model"), None))
     return np.asarray(jax.jit(sm)(jnp.asarray(x)))
 ref = np.broadcast_to(x.any(axis=0), (8, 1000))
 for impl in ("pmax", "allgather", "ring"):
@@ -55,8 +56,8 @@ print("collectives OK")
 xu = rng.integers(0, 2**32, size=(8, 37), dtype=np.uint32)
 def fu(xs):
     return ring_or_u32(xs[0], "model")[None]
-sm = jax.shard_map(fu, mesh=mesh, in_specs=P(("data","model"), None),
-                   out_specs=P(("data","model"), None), check_vma=False)
+sm = shard_map(fu, mesh, P(("data","model"), None),
+               P(("data","model"), None))
 got = np.asarray(jax.jit(sm)(jnp.asarray(xu)))
 expect = np.zeros_like(xu)
 for d in range(2):
@@ -103,6 +104,10 @@ print("ALL_MULTIDEV_OK")
 """
 
 
+import pytest
+
+
+@pytest.mark.slow
 def test_multidev_subprocess():
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)

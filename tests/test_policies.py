@@ -18,13 +18,11 @@ from repro.core import (
     recommend_policy,
     recommend_k,
 )
+from repro.launch.mesh import make_mesh
 
 
 def mesh11():
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def _levels(res):

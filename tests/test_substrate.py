@@ -170,8 +170,9 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 from repro.parallel.pipeline import pipeline_apply
+from repro.launch.mesh import make_mesh
 
-mesh = jax.make_mesh((4,), ("pipe",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ("pipe",))
 S, M, D = 4, 6, 8
 rng = np.random.default_rng(0)
 Ws = jnp.asarray(rng.standard_normal((S, D, D)) * 0.3, jnp.float32)
@@ -191,6 +192,10 @@ print("PIPE_OK")
 """
 
 
+import pytest
+
+
+@pytest.mark.slow
 def test_pipeline_parallel_subprocess():
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)

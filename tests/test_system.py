@@ -125,9 +125,10 @@ def test_query_service_end_to_end():
     from repro.graph.generators import powerlaw, pick_sources
     from repro.launch.serve import QueryService
 
+    from repro.launch.mesh import make_mesh
+
     csr = powerlaw(400, 6.0, seed=5)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     svc = QueryService(mesh, csr, max_iters=64)
 
     srcs = pick_sources(csr, 4, seed=1)
@@ -169,6 +170,7 @@ import collections
 
 from repro.core import run_recursive_query, policy_ntks, policy_ntkms
 from repro.graph.generators import powerlaw
+from repro.launch.mesh import make_mesh
 
 def bfs(csr, s):
     lv = np.full(csr.n_nodes, -1, np.int32); lv[s] = 0
@@ -179,8 +181,7 @@ def bfs(csr, s):
             if lv[int(v)] < 0: lv[int(v)] = lv[u]+1; q.append(int(v))
     return lv
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 csr = powerlaw(300, 5.0, seed=1)
 srcs = np.array([0, 3, 17, 44, 123, 200, 250, 280], np.int32)
 exp = np.stack([bfs(csr, int(s)) for s in srcs])
@@ -212,8 +213,7 @@ x = jax.device_put(np.arange(64, dtype=np.float32).reshape(8, 8),
                    NamedSharding(mesh, P("data", "model")))
 state = {"w": x, "step": jnp.int32(7)}
 ck.save(3, state, blocking=True)
-mesh2 = jax.make_mesh((4, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh2 = make_mesh((4, 2), ("data", "model"))
 sh2 = {"w": NamedSharding(mesh2, P("model", "data")),
        "step": NamedSharding(mesh2, P())}
 restored, step = ck.restore(state, shardings=sh2)
@@ -234,10 +234,23 @@ assert cost.get("flops", 0) > 0
 st = parse_collectives(compiled.as_text())
 assert sum(st.counts.values()) > 0, "graph-partitioned engine must communicate"
 print("cell builder OK")
+
+# 5. adaptive hybrid runtime on a real 2x4 mesh: phase 1 (nTkS, per-shard
+# convergence) + phase 2 (nT1S resume) must equal the oracle, reuse engines
+from repro.runtime.scheduler import AdaptiveScheduler
+sched = AdaptiveScheduler(mesh, csr, max_iters=64, phase1_iters=2)
+out = sched.query(srcs)
+assert out.hybrid and out.redispatched > 0, (out.hybrid, out.redispatched)
+got = np.asarray(out.result.state.levels)[: len(srcs), : csr.n_nodes]
+assert (got == exp).all(), "hybrid vs oracle"
+out2 = sched.query(srcs)
+assert sched.cache.hits >= 2, sched.cache.hits
+print("adaptive hybrid OK")
 print("ALL_SYSTEM_OK")
 """
 
 
+@pytest.mark.slow
 def test_multidevice_system_subprocess():
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
@@ -257,6 +270,7 @@ def test_multidevice_system_subprocess():
 # fault-tolerant train driver end-to-end (tiny; includes resume)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_train_driver_resumes(tmp_path):
     from repro.launch.train import main
 
