@@ -1,10 +1,14 @@
 #!/usr/bin/env bash
 # Tier-1 CI runner with a wall-clock budget and a fast/full marker split.
 #
-#   scripts/ci.sh          # fast lane: -m "not slow" (skips subprocess /
-#                          # multi-device / train-driver tests; ~3 min on
-#                          # the 1-core reference box)
-#   scripts/ci.sh --full   # the whole tier-1 suite (~6 min)
+#   scripts/ci.sh               # fast lane: -m "not slow" (skips subprocess /
+#                               # multi-device / train-driver tests; ~3 min on
+#                               # the 1-core reference box)
+#   scripts/ci.sh --full        # the whole tier-1 suite (~6 min)
+#   scripts/ci.sh --bench-smoke # perf-trajectory lane: run the direction-opt
+#                               # benchmark on a tiny graph, validate the
+#                               # emitted BENCH_direction_opt.json schema and
+#                               # the >=2x large-frontier scan reduction
 #
 # CI_BUDGET_SECONDS caps the run (default 1800); a hung XLA compile or
 # subprocess fails the lane instead of wedging the pipeline.
@@ -16,6 +20,21 @@ BUDGET="${CI_BUDGET_SECONDS:-1800}"
 
 if [[ "${1:-}" == "--full" ]]; then
   exec timeout --signal=INT "$BUDGET" python -m pytest -x -q
+elif [[ "${1:-}" == "--bench-smoke" ]]; then
+  OUT="${BENCH_OUT:-/tmp/BENCH_direction_opt.smoke.json}"
+  # the benchmark validates its own schema before writing and exits nonzero
+  # if the dense-ER reduction target is missed
+  timeout --signal=INT "$BUDGET" \
+    python benchmarks/direction_opt.py --smoke --out "$OUT"
+  python - "$OUT" <<'EOF'
+import json, sys
+sys.path.insert(0, "benchmarks")
+from direction_opt import validate
+doc = json.loads(open(sys.argv[1]).read())
+validate(doc)
+print(f"bench-smoke OK: {sys.argv[1]} schema valid, "
+      f"reduction {doc['summary']['dense_er']['scan_reduction_dopt_vs_push']}x")
+EOF
 else
   exec timeout --signal=INT "$BUDGET" python -m pytest -x -q -m "not slow"
 fi

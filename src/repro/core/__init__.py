@@ -18,7 +18,16 @@ from .policies import (
     policy_ntkms,
     hybrid_phases,
     recommend_policy,
+    recommend_backend,
     recommend_k,
+)
+from .extend import (
+    BACKENDS,
+    ExtendSpec,
+    GraphOperands,
+    as_spec,
+    build_operands,
+    make_backend,
 )
 from .dispatcher import (
     QueryEngine,
@@ -34,5 +43,10 @@ from .collectives import (
     min_allreduce,
     ring_or_u32,
 )
-from .msbfs import block_extend_lanes, block_extend_dense
+from .msbfs import (
+    active_block_count,
+    block_extend_dense,
+    block_extend_lanes,
+    frontier_block_activity,
+)
 from . import frontier

@@ -35,10 +35,18 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import axis_size, shard_map
-from ..graph.csr import CSRGraph, EllGraph, ell_from_csr
-from ..graph.partition import pad_ell
+from ..graph.csr import CSRGraph, EllGraph, ShardedBlocks
 from .collectives import merge_contribution, merge_scatter
 from .edge_compute import EDGE_COMPUTES
+from .extend import (
+    ExtendCtx,
+    ExtendSpec,
+    GraphOperands,
+    as_operands,
+    as_spec,
+    build_operands,
+    make_backend,
+)
 from .ife import IFEResult
 from .policies import MorselPolicy
 
@@ -72,7 +80,8 @@ def pad_sources(
 @dataclasses.dataclass(frozen=True)
 class QueryEngine:
     """A compiled recursive-query executor for one (mesh, policy, graph-shape,
-    edge-compute) combination — the paper's IFE physical operator."""
+    edge-compute, extension-backend) combination — the paper's IFE physical
+    operator."""
 
     mesh: Mesh
     policy: MorselPolicy
@@ -80,11 +89,59 @@ class QueryEngine:
     n_nodes_padded: int
     max_iters: int
     fn: Any  # jitted shard_map program
+    extend: ExtendSpec = ExtendSpec()
 
-    def __call__(self, graph: EllGraph, *args) -> IFEResult:
+    def _coerce(self, graph):
+        """Accept an EllGraph or any GraphOperands bundle and hand ``fn``
+        exactly the operand structure its in_specs declare (push engines
+        keep the historical bare-EllGraph calling convention)."""
+        ops = as_operands(graph)
+        spec = self.extend
+        if not (spec.needs_rev or spec.needs_blocks):
+            return ops.fwd
+        if spec.needs_rev and ops.rev is None:
+            raise ValueError(
+                f"engine extend={spec.backend}/{spec.direction} needs "
+                "reverse operands; use prepare_graph(..., extend=spec)"
+            )
+        if spec.needs_blocks and ops.blocks is None:
+            raise ValueError(
+                "engine extend=block_mxu needs block operands; use "
+                "prepare_graph(..., extend=spec)"
+            )
+        return GraphOperands(
+            fwd=ops.fwd,
+            rev=ops.rev if spec.needs_rev else None,
+            blocks=ops.blocks if spec.needs_blocks else None,
+        )
+
+    def __call__(self, graph, *args) -> IFEResult:
         """Static/phase-1 engines: ``engine(graph, source_morsels)``.
         Resume engines: ``engine(graph, state0, it0)``."""
-        return self.fn(graph, *args)
+        return self.fn(self._coerce(graph), *args)
+
+
+def _operand_specs(spec: ExtendSpec, ga: tuple[str, ...]):
+    """shard_map in_specs for the operand bundle an engine scans: ELL rows
+    (fwd and rev) shard over the graph axes; the stacked per-shard block
+    tensors shard over their leading K axis."""
+    ell = EllGraph(
+        indices=P(ga if ga else None, None),
+        degrees=P(ga if ga else None),
+        weights=None,
+    )
+    if not (spec.needs_rev or spec.needs_blocks):
+        return ell
+    blocks = None
+    if spec.needs_blocks:
+        blocks = ShardedBlocks(
+            blocks=P(ga if ga else None, None, None, None),
+            block_rows=P(ga if ga else None, None),
+            block_cols=P(ga if ga else None, None),
+        )
+    return GraphOperands(
+        fwd=ell, rev=ell if spec.needs_rev else None, blocks=blocks
+    )
 
 
 def build_engine(
@@ -95,6 +152,7 @@ def build_engine(
     max_iters: int | None = None,
     state_layout: str = "replicated",
     sync: str = "global",
+    extend="ell_push",
 ) -> QueryEngine:
     """``state_layout``:
 
@@ -122,6 +180,7 @@ def build_engine(
       ``build_resume_engine`` instead of wasted.
     """
     ec = EDGE_COMPUTES[edge_compute]
+    spec = as_spec(extend)
     ga = policy.graph_axes
     sa = policy.source_axes
     cap = int(max_iters if max_iters is not None else n_nodes_padded)
@@ -136,10 +195,20 @@ def build_engine(
     else:
         sync_axes = tuple(ga)
 
-    def worker(g_shard: EllGraph, sources_local: jax.Array):
-        rows_local = g_shard.indices.shape[0]
+    def worker(graph_in, sources_local: jax.Array):
+        ops = as_operands(graph_in)
+        be = make_backend(spec)
+        rows_local = ops.fwd.indices.shape[0]
         offset = (
             _flat_axis_index(ga) * rows_local if ga else None
+        )
+        ctx = ExtendCtx(
+            n_out=n,
+            row_offset=None if sharded else offset,
+            row_base=offset if sharded else None,
+            axes=tuple(ga),
+            or_impl=policy.or_impl,
+            sharded=sharded,
         )
 
         def one_morsel(srcs):
@@ -166,15 +235,12 @@ def build_engine(
 
             def body(carry):
                 state, it = carry
+                contribution = ec.extend(be, ops, state, ctx)
                 if sharded:
-                    contribution = ec.local_extend(
-                        g_shard, state, None, n_out=n, row_base=offset
-                    )
                     merged = merge_scatter(
                         ec.MERGE, contribution, ga, policy.or_impl
                     )
                 else:
-                    contribution = ec.local_extend(g_shard, state, offset)
                     merged = merge_contribution(
                         ec.MERGE, contribution, ga, policy.or_impl
                     )
@@ -185,11 +251,7 @@ def build_engine(
 
         return lax.map(one_morsel, sources_local)
 
-    g_specs = EllGraph(
-        indices=P(ga if ga else None, None),
-        degrees=P(ga if ga else None),
-        weights=None,
-    )
+    g_specs = _operand_specs(spec, ga)
     src_spec = P(sa if sa else None, None)
     if sharded:
         # state rows live on the graph axes: leaves are [morsel, rows, ...]
@@ -220,6 +282,7 @@ def build_engine(
         n_nodes_padded=n,
         max_iters=cap,
         fn=fn,
+        extend=spec,
     )
 
 
@@ -229,6 +292,7 @@ def build_resume_engine(
     edge_compute: str,
     n_nodes_padded: int,
     max_iters: int | None = None,
+    extend="ell_push",
 ) -> QueryEngine:
     """Phase-2 (re-dispatch) engine of the adaptive hybrid.
 
@@ -245,6 +309,7 @@ def build_resume_engine(
     The returned engine's ``fn`` signature is ``fn(graph, state0, it0)``.
     """
     ec = EDGE_COMPUTES[edge_compute]
+    spec = as_spec(extend)
     ga = policy.graph_axes
     sa = policy.source_axes
     if sa:
@@ -255,9 +320,17 @@ def build_resume_engine(
     cap = int(max_iters if max_iters is not None else n_nodes_padded)
     sync_axes = tuple(ga)
 
-    def worker(g_shard: EllGraph, state0, it0):
-        rows_local = g_shard.indices.shape[0]
+    def worker(graph_in, state0, it0):
+        ops = as_operands(graph_in)
+        be = make_backend(spec)
+        rows_local = ops.fwd.indices.shape[0]
         offset = _flat_axis_index(ga) * rows_local if ga else None
+        ctx = ExtendCtx(
+            n_out=n_nodes_padded,
+            row_offset=offset,
+            axes=tuple(ga),
+            or_impl=policy.or_impl,
+        )
 
         def one_morsel(args):
             state_m, it_m = args
@@ -273,7 +346,7 @@ def build_resume_engine(
 
             def body(carry):
                 state, it = carry
-                contribution = ec.local_extend(g_shard, state, offset)
+                contribution = ec.extend(be, ops, state, ctx)
                 merged = merge_contribution(
                     ec.MERGE, contribution, ga, policy.or_impl
                 )
@@ -284,11 +357,7 @@ def build_resume_engine(
 
         return lax.map(one_morsel, (state0, it0))
 
-    g_specs = EllGraph(
-        indices=P(ga if ga else None, None),
-        degrees=P(ga if ga else None),
-        weights=None,
-    )
+    g_specs = _operand_specs(spec, ga)
     # state/it0 replicated in, outputs replicated (post-merge state is
     # identical on every device of the graph group)
     fn = jax.jit(
@@ -306,6 +375,7 @@ def build_resume_engine(
         n_nodes_padded=n_nodes_padded,
         max_iters=cap,
         fn=fn,
+        extend=spec,
     )
 
 
@@ -315,34 +385,85 @@ def prepare_graph(
     policy: MorselPolicy,
     max_deg: int | None = None,
     pad_shards: int | None = None,
-) -> tuple[EllGraph, int]:
-    """Host-side: CSR → padded, device-placed ELL for this policy's mesh.
+    extend="ell_push",
+) -> tuple[GraphOperands, int]:
+    """Host-side: CSR → padded, device-placed extension operands for this
+    policy's mesh: the forward ELL always, plus the reverse ELL and/or the
+    per-shard block adjacency when the ``extend`` spec scans them (all
+    derived from the same truncated edge set — backend bit-parity).
 
-    Rows pad to a multiple of shards×32 so the sharded-state engine's
-    bit-packed ring reduce-scatter stays word-aligned per shard.
+    Rows pad to a multiple of shards×pad_block (32, or the MXU tile size
+    for block operands) so the sharded-state engine's bit-packed ring
+    reduce-scatter stays word-aligned per shard and block tiles divide
+    every shard.
 
     ``pad_shards``: pad rows for this many shards (lcm'd with the policy's
     own shard count) instead of the policy's alone. The adaptive scheduler
     passes ``mesh.size`` so the phase-1 (nTkS, graph over a subset of axes)
     and phase-2 (nT1S, graph over all axes) graphs share one ``n_pad`` and
     state arrays can flow between the two engines unchanged."""
-    g = ell_from_csr(csr, max_deg=max_deg)
+    spec = as_spec(extend)
     shards = _axes_size(mesh, policy.graph_axes)
     if pad_shards is not None:
         shards = int(np.lcm(shards, int(pad_shards)))
-    g = pad_ell(g, shards, block=32)
+    ops, n_pad = build_operands(csr, spec, max_deg=max_deg, shards=shards)
     ga = policy.graph_axes
-    sharding = NamedSharding(mesh, P(ga if ga else None, None))
-    g = EllGraph(
-        indices=jax.device_put(g.indices, sharding),
-        degrees=jax.device_put(
-            g.degrees, NamedSharding(mesh, P(ga if ga else None))
-        ),
-        weights=None
-        if g.weights is None
-        else jax.device_put(g.weights, sharding),
+    row_sharding = NamedSharding(mesh, P(ga if ga else None, None))
+    deg_sharding = NamedSharding(mesh, P(ga if ga else None))
+
+    def put_ell(g: EllGraph) -> EllGraph:
+        return EllGraph(
+            indices=jax.device_put(g.indices, row_sharding),
+            degrees=jax.device_put(g.degrees, deg_sharding),
+            weights=None
+            if g.weights is None
+            else jax.device_put(g.weights, row_sharding),
+        )
+
+    blocks = None
+    if ops.blocks is not None:
+        k_shards = _axes_size(mesh, ga)
+        sb = ops.blocks
+        if k_shards != shards:
+            # operands were padded for more shards than this policy uses
+            # (pad_shards lcm) — regroup the stacked tiles per policy shard
+            sb = ShardedBlocks(
+                blocks=jnp.reshape(
+                    sb.blocks,
+                    (k_shards, -1, *sb.blocks.shape[2:]),
+                ),
+                block_rows=_regroup_block_rows(sb, k_shards, n_pad),
+                block_cols=jnp.reshape(sb.block_cols, (k_shards, -1)),
+            )
+        blocks = ShardedBlocks(
+            blocks=jax.device_put(
+                sb.blocks,
+                NamedSharding(mesh, P(ga if ga else None, None, None, None)),
+            ),
+            block_rows=jax.device_put(
+                sb.block_rows, NamedSharding(mesh, P(ga if ga else None, None))
+            ),
+            block_cols=jax.device_put(
+                sb.block_cols, NamedSharding(mesh, P(ga if ga else None, None))
+            ),
+        )
+    ops = GraphOperands(
+        fwd=put_ell(ops.fwd),
+        rev=None if ops.rev is None else put_ell(ops.rev),
+        blocks=blocks,
     )
-    return g, g.indices.shape[0]
+    return ops, n_pad
+
+
+def _regroup_block_rows(sb: ShardedBlocks, k_shards: int, n_pad: int):
+    """Re-base local row-block ids when folding ``shards`` stacked shard
+    groups into ``k_shards`` coarser policy shards."""
+    fine = sb.block_rows.shape[0]
+    group = fine // k_shards
+    rb_fine = (n_pad // fine) // sb.block_size
+    offs = (jnp.arange(fine, dtype=jnp.int32) % group) * rb_fine
+    rows = sb.block_rows + offs[:, None]
+    return jnp.reshape(rows, (k_shards, -1))
 
 
 def run_recursive_query(
@@ -354,10 +475,14 @@ def run_recursive_query(
     max_iters: int | None = None,
     max_deg: int | None = None,
     state_layout: str = "replicated",
+    extend="ell_push",
 ) -> IFEResult:
     """End-to-end: the paper Fig 3 IFETask. Returns states stacked over
-    morsels: leaves have leading dim n_morsels (global)."""
-    g, n_pad = prepare_graph(csr, mesh, policy, max_deg)
+    morsels: leaves have leading dim n_morsels (global). ``extend`` selects
+    the frontier-extension backend ("ell_push" | "ell_pull" | "block_mxu" |
+    "dopt"/ExtendSpec) — results are bit-identical across all of them."""
+    spec = as_spec(extend)
+    g, n_pad = prepare_graph(csr, mesh, policy, max_deg, extend=spec)
     src_shards = _axes_size(mesh, policy.source_axes)
     morsels = pad_sources(np.asarray(sources), src_shards, policy.lanes, n_pad)
     sa = policy.source_axes
@@ -366,6 +491,6 @@ def run_recursive_query(
     )
     engine = build_engine(
         mesh, policy, edge_compute, n_pad, max_iters,
-        state_layout=state_layout,
+        state_layout=state_layout, extend=spec,
     )
     return engine(g, morsels)

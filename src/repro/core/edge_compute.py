@@ -193,6 +193,12 @@ class SPLengths:
         return ell_reach_dense(g, state.frontier, row_offset, n_out)
 
     @staticmethod
+    def extend(be, ops, state: SPLengthState, ctx):
+        """Backend-pluggable extension (core.extend): same contribution
+        contract as ``local_extend``, physical scan chosen by ``be``."""
+        return be.reach_dense(ops, state.frontier, state.visited, ctx)
+
+    @staticmethod
     def apply(state: SPLengthState, reached: jax.Array, it: jax.Array):
         new = reached & ~state.visited
         return SPLengthState(
@@ -223,6 +229,10 @@ class Reachability:
     def local_extend(g: EllGraph, state: ReachState, row_offset=None,
                      n_out=None, row_base=None) -> jax.Array:
         return ell_reach_dense(g, state.frontier, row_offset, n_out)
+
+    @staticmethod
+    def extend(be, ops, state: ReachState, ctx):
+        return be.reach_dense(ops, state.frontier, state.visited, ctx)
 
     @staticmethod
     def apply(state: ReachState, reached: jax.Array, it: jax.Array):
@@ -262,6 +272,12 @@ class SPParents:
         )
 
     @staticmethod
+    def extend(be, ops, state: SPParentState, ctx):
+        # paired call: the backend computes both contributions off one
+        # frontier union / direction decision
+        return be.reach_parent_dense(ops, state.frontier, state.visited, ctx)
+
+    @staticmethod
     def apply(state: SPParentState, merged, it: jax.Array):
         reached, parent_cand = merged
         new = reached & ~state.visited
@@ -294,6 +310,10 @@ class BellmanFord:
     def local_extend(g: EllGraph, state: BellmanFordState, row_offset=None,
                      n_out=None, row_base=None) -> jax.Array:
         return ell_min_dist(g, state.dist, state.frontier, row_offset, n_out)
+
+    @staticmethod
+    def extend(be, ops, state: BellmanFordState, ctx):
+        return be.min_dist(ops, state.dist, state.frontier, ctx)
 
     @staticmethod
     def apply(state: BellmanFordState, cand: jax.Array, it: jax.Array):
@@ -332,6 +352,10 @@ class MSBFSLengths:
     def local_extend(g: EllGraph, state: MSBFSState, row_offset=None,
                      n_out=None, row_base=None) -> jax.Array:
         return ell_reach_lanes(g, state.frontier, row_offset, n_out)
+
+    @staticmethod
+    def extend(be, ops, state: MSBFSState, ctx):
+        return be.reach_lanes(ops, state.frontier, state.visited, ctx)
 
     @staticmethod
     def apply(state: MSBFSState, reached: jax.Array, it: jax.Array):
@@ -378,6 +402,10 @@ class MSBFSParents:
             ell_min_parent_lanes(g, state.frontier, row_offset, n_out,
                                  row_base),
         )
+
+    @staticmethod
+    def extend(be, ops, state: MSBFSParentState, ctx):
+        return be.reach_parent_lanes(ops, state.frontier, state.visited, ctx)
 
     @staticmethod
     def apply(state: MSBFSParentState, merged, it: jax.Array):

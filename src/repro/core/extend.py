@@ -1,0 +1,664 @@
+"""Pluggable, density-adaptive frontier-extension backends.
+
+The paper's economy argument is "amount of scans": a morsel policy wins by
+touching less adjacency data per iteration. This module makes the *physical
+scan layout* of the extension step a per-engine choice (EmptyHeaded's
+density-adaptive set layouts; Kuzu's per-operator physical scan selection),
+with three backends sharing one contract plus a Beamer-style
+direction-optimizing switch:
+
+- ``ell_push``  — forward-ELL scatter (the original path): every local row
+  broadcasts its frontier bit down its out-neighbor list. Scan cost is the
+  whole ``[rows, max_deg]`` tensor regardless of frontier density.
+- ``ell_pull``  — gather over the *reverse* ELL with visited-suppression:
+  each unvisited v scans its in-neighbor list and ORs the frontier bits it
+  finds — the classic bottom-up win when frontiers are large, because the
+  rows that still need scanning (unvisited) shrink every iteration.
+- ``block_mxu`` — the saturating-matmul path over the per-shard block-sparse
+  adjacency (``ShardedBlocks``), upgraded to skip frontier-empty source
+  row-block *stripes* (a per-row-block activity bitmap masks contributions;
+  the Pallas kernel skips the same blocks via scalar-prefetch indices).
+
+``direction="auto"`` realizes Beamer's alpha/beta direction optimization as
+a per-iteration ``lax.cond`` between push and pull with fixed shapes, so it
+composes with ``jit`` / ``while_loop`` / ``shard_map`` in both the
+replicated and sharded state layouts. The decision is a pure, stateless
+function of (frontier, visited): pull when the frontier's out-edge mass
+exceeds the unexplored edge mass / alpha AND the frontier holds more than
+n / beta nodes. Collectives (global-frontier union, stat psums) are hoisted
+*outside* the cond so both branches are collective-free and every device in
+a sync group takes the same branch.
+
+All backends produce bit-identical final states: push and pull enumerate the
+same edge set (reverse operands are derived from the *truncated* forward
+graph — see ``graph.csr.truncate_csr``), OR/min merges are order-invariant,
+and visited-suppression only changes contribution values that
+``ec.apply``'s ``& ~visited`` masks away.
+
+Backends consume a ``GraphOperands`` bundle (forward ELL + optional reverse
+ELL + optional per-shard blocks) built once host-side by
+``core.dispatcher.prepare_graph`` / ``build_operands``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..graph.csr import (
+    CSRGraph,
+    EllGraph,
+    ShardedBlocks,
+    ell_from_csr,
+    sharded_blocks_from_csr,
+    truncate_csr,
+)
+from ..graph.partition import pad_ell
+from .collectives import min_allreduce, or_allreduce
+from .edge_compute import (
+    NO_PARENT,
+    _deg_chunk,
+    _local_rows,
+    ell_min_dist,
+    ell_min_parent,
+    ell_min_parent_lanes,
+    ell_reach_dense,
+    ell_reach_lanes,
+)
+
+BACKENDS = ("ell_push", "ell_pull", "block_mxu")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExtendSpec:
+    """Static configuration of the extension step (hashable: engine-cache
+    key material and jit static argument)."""
+
+    backend: str = "ell_push"  # ell_push | ell_pull | block_mxu
+    direction: str = "fixed"  # fixed | auto (Beamer push/pull switch)
+    alpha: float = 14.0  # pull when m_frontier > m_unexplored / alpha
+    beta: float = 24.0  # ... and n_frontier > n / beta
+    block: int = 128  # tile size of the block_mxu operand
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown extension backend: {self.backend}")
+        if self.direction not in ("fixed", "auto"):
+            raise ValueError(f"unknown direction mode: {self.direction}")
+        if self.direction == "auto" and self.backend != "ell_push":
+            # the auto switch IS the backend choice (push vs pull); pinning
+            # another backend alongside it would be silently ignored
+            raise ValueError(
+                "direction='auto' switches between ell_push and ell_pull; "
+                f"it cannot be combined with backend={self.backend!r}"
+            )
+
+    @property
+    def needs_rev(self) -> bool:
+        return self.direction == "auto" or self.backend == "ell_pull"
+
+    @property
+    def needs_blocks(self) -> bool:
+        return self.direction == "fixed" and self.backend == "block_mxu"
+
+    @property
+    def pad_block(self) -> int:
+        """Row-padding unit the operands need (block tiles must divide the
+        per-shard row count; 32 keeps the bit-packed ring word-aligned)."""
+        return self.block if self.needs_blocks else 32
+
+
+#: convenience aliases accepted anywhere an ExtendSpec is
+_ALIASES = {
+    "dopt": ExtendSpec(direction="auto"),
+    "auto": ExtendSpec(direction="auto"),
+}
+
+
+def as_spec(extend) -> ExtendSpec:
+    """Normalize a backend name / alias / spec / None to an ExtendSpec."""
+    if extend is None:
+        return ExtendSpec()
+    if isinstance(extend, ExtendSpec):
+        return extend
+    if isinstance(extend, str):
+        if extend in _ALIASES:
+            return _ALIASES[extend]
+        return ExtendSpec(backend=extend)
+    raise TypeError(f"cannot interpret extend={extend!r}")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GraphOperands:
+    """The physical scan operands of one graph (or one graph shard).
+
+    ``fwd`` is always present; ``rev`` / ``blocks`` are materialized only
+    when the engine's ExtendSpec needs them (treedefs must match shard_map
+    in_specs exactly, so engines carry precisely the operands they scan).
+    """
+
+    fwd: EllGraph
+    rev: Optional[EllGraph] = None
+    blocks: Optional[ShardedBlocks] = None
+
+    @property
+    def n_nodes(self) -> int:
+        return self.fwd.n_nodes
+
+
+def as_operands(graph) -> GraphOperands:
+    if isinstance(graph, GraphOperands):
+        return graph
+    return GraphOperands(fwd=graph)
+
+
+def build_operands(
+    csr: CSRGraph,
+    extend="ell_push",
+    max_deg: int | None = None,
+    shards: int = 1,
+    block: int | None = None,
+) -> tuple[GraphOperands, int]:
+    """Host-side operand construction (single-host variant; the mesh-aware
+    path in ``dispatcher.prepare_graph`` adds device placement).
+
+    Pads rows to a multiple of ``shards * pad_block`` and derives reverse /
+    block operands from the *truncated* forward graph so every backend scans
+    the identical edge set. Returns (operands, n_pad).
+    """
+    spec = as_spec(extend)
+    pad_block = block or spec.pad_block
+    # the effective cap is the ELL row width, i.e. max_deg rounded up to the
+    # ELL pad multiple — matching the historical ell_from_csr(csr, max_deg)
+    # semantics so capped queries return the same results as the seed engine
+    cap = None if max_deg is None else -(-int(max_deg) // 8) * 8
+    eff = truncate_csr(csr, cap)
+    fwd = pad_ell(ell_from_csr(eff), shards, block=pad_block)
+    n_pad = fwd.n_nodes
+    rev = None
+    if spec.needs_rev:
+        rev = pad_ell(ell_from_csr(eff.reverse()), shards, block=pad_block)
+        assert rev.n_nodes == n_pad, (rev.n_nodes, n_pad)
+    blocks = None
+    if spec.needs_blocks:
+        blocks = sharded_blocks_from_csr(eff, n_pad, shards, spec.block)
+    return GraphOperands(fwd=fwd, rev=rev, blocks=blocks), n_pad
+
+
+@dataclasses.dataclass(frozen=True)
+class ExtendCtx:
+    """Per-trace extension context (fields may be traced values).
+
+    Layout contract mirrors ``edge_compute``: replicated state passes
+    ``row_offset`` (slice the global array to this shard's rows) and global
+    state tensors; sharded state passes local-row tensors with
+    ``row_base`` = global id of the first local row. ``axes`` are the graph
+    mesh axes collectives may span; ``sharded`` selects the local-row state
+    convention.
+    """
+
+    n_out: int
+    row_offset: object = None  # traced int or None (replicated layout)
+    row_base: object = None  # traced int or None (sharded layout)
+    axes: tuple = ()
+    or_impl: str = "allgather"
+    sharded: bool = False
+
+    @property
+    def start(self):
+        """Global row id of the first local row (0 on a single shard)."""
+        if self.row_offset is not None:
+            return self.row_offset
+        if self.row_base is not None:
+            return self.row_base
+        return None
+
+
+def _place_rows(local: jax.Array, ctx: ExtendCtx, fill) -> jax.Array:
+    """Embed a local-rows result into the global [n_out, ...] contribution
+    (identity on a single full-width shard)."""
+    start = ctx.start
+    if start is None:
+        return local
+    out = jnp.full((ctx.n_out, *local.shape[1:]), fill, local.dtype)
+    return lax.dynamic_update_slice(
+        out, local, (start,) + (0,) * (local.ndim - 1)
+    )
+
+
+def _local_state(x: jax.Array, rows: int, ctx: ExtendCtx) -> jax.Array:
+    """This shard's rows of a state tensor (sharded state is already local)."""
+    if ctx.sharded or ctx.row_offset is None:
+        return x
+    return lax.dynamic_slice_in_dim(x, ctx.row_offset, rows, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# ell_push — forward scatter (the original primitives, unchanged math).
+# ---------------------------------------------------------------------------
+
+
+class PushBackend:
+    name = "ell_push"
+
+    @staticmethod
+    def reach_dense(ops, frontier, visited, ctx):
+        return ell_reach_dense(ops.fwd, frontier, ctx.row_offset, ctx.n_out)
+
+    @staticmethod
+    def reach_lanes(ops, lanes, visited, ctx):
+        return ell_reach_lanes(ops.fwd, lanes, ctx.row_offset, ctx.n_out)
+
+    @staticmethod
+    def min_parent(ops, frontier, visited, ctx):
+        return ell_min_parent(
+            ops.fwd, frontier, ctx.row_offset, ctx.n_out, ctx.row_base
+        )
+
+    @staticmethod
+    def min_parent_lanes(ops, lanes, visited, ctx):
+        return ell_min_parent_lanes(
+            ops.fwd, lanes, ctx.row_offset, ctx.n_out, ctx.row_base
+        )
+
+    @staticmethod
+    def min_dist(ops, dist, frontier, ctx):
+        return ell_min_dist(
+            ops.fwd, dist, frontier, ctx.row_offset, ctx.n_out
+        )
+
+    # or_min edge computes fetch both contributions in one call so backends
+    # with per-call setup cost (collectives, direction predicate) pay it once
+    @staticmethod
+    def reach_parent_dense(ops, frontier, visited, ctx):
+        return (
+            PushBackend.reach_dense(ops, frontier, visited, ctx),
+            PushBackend.min_parent(ops, frontier, visited, ctx),
+        )
+
+    @staticmethod
+    def reach_parent_lanes(ops, lanes, visited, ctx):
+        return (
+            PushBackend.reach_lanes(ops, lanes, visited, ctx),
+            PushBackend.min_parent_lanes(ops, lanes, visited, ctx),
+        )
+
+
+# ---------------------------------------------------------------------------
+# ell_pull — reverse gather with visited-suppression.
+# ---------------------------------------------------------------------------
+
+
+def _global_or(x: jax.Array, ctx: ExtendCtx) -> jax.Array:
+    """Global activation tensor from a state tensor. Replicated layout: the
+    input is already global. Sharded layout: place local rows and OR-union
+    across the graph axes (this is pull's inverse communication pattern —
+    frontier bits travel instead of contributions)."""
+    if not ctx.sharded:
+        return x
+    placed = _place_rows(x, ctx, jnp.zeros((), x.dtype))
+    return or_allreduce(placed, ctx.axes, ctx.or_impl)
+
+
+def _global_min(x: jax.Array, ctx: ExtendCtx, fill) -> jax.Array:
+    if not ctx.sharded:
+        return x
+    return min_allreduce(_place_rows(x, ctx, fill), ctx.axes)
+
+
+def _pull_gather_any(rev: EllGraph, gf: jax.Array) -> jax.Array:
+    """[n_out] bool -> [rows] bool: row v active iff any in-neighbor is."""
+    got = gf.at[rev.indices].get(mode="fill", fill_value=False)
+    return got.any(axis=1)
+
+
+def _pull_gather_lanes(rev: EllGraph, gl: jax.Array) -> jax.Array:
+    """[n_out, L] uint8 -> [rows, L] uint8, degree-chunked like the push
+    scatter so the gather temp stays bounded."""
+    rows, D = rev.indices.shape
+    L = gl.shape[-1]
+    chunk = _deg_chunk(rows, L)
+    if chunk >= D:
+        got = gl.at[rev.indices].get(mode="fill", fill_value=0)
+        return got.max(axis=1)
+    assert D % chunk == 0, (D, chunk)
+
+    def body(i, acc):
+        idx = lax.dynamic_slice_in_dim(rev.indices, i * chunk, chunk, 1)
+        got = gl.at[idx].get(mode="fill", fill_value=0)
+        return jnp.maximum(acc, got.max(axis=1))
+
+    acc0 = jnp.zeros((rows, L), gl.dtype)
+    return lax.fori_loop(0, D // chunk, body, acc0)
+
+
+def _pull_min_parent_lanes(rev: EllGraph, gl: jax.Array) -> jax.Array:
+    rows, D = rev.indices.shape
+    L = gl.shape[-1]
+    chunk = _deg_chunk(rows, 4 * L)
+
+    def step(idx, acc):
+        act = gl.at[idx].get(mode="fill", fill_value=0)  # [rows, c, L]
+        cand = jnp.where(
+            act != 0, idx[:, :, None].astype(jnp.int32), NO_PARENT
+        )
+        return jnp.minimum(acc, cand.min(axis=1))
+
+    acc0 = jnp.full((rows, L), NO_PARENT, jnp.int32)
+    if chunk >= D:
+        return step(rev.indices, acc0)
+    assert D % chunk == 0, (D, chunk)
+    return lax.fori_loop(
+        0,
+        D // chunk,
+        lambda i, acc: step(
+            lax.dynamic_slice_in_dim(rev.indices, i * chunk, chunk, 1), acc
+        ),
+        acc0,
+    )
+
+
+class PullBackend:
+    name = "ell_pull"
+
+    # -- collective-free cores (global activation tensors precomputed) ------
+
+    @staticmethod
+    def _reach_dense(ops, gf, visited, ctx):
+        rev = ops.rev
+        rows = rev.indices.shape[0]
+        reached = _pull_gather_any(rev, gf)
+        if visited is not None:
+            reached &= ~_local_state(visited, rows, ctx)
+        return _place_rows(reached, ctx, False)
+
+    @staticmethod
+    def _reach_lanes(ops, gl, visited, ctx):
+        rev = ops.rev
+        rows = rev.indices.shape[0]
+        reached = _pull_gather_lanes(rev, gl)
+        if visited is not None:
+            vloc = _local_state(visited, rows, ctx)
+            reached = jnp.where(vloc != 0, 0, reached)
+        return _place_rows(reached, ctx, 0)
+
+    @staticmethod
+    def _min_parent(ops, gf, visited, ctx):
+        rev = ops.rev
+        rows = rev.indices.shape[0]
+        got = gf.at[rev.indices].get(mode="fill", fill_value=False)
+        cand = jnp.where(got, rev.indices, NO_PARENT).min(axis=1)
+        if visited is not None:
+            cand = jnp.where(
+                _local_state(visited, rows, ctx), NO_PARENT, cand
+            )
+        return _place_rows(cand, ctx, NO_PARENT)
+
+    @staticmethod
+    def _min_parent_lanes(ops, gl, visited, ctx):
+        rev = ops.rev
+        rows = rev.indices.shape[0]
+        cand = _pull_min_parent_lanes(rev, gl)
+        if visited is not None:
+            vloc = _local_state(visited, rows, ctx)
+            cand = jnp.where(vloc != 0, NO_PARENT, cand)
+        return _place_rows(cand, ctx, NO_PARENT)
+
+    @staticmethod
+    def _min_dist(ops, gdu, ctx):
+        rev = ops.rev
+        w = (
+            rev.weights
+            if rev.weights is not None
+            else jnp.ones_like(rev.indices, dtype=jnp.float32)
+        )
+        got = gdu.at[rev.indices].get(mode="fill", fill_value=jnp.inf)
+        cand = (got + w).min(axis=1)
+        return _place_rows(cand, ctx, jnp.float32(jnp.inf))
+
+    # -- public contract ----------------------------------------------------
+
+    @staticmethod
+    def reach_dense(ops, frontier, visited, ctx):
+        return PullBackend._reach_dense(
+            ops, _global_or(frontier, ctx), visited, ctx
+        )
+
+    @staticmethod
+    def reach_lanes(ops, lanes, visited, ctx):
+        return PullBackend._reach_lanes(
+            ops, _global_or(lanes, ctx), visited, ctx
+        )
+
+    @staticmethod
+    def min_parent(ops, frontier, visited, ctx):
+        return PullBackend._min_parent(
+            ops, _global_or(frontier, ctx), visited, ctx
+        )
+
+    @staticmethod
+    def min_parent_lanes(ops, lanes, visited, ctx):
+        return PullBackend._min_parent_lanes(
+            ops, _global_or(lanes, ctx), visited, ctx
+        )
+
+    @staticmethod
+    def min_dist(ops, dist, frontier, ctx):
+        du = jnp.where(frontier, dist, jnp.inf)
+        return PullBackend._min_dist(
+            ops, _global_min(du, ctx, jnp.float32(jnp.inf)), ctx
+        )
+
+    @staticmethod
+    def reach_parent_dense(ops, frontier, visited, ctx):
+        gf = _global_or(frontier, ctx)  # one union serves both scans
+        return (
+            PullBackend._reach_dense(ops, gf, visited, ctx),
+            PullBackend._min_parent(ops, gf, visited, ctx),
+        )
+
+    @staticmethod
+    def reach_parent_lanes(ops, lanes, visited, ctx):
+        gl = _global_or(lanes, ctx)
+        return (
+            PullBackend._reach_lanes(ops, gl, visited, ctx),
+            PullBackend._min_parent_lanes(ops, gl, visited, ctx),
+        )
+
+
+# ---------------------------------------------------------------------------
+# block_mxu — saturating matmul over per-shard blocks with stripe skipping.
+# ---------------------------------------------------------------------------
+
+
+def block_stripe_activity(lane_blocks: jax.Array) -> jax.Array:
+    """[rb, B, L] -> [rb] bool: which source row-block stripes hold any
+    frontier bit. The Pallas kernel uses the same bitmap to skip inactive
+    blocks via scalar-prefetch indices; here it masks contributions (and is
+    the measured 'touched blocks' economy in benchmarks)."""
+    return (lane_blocks != 0).any(axis=(1, 2))
+
+
+class BlockBackend:
+    """OR-reach on the MXU block path; candidate-parent / weighted-relax
+    scans have no saturating-0/1 formulation and stay on the push ELL
+    (same merged values either way, so results remain bit-identical)."""
+
+    name = "block_mxu"
+
+    @staticmethod
+    def reach_lanes(ops, lanes, visited, ctx):
+        sb = ops.blocks
+        blocks = sb.blocks[0]
+        brows = sb.block_rows[0]
+        bcols = sb.block_cols[0]
+        B = sb.block_size
+        rows = ops.fwd.indices.shape[0]
+        local = _local_state(lanes, rows, ctx)
+        L = local.shape[-1]
+        lane_blocks = local.reshape(rows // B, B, L)
+        act = block_stripe_activity(lane_blocks)
+        src = jnp.take(lane_blocks, brows, axis=0)  # [nb, B, L]
+        partial = lax.dot_general(
+            blocks.astype(jnp.int32),
+            src.astype(jnp.int32),
+            dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.int32,
+        )  # [nb, B(dst), L]
+        hit = ((partial > 0) & act[brows][:, None, None]).astype(jnp.uint8)
+        G = ctx.n_out // B
+        out = jnp.zeros((G, B, L), jnp.uint8)
+        out = out.at[bcols].max(hit, mode="drop")  # sentinel col G drops
+        return out.reshape(ctx.n_out, L)
+
+    @staticmethod
+    def reach_dense(ops, frontier, visited, ctx):
+        lanes = frontier[:, None].astype(jnp.uint8)
+        return BlockBackend.reach_lanes(ops, lanes, visited, ctx)[:, 0] != 0
+
+    min_parent = staticmethod(PushBackend.min_parent)
+    min_parent_lanes = staticmethod(PushBackend.min_parent_lanes)
+    min_dist = staticmethod(PushBackend.min_dist)
+
+    @staticmethod
+    def reach_parent_dense(ops, frontier, visited, ctx):
+        return (
+            BlockBackend.reach_dense(ops, frontier, visited, ctx),
+            PushBackend.min_parent(ops, frontier, visited, ctx),
+        )
+
+    @staticmethod
+    def reach_parent_lanes(ops, lanes, visited, ctx):
+        return (
+            BlockBackend.reach_lanes(ops, lanes, visited, ctx),
+            PushBackend.min_parent_lanes(ops, lanes, visited, ctx),
+        )
+
+
+# ---------------------------------------------------------------------------
+# direction="auto" — Beamer alpha/beta switch between push and pull.
+# ---------------------------------------------------------------------------
+
+
+class AutoBackend:
+    """Per-iteration push/pull choice under fixed shapes.
+
+    The predicate is a pure function of (frontier, visited) reduced over the
+    graph axes, so every device of a sync group agrees; the pull branch's
+    global activation tensors are computed *before* the ``lax.cond`` so the
+    branches themselves hold no collectives (deadlock-free under shard_map).
+    """
+
+    name = "dopt"
+
+    def __init__(self, spec: ExtendSpec):
+        self.alpha = spec.alpha
+        self.beta = spec.beta
+
+    def _use_pull(self, ops, frontier, visited, ctx):
+        g = ops.fwd
+        rows = g.indices.shape[0]
+        floc = _local_state(frontier, rows, ctx)
+        act = (floc != 0) if floc.ndim == 1 else (floc != 0).any(axis=-1)
+        deg = g.degrees.astype(jnp.float32)
+        n_f = act.sum(dtype=jnp.float32)
+        m_f = jnp.sum(deg * act)
+        if visited is not None:
+            vloc = _local_state(visited, rows, ctx)
+            vis = (vloc != 0) if vloc.ndim == 1 else (vloc != 0).any(-1)
+            m_u = jnp.sum(deg * ~vis)
+        else:
+            m_u = deg.sum() - m_f
+        stats = jnp.stack([n_f, m_f, m_u])
+        if ctx.axes:
+            stats = lax.psum(stats, ctx.axes)
+        n_f, m_f, m_u = stats[0], stats[1], stats[2]
+        return (m_f * self.alpha > m_u) & (n_f * self.beta > ctx.n_out)
+
+    def _switch(self, ops, frontier, visited, ctx, pull_fn, push_fn):
+        pred = self._use_pull(ops, frontier, visited, ctx)
+        return lax.cond(pred, pull_fn, push_fn)
+
+    def reach_dense(self, ops, frontier, visited, ctx):
+        gf = _global_or(frontier, ctx)
+        return self._switch(
+            ops, frontier, visited, ctx,
+            lambda: PullBackend._reach_dense(ops, gf, visited, ctx),
+            lambda: PushBackend.reach_dense(ops, frontier, visited, ctx),
+        )
+
+    def reach_lanes(self, ops, lanes, visited, ctx):
+        gl = _global_or(lanes, ctx)
+        return self._switch(
+            ops, lanes, visited, ctx,
+            lambda: PullBackend._reach_lanes(ops, gl, visited, ctx),
+            lambda: PushBackend.reach_lanes(ops, lanes, visited, ctx),
+        )
+
+    def min_parent(self, ops, frontier, visited, ctx):
+        gf = _global_or(frontier, ctx)
+        return self._switch(
+            ops, frontier, visited, ctx,
+            lambda: PullBackend._min_parent(ops, gf, visited, ctx),
+            lambda: PushBackend.min_parent(ops, frontier, visited, ctx),
+        )
+
+    def min_parent_lanes(self, ops, lanes, visited, ctx):
+        gl = _global_or(lanes, ctx)
+        return self._switch(
+            ops, lanes, visited, ctx,
+            lambda: PullBackend._min_parent_lanes(ops, gl, visited, ctx),
+            lambda: PushBackend.min_parent_lanes(ops, lanes, visited, ctx),
+        )
+
+    def min_dist(self, ops, dist, frontier, ctx):
+        du = jnp.where(frontier, dist, jnp.inf)
+        gdu = _global_min(du, ctx, jnp.float32(jnp.inf))
+        return self._switch(
+            ops, frontier, None, ctx,
+            lambda: PullBackend._min_dist(ops, gdu, ctx),
+            lambda: PushBackend.min_dist(ops, dist, frontier, ctx),
+        )
+
+    # one union + one predicate + one cond for or_min edge computes
+    def reach_parent_dense(self, ops, frontier, visited, ctx):
+        gf = _global_or(frontier, ctx)
+        return self._switch(
+            ops, frontier, visited, ctx,
+            lambda: (
+                PullBackend._reach_dense(ops, gf, visited, ctx),
+                PullBackend._min_parent(ops, gf, visited, ctx),
+            ),
+            lambda: PushBackend.reach_parent_dense(
+                ops, frontier, visited, ctx
+            ),
+        )
+
+    def reach_parent_lanes(self, ops, lanes, visited, ctx):
+        gl = _global_or(lanes, ctx)
+        return self._switch(
+            ops, lanes, visited, ctx,
+            lambda: (
+                PullBackend._reach_lanes(ops, gl, visited, ctx),
+                PullBackend._min_parent_lanes(ops, gl, visited, ctx),
+            ),
+            lambda: PushBackend.reach_parent_lanes(ops, lanes, visited, ctx),
+        )
+
+
+_FIXED = {
+    "ell_push": PushBackend,
+    "ell_pull": PullBackend,
+    "block_mxu": BlockBackend,
+}
+
+
+def make_backend(spec: ExtendSpec):
+    """ExtendSpec -> backend object implementing the primitive contract."""
+    if spec.direction == "auto":
+        return AutoBackend(spec)
+    return _FIXED[spec.backend]

@@ -9,10 +9,16 @@ Three interchangeable layouts for the set(s) of active nodes:
 - packed ``[n, L//32] uint32`` — bit-packed lanes, used on the wire for
   inter-chip frontier unions (8× less traffic than uint8 lanes).
 
-The paper's sparse-frontier optimization (Ligra's 1/8 switch) does not transfer
-to SPMD lockstep execution as data-dependent compaction; its economy is
-recovered at block granularity by the msbfs_extend kernel (all-zero 128-wide
-blocks are skipped).
+The paper's sparse-frontier optimization (Ligra's 1/8 switch) does not
+transfer to SPMD lockstep execution as data-dependent *compaction* — shapes
+are fixed under jit/while_loop — but its economy IS realized here, two ways
+(see ``core.extend``): (1) a Beamer-style direction-optimizing switch — a
+per-iteration ``lax.cond`` between the push scatter and a visited-suppressed
+pull over the reverse ELL, chosen by alpha/beta thresholds on frontier
+size/edge mass with fixed shapes on both branches; and (2) at block
+granularity by the block_mxu backend / msbfs_extend kernel, which skips both
+statically-zero and frontier-empty 128-wide blocks via a per-row-block
+activity bitmap.
 """
 from __future__ import annotations
 

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from ..graph.csr import EllGraph
 from .edge_compute import EDGE_COMPUTES, NO_PARENT
+from .extend import ExtendCtx, as_operands, as_spec, make_backend
 
 
 class IFEResult(NamedTuple):
@@ -35,19 +36,35 @@ def merge_identity(merge: str, contribution):
 
 
 def run_ife(
-    graph: EllGraph,
+    graph,
     sources: jax.Array,
     edge_compute: str = "sp_lengths",
     max_iters: int | None = None,
+    extend="ell_push",
 ) -> IFEResult:
     """Run one IFE subroutine (one source morsel) to convergence.
 
     ``sources``: [k] int32 — for dense edge computes these all seed one shared
     frontier (a multi-source *query*); for msbfs_* computes sources[l] seeds
     lane l. Out-of-range ids are inert (empty lanes).
+
+    ``graph``: an ``EllGraph`` (push-only) or a ``GraphOperands`` bundle
+    (see ``core.extend.build_operands``). ``extend`` selects the extension
+    backend ("ell_push" | "ell_pull" | "block_mxu" | "dopt" or an
+    ``ExtendSpec``); all choices are bit-identical in final state.
     """
     ec = EDGE_COMPUTES[edge_compute]
-    n = graph.n_nodes
+    spec = as_spec(extend)
+    ops = as_operands(graph)
+    if spec.needs_rev and ops.rev is None:
+        raise ValueError(f"extend={spec.backend!r} needs reverse operands; "
+                         "build the graph with core.extend.build_operands")
+    if spec.needs_blocks and ops.blocks is None:
+        raise ValueError("extend='block_mxu' needs block operands; "
+                         "build the graph with core.extend.build_operands")
+    be = make_backend(spec)
+    n = ops.n_nodes
+    ctx = ExtendCtx(n_out=n)
     cap = jnp.int32(n if max_iters is None else max_iters)
     state0 = ec.init(n, sources)
 
@@ -57,7 +74,7 @@ def run_ife(
 
     def body(carry):
         state, it = carry
-        contribution = ec.local_extend(graph, state)
+        contribution = ec.extend(be, ops, state, ctx)
         state = ec.apply(state, contribution, it)
         return state, it + 1
 
@@ -65,16 +82,18 @@ def run_ife(
     return IFEResult(state=state, iterations=iters)
 
 
-@partial(jax.jit, static_argnames=("edge_compute", "max_iters"))
-def run_ife_jit(graph, sources, edge_compute="sp_lengths", max_iters=None):
-    return run_ife(graph, sources, edge_compute, max_iters)
+@partial(jax.jit, static_argnames=("edge_compute", "max_iters", "extend"))
+def run_ife_jit(graph, sources, edge_compute="sp_lengths", max_iters=None,
+                extend="ell_push"):
+    return run_ife(graph, sources, edge_compute, max_iters, extend)
 
 
 def run_ife_batch(
-    graph: EllGraph,
+    graph,
     source_batch: jax.Array,
     edge_compute: str = "sp_lengths",
     max_iters: int | None = None,
+    extend="ell_push",
 ) -> IFEResult:
     """vmap over independent source morsels: [m] int32 -> batched states.
 
@@ -82,20 +101,21 @@ def run_ife_batch(
     unsynchronized private state (paper §3.1 'fast data structures without
     synchronization primitives').
     """
-    fn = lambda s: run_ife(graph, s[None], edge_compute, max_iters)
+    fn = lambda s: run_ife(graph, s[None], edge_compute, max_iters, extend)
     return jax.vmap(fn)(source_batch)
 
 
 def run_ife_scan(
-    graph: EllGraph,
+    graph,
     source_batch: jax.Array,
     edge_compute: str = "sp_lengths",
     max_iters: int | None = None,
+    extend="ell_push",
 ) -> IFEResult:
     """Sequential (lax.map) variant of run_ife_batch — the true 1T1S semantics
     (one morsel at a time per worker), used when per-source state does not fit
     m-way vmapped. Same results, lower peak memory, serial."""
-    fn = lambda s: run_ife(graph, s[None], edge_compute, max_iters)
+    fn = lambda s: run_ife(graph, s[None], edge_compute, max_iters, extend)
     return jax.lax.map(fn, source_batch)
 
 

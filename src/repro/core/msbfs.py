@@ -8,9 +8,14 @@ adjacency scan across all 64. On TPU we make the 64 lanes a real tensor axis:
                           = (A_blockᵀ @ F_block)[dst, lane] > 0
 
 i.e. saturating int8 matmul on the MXU over 128×128 adjacency blocks, skipping
-all-zero blocks (block-sparsity ⇒ the 'fewer scans' economy). This module is
-the pure-jnp formulation; ``repro.kernels.msbfs_extend`` is the Pallas kernel
-with explicit VMEM BlockSpecs, validated against it.
+all-zero blocks (block-sparsity ⇒ the 'fewer scans' economy). On top of the
+*static* skip list, extension is density-adaptive at runtime: a per-row-block
+frontier activity bitmap masks (jnp path) or DMA-skips (Pallas path)
+adjacency blocks whose source stripe holds no frontier bit this iteration —
+the block-granular realization of Ligra/Beamer's sparse-frontier economy
+(see ``core.extend`` for the full direction-optimizing switch). This module
+is the pure-jnp formulation; ``repro.kernels.msbfs_extend`` is the Pallas
+kernel with explicit VMEM BlockSpecs, validated against it.
 """
 from __future__ import annotations
 
@@ -20,16 +25,37 @@ import jax.numpy as jnp
 from ..graph.csr import BlockAdjacency
 
 
+def frontier_block_activity(
+    adj: BlockAdjacency, lanes: jax.Array
+) -> jax.Array:
+    """[n, L] -> [n_blocks] bool: which *materialized* adjacency blocks have
+    any frontier bit in their source row-block stripe this iteration. This is
+    the dynamic skip bitmap (static zero blocks are already absent)."""
+    n, L = lanes.shape
+    B = adj.block_size
+    stripe = (lanes.reshape(n // B, B, L) != 0).any(axis=(1, 2))
+    return stripe[adj.block_rows]
+
+
+def active_block_count(adj: BlockAdjacency, lanes: jax.Array) -> jax.Array:
+    """Measured 'touched blocks' for one extension: the adjacency tiles the
+    block path actually consumes under the activity skip (benchmarked by
+    benchmarks/direction_opt.py, realized as elided DMAs by the kernel)."""
+    return frontier_block_activity(adj, lanes).sum(dtype=jnp.int32)
+
+
 def block_extend_lanes(adj: BlockAdjacency, lanes: jax.Array) -> jax.Array:
     """Frontier extension over the block-sparse adjacency.
 
     lanes: [n, L] uint8 (n divisible by block size). Returns reached [n, L]
-    uint8. Only materialized (nonzero) adjacency blocks contribute.
+    uint8. Only materialized (nonzero) adjacency blocks whose source stripe
+    is frontier-active contribute.
     """
     n, L = lanes.shape
     B = adj.block_size
     g = n // B
     lane_blocks = lanes.reshape(g, B, L)
+    act = frontier_block_activity(adj, lanes)  # [nb]
     # gather source-lane blocks for every nonzero adjacency block
     src = jnp.take(lane_blocks, adj.block_rows, axis=0)  # [nb, B, L]
     # OR-aggregation as saturating matmul: A[src,dst]ᵀ @ F[src,lane]
@@ -39,7 +65,7 @@ def block_extend_lanes(adj: BlockAdjacency, lanes: jax.Array) -> jax.Array:
         dimension_numbers=(((1,), (1,)), ((0,), (0,))),
         preferred_element_type=jnp.int32,
     )  # [nb, B(dst), L]
-    hit = (partial > 0).astype(jnp.uint8)
+    hit = ((partial > 0) & act[:, None, None]).astype(jnp.uint8)
     out = jnp.zeros((g, B, L), jnp.uint8)
     out = out.at[adj.block_cols].max(hit, mode="drop")
     return out.reshape(n, L)

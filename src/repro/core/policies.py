@@ -135,6 +135,38 @@ def recommend_policy(
     return "ntks"
 
 
+def recommend_backend(
+    edge_compute: str = "sp_lengths",
+    avg_degree: float = 8.0,
+    n_nodes: int | None = None,
+    lanes: int = 1,
+    block: int = 128,
+) -> str:
+    """Physical scan layout for the extension step (core.extend backends).
+
+    The EmptyHeaded lesson as a dispatch rule: pick the layout by expected
+    frontier/adjacency density, not globally.
+
+    - ``bellman_ford`` (weighted relax, no monotone visited set): nothing to
+      suppress, so bottom-up never wins — stay on the forward push scatter.
+    - 64-wide lane morsels on graphs dense at block granularity (expected
+      edges per ``block``² tile ≳ 1, i.e. ``avg_degree·block ≳ n``): the
+      saturating-matmul block path amortizes one adjacency scan over all
+      lanes on the MXU and skips frontier-empty stripes.
+    - everything else (BFS-family traversals): the Beamer alpha/beta
+      direction switch — push while frontiers are sparse, pull with
+      visited-suppression once the frontier's edge mass dominates.
+    """
+    if edge_compute == "bellman_ford":
+        return "ell_push"
+    dense_blocks = (
+        n_nodes is not None and avg_degree * block * block >= n_nodes
+    )  # expected edges per block² tile = avg_degree·block²/n ≥ 1
+    if lanes >= 64 and dense_blocks:
+        return "block_mxu"
+    return "dopt"
+
+
 def recommend_k(avg_degree: float, n_threads: int = 32) -> int:
     """Paper §5.5 / Fig 13: optimal concurrent source morsels k vs density.
     Degradation onsets observed at k=16/8/4 for avg degree 100/250/500."""

@@ -48,9 +48,13 @@ def block_spmm(
     block_rows: jax.Array,  # [nb] int32
     block_cols: jax.Array,  # [nb] int32 non-decreasing, covering all cols
     x: jax.Array,  # [G, B, F] features by source block
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Returns [G, B, F] f32: per-destination aggregated features."""
+    """Returns [G, B, F] f32: per-destination aggregated features.
+
+    ``interpret=None`` auto-detects: compile on TPU, interpret elsewhere."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     nb, B, _ = blocks.shape
     G, _, F = x.shape
     FT = min(F, 128)

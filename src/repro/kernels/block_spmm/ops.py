@@ -71,7 +71,7 @@ def spmm_blocks_from_csr(
 def spmm(
     sb: SpmmBlocks,
     x: jax.Array,  # [n, F] node features (n divisible by block)
-    interpret: bool = True,
+    interpret: bool | None = None,
     use_ref: bool = False,
 ) -> jax.Array:
     """Aggregated features Y[v] = sum_u A[u,v] X[u]: [n, F] f32."""

@@ -79,8 +79,11 @@ def flash_attention(
     causal: bool = True,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    if interpret is None:
+        # auto-detect: compile for real on TPU, interpret elsewhere
+        interpret = jax.default_backend() != "tpu"
     B, H, S, D = q.shape
     assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
     scale = 1.0 / (D ** 0.5)

@@ -12,5 +12,5 @@ def mha(q, k, v, causal: bool = True, use_kernel: bool | None = None):
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     if use_kernel:
-        return flash_attention(q, k, v, causal=causal, interpret=False)
+        return flash_attention(q, k, v, causal=causal)
     return attention_ref(q, k, v, causal=causal)

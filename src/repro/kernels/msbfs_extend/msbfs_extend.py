@@ -13,12 +13,22 @@ to accumulate — all-zero adjacency blocks are never touched. This is the
 paper's MS-BFS "share one scan across 64 lanes" economy, realized as
 block-sparse SpMM on the MXU.
 
+Direction-optimizing upgrade: static block-sparsity only skips structurally
+zero adjacency; blocks whose *frontier stripe* is empty this iteration still
+stream. Two more prefetched scalars fix that — ``active[i]`` (does grid step
+i's source stripe hold any frontier bit?) gates the MXU step with ``pl.when``,
+and ``adj_sel[i]`` (the last active step ≤ i, a cummax computed in jnp by the
+wrapper) replaces ``i`` in the adjacency/lane index maps, so an inactive
+step's index map equals its predecessor's and Pallas elides the DMA entirely.
+Net: per-iteration adjacency traffic ∝ frontier-active blocks, matching the
+activity bitmap the jnp path (core.msbfs / extend.block_mxu) masks with.
+
 VMEM working set per step (B=128, L=64):
   adj tile  128·128 int8   = 16 KiB
   lane tile 128·64  int8   =  8 KiB
   out tile  128·64  int32  = 32 KiB      → ~56 KiB ≪ 16 MiB VMEM; the
 pipeline depth is bounded by DMA of the adj tile stream (the dominant stream),
-which is exactly the term the block-sparse skip list minimizes.
+which is exactly the term the activity skip list minimizes.
 """
 from __future__ import annotations
 
@@ -30,26 +40,38 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(rows_ref, cols_ref, adj_ref, lanes_ref, out_ref):
+def _default_interpret(interpret):
+    """interpret=None ⇒ auto: compile for real on TPU, interpret elsewhere."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _kernel(rows_ref, cols_ref, act_ref, sel_ref, adj_ref, lanes_ref, out_ref):
     i = pl.program_id(0)
     is_first = jnp.where(
         i == 0, True, cols_ref[i] != cols_ref[jnp.maximum(i - 1, 0)]
     )
 
+    # output tiles still initialize on their first visit even when every
+    # contributing stripe is inactive (empty frontier => zero reach)
     @pl.when(is_first)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    a = adj_ref[0].astype(jnp.int8)  # [B, B]   A[u, v]
-    f = lanes_ref[0].astype(jnp.int8)  # [B, L]   F[u, l]
-    # OR-aggregation as saturating matmul: contract the source dim on the MXU.
-    partial = jax.lax.dot_general(
-        a,
-        f,
-        dimension_numbers=(((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32,
-    )  # [B(v), L]
-    out_ref[0] = out_ref[0] | (partial > 0).astype(jnp.int32)
+    @pl.when(act_ref[i] != 0)
+    def _step():
+        a = adj_ref[0].astype(jnp.int8)  # [B, B]   A[u, v]
+        f = lanes_ref[0].astype(jnp.int8)  # [B, L]   F[u, l]
+        # OR-aggregation as saturating matmul: contract the source dim on
+        # the MXU.
+        partial = jax.lax.dot_general(
+            a,
+            f,
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )  # [B(v), L]
+        out_ref[0] = out_ref[0] | (partial > 0).astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -58,28 +80,42 @@ def msbfs_extend_blocks(
     block_rows: jax.Array,  # [nb] int32 (src block ids)
     block_cols: jax.Array,  # [nb] int32 (dst block ids, non-decreasing)
     lanes: jax.Array,  # [G, B, L] int8/uint8 frontier lane blocks
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Returns reach counts [G, B, L] int32 (>0 where reached)."""
+    interpret = _default_interpret(interpret)
     nb, B, _ = blocks.shape
     G, _, L = lanes.shape
+    # per-step frontier-stripe activity + effective adjacency index: an
+    # inactive step re-addresses the previously fetched tiles (cummax), so
+    # its DMA is skipped and its compute is pl.when'd out
+    stripe_act = (lanes != 0).any(axis=(1, 2))  # [G]
+    act = stripe_act[block_rows].astype(jnp.int32)  # [nb]
+    steps = jnp.arange(nb, dtype=jnp.int32)
+    sel = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(act != 0, steps, -1)
+    )
+    sel = jnp.maximum(sel, 0)  # leading inactive run: any tile, compute off
     grid = (nb,)
     out = pl.pallas_call(
         _kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=4,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, B, B), lambda i, rows, cols: (i, 0, 0)),
                 pl.BlockSpec(
-                    (1, B, L), lambda i, rows, cols: (rows[i], 0, 0)
+                    (1, B, B), lambda i, rows, cols, act, sel: (sel[i], 0, 0)
+                ),
+                pl.BlockSpec(
+                    (1, B, L),
+                    lambda i, rows, cols, act, sel: (rows[sel[i]], 0, 0),
                 ),
             ],
             out_specs=pl.BlockSpec(
-                (1, B, L), lambda i, rows, cols: (cols[i], 0, 0)
+                (1, B, L), lambda i, rows, cols, act, sel: (cols[i], 0, 0)
             ),
         ),
         out_shape=jax.ShapeDtypeStruct((G, B, L), jnp.int32),
         interpret=interpret,
-    )(block_rows, block_cols, blocks, lanes.astype(jnp.int8))
+    )(block_rows, block_cols, act, sel, blocks, lanes.astype(jnp.int8))
     return out

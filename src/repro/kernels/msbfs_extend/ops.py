@@ -57,7 +57,7 @@ def kernel_blocks_from_csr(csr: CSRGraph, block: int = 128) -> KernelBlocks:
 def msbfs_extend(
     kb: KernelBlocks,
     lanes: jax.Array,  # [n, L] uint8 (n divisible by block size)
-    interpret: bool = True,
+    interpret: bool | None = None,
     use_ref: bool = False,
 ) -> jax.Array:
     """Frontier lane extension: [n, L] uint8 -> [n, L] uint8 reach mask."""

@@ -52,11 +52,11 @@ class QueryService:
         return self.scheduler.cache._engines
 
     def query(self, sources, returns_paths=False, policy=None,
-              state_layout="replicated"):
+              state_layout="replicated", backend=None):
         """One request batch -> (result state, policy used)."""
         out = self.scheduler.query(
             sources, returns_paths=returns_paths, policy=policy,
-            state_layout=state_layout,
+            state_layout=state_layout, backend=backend,
         )
         self.last_outcome = out
         return out.result, out.policy
@@ -73,6 +73,11 @@ def main(argv=None) -> int:
                     help="return actual paths (parents), not lengths")
     ap.add_argument("--policy", default=None,
                     choices=(None, "1t1s", "nt1s", "ntks", "ntkms"))
+    ap.add_argument("--backend", default=None,
+                    choices=(None, "ell_push", "ell_pull", "block_mxu",
+                             "dopt", "recommend"),
+                    help="frontier-extension backend (None = ell_push; "
+                         "'recommend' picks per batch via recommend_backend)")
     ap.add_argument("--static", action="store_true",
                     help="disable the adaptive hybrid (static dispatch)")
     args = ap.parse_args(argv)
@@ -94,7 +99,7 @@ def main(argv=None) -> int:
         )
         t0 = time.perf_counter()
         res, pol = svc.query(sources, returns_paths=args.paths,
-                             policy=args.policy)
+                             policy=args.policy, backend=args.backend)
         if args.paths and not pol.startswith("ntkms"):
             dests = rng.integers(0, csr.n_nodes, 4).astype(np.int32)
             paths = reconstruct_paths(

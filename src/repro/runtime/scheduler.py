@@ -48,13 +48,16 @@ import numpy as np
 
 from ..core import (
     POLICIES,
+    ExtendSpec,
     IFEResult,
     MorselPolicy,
+    as_spec,
     build_engine,
     build_resume_engine,
     hybrid_phases,
     pad_sources,
     prepare_graph,
+    recommend_backend,
     recommend_k,
     recommend_policy,
 )
@@ -70,7 +73,9 @@ def _pow2ceil(x: int) -> int:
 class EngineKey:
     """Cache identity of one compiled engine. ``kind`` distinguishes the
     static single-phase program, the per-shard-sync phase-1 program, and
-    the state-resuming phase-2 program — same policy tuple, different HLO."""
+    the state-resuming phase-2 program — same policy tuple, different HLO.
+    ``extend`` carries the extension backend + direction mode (an
+    ``ExtendSpec``): each backend is a different scan program."""
 
     kind: str  # "static" | "phase1" | "resume"
     policy: MorselPolicy
@@ -78,6 +83,7 @@ class EngineKey:
     n_nodes_padded: int
     max_iters: int
     state_layout: str
+    extend: ExtendSpec = ExtendSpec()
 
 
 class EngineCache:
@@ -135,6 +141,7 @@ class AdaptiveScheduler:
         adaptive: bool = True,
         phase1_iters: int | None = None,
         max_inflight: int | None = None,
+        backend="ell_push",
     ):
         self.mesh = mesh
         self.csr = csr
@@ -143,8 +150,11 @@ class AdaptiveScheduler:
         self.adaptive = adaptive
         self.phase1_iters = phase1_iters  # pin the phase-1 budget (tests)
         self.max_inflight = max_inflight  # override recommend_k (tests)
+        # default extension backend; per-query override via query(backend=);
+        # "recommend" applies recommend_backend per batch
+        self.backend = backend
         self.cache = EngineCache()
-        self._graphs: dict[tuple, tuple] = {}  # graph_axes -> (EllGraph, n_pad)
+        self._graphs: dict[tuple, tuple] = {}  # (axes, operands) -> (ops, n_pad)
         # p90 per-morsel iteration count of recent batches drives the
         # phase-1 budget: most morsels should converge inside phase 1.
         self._iter_p90s: collections.deque = collections.deque(maxlen=32)
@@ -154,14 +164,21 @@ class AdaptiveScheduler:
 
     # ------------------------------------------------------------- engines
 
-    def _graph_for(self, policy: MorselPolicy):
-        key = policy.graph_axes
+    def _graph_for(self, policy: MorselPolicy, spec: ExtendSpec = ExtendSpec()):
+        # operand bundles are shared by every spec needing the same physical
+        # structures (rev/blocks), not per backend string
+        key = (
+            policy.graph_axes,
+            spec.needs_rev,
+            spec.needs_blocks,
+            spec.pad_block,
+        )
         if key not in self._graphs:
             # pad for mesh.size so every policy's graph shares one n_pad and
             # phase-1 state can resume on the phase-2 graph unchanged
             self._graphs[key] = prepare_graph(
                 self.csr, self.mesh, policy, self.max_deg,
-                pad_shards=self.mesh.size,
+                pad_shards=self.mesh.size, extend=spec,
             )
         return self._graphs[key]
 
@@ -173,22 +190,25 @@ class AdaptiveScheduler:
         n_pad: int,
         max_iters: int | None = None,
         state_layout: str = "replicated",
+        extend: ExtendSpec = ExtendSpec(),
     ):
         cap = int(max_iters if max_iters is not None else self.max_iters)
-        key = EngineKey(kind, policy, edge_compute, n_pad, cap, state_layout)
+        key = EngineKey(
+            kind, policy, edge_compute, n_pad, cap, state_layout, extend
+        )
         if kind == "static":
             builder = lambda: build_engine(
                 self.mesh, policy, edge_compute, n_pad, cap,
-                state_layout=state_layout,
+                state_layout=state_layout, extend=extend,
             )
         elif kind == "phase1":
             builder = lambda: build_engine(
                 self.mesh, policy, edge_compute, n_pad, cap,
-                state_layout=state_layout, sync="shard",
+                state_layout=state_layout, sync="shard", extend=extend,
             )
         elif kind == "resume":
             builder = lambda: build_resume_engine(
-                self.mesh, policy, edge_compute, n_pad, cap
+                self.mesh, policy, edge_compute, n_pad, cap, extend=extend
             )
         else:
             raise ValueError(f"unknown engine kind: {kind}")
@@ -211,7 +231,8 @@ class AdaptiveScheduler:
         if iters.size:
             self._iter_p90s.append(float(np.percentile(iters, 90)))
 
-    def _run_hybrid(self, pol, ec, g, n_pad, morsels, state_layout):
+    def _run_hybrid(self, pol, ec, g, n_pad, morsels, state_layout,
+                    extend=ExtendSpec()):
         """Two-phase hybrid on one morsel batch. Returns a QueryOutcome
         whose result state is bit-identical to the static engine's."""
         p1, p2 = hybrid_phases(
@@ -219,7 +240,9 @@ class AdaptiveScheduler:
             or_impl=pol.or_impl,
         )
         budget = self._phase1_budget()
-        eng1 = self.engine("phase1", p1, ec, n_pad, max_iters=budget)
+        eng1 = self.engine(
+            "phase1", p1, ec, n_pad, max_iters=budget, extend=extend
+        )
         t0 = time.perf_counter()
         res1 = jax.block_until_ready(eng1(g, morsels))
         t1 = time.perf_counter()
@@ -252,9 +275,9 @@ class AdaptiveScheduler:
         sub_it = np.zeros((kp,), iters1.dtype)
         sub_it[: idx.size] = iters1[idx]
 
-        g2, n_pad2 = self._graph_for(p2)
+        g2, n_pad2 = self._graph_for(p2, extend)
         assert n_pad2 == n_pad, (n_pad2, n_pad)
-        eng2 = self.engine("resume", p2, ec, n_pad)
+        eng2 = self.engine("resume", p2, ec, n_pad, extend=extend)
         res2 = jax.block_until_ready(eng2(g2, sub_state, sub_it))
         t2 = time.perf_counter()
         phase_ms["phase2"] = (t2 - t1) * 1e3
@@ -279,9 +302,11 @@ class AdaptiveScheduler:
             phase_ms=phase_ms, phase1_budget=budget,
         )
 
-    def _run_static(self, pol, ec, g, n_pad, morsels, state_layout):
+    def _run_static(self, pol, ec, g, n_pad, morsels, state_layout,
+                    extend=ExtendSpec()):
         eng = self.engine(
-            "static", pol, ec, n_pad, state_layout=state_layout
+            "static", pol, ec, n_pad, state_layout=state_layout,
+            extend=extend,
         )
         t0 = time.perf_counter()
         res = jax.block_until_ready(eng(g, morsels))
@@ -298,12 +323,18 @@ class AdaptiveScheduler:
         returns_paths: bool = False,
         policy: str | None = None,
         state_layout: str = "replicated",
+        backend=None,
     ) -> QueryOutcome:
         """Serve one request batch of source nodes.
 
         Policy is chosen per batch via ``recommend_policy`` unless pinned;
         execution is two-phase hybrid whenever eligible (adaptive mode,
         replicated state, source-level morsels to re-dispatch).
+
+        ``backend`` selects the frontier-extension backend for this batch
+        ("ell_push" | "ell_pull" | "block_mxu" | "dopt" | an ExtendSpec;
+        "recommend" applies ``recommend_backend``); None uses the
+        scheduler's default. All choices are bit-identical in result.
         """
         sources = np.asarray(sources, np.int32).reshape(-1)
         name = policy or recommend_policy(
@@ -318,7 +349,14 @@ class AdaptiveScheduler:
             ec = "msbfs_parents" if returns_paths else "msbfs_lengths"
         else:
             ec = "sp_parents" if returns_paths else "sp_lengths"
-        g, n_pad = self._graph_for(pol)
+        backend = backend if backend is not None else self.backend
+        if backend == "recommend":
+            backend = recommend_backend(
+                ec, self.csr.avg_degree, n_nodes=self.csr.n_nodes,
+                lanes=pol.lanes,
+            )
+        spec = as_spec(backend)
+        g, n_pad = self._graph_for(pol, spec)
         src_shards = _axes_size(self.mesh, pol.source_axes)
         morsels = pad_sources(sources, src_shards, pol.lanes, n_pad)
 
@@ -327,7 +365,8 @@ class AdaptiveScheduler:
             and state_layout == "replicated"
             and bool(pol.source_axes)  # nT1S has no source morsels to split
         )
-        run = self._run_hybrid if use_hybrid else self._run_static
+        run_fn = self._run_hybrid if use_hybrid else self._run_static
+        run = lambda *args: run_fn(*args, extend=spec)
 
         # paper Fig 13: dense graphs cap concurrent source morsels (k);
         # oversized batches run in fixed-size chunks, stitched on host.

@@ -1,0 +1,280 @@
+"""Extension-backend parity corpus (ISSUE 2 acceptance).
+
+ell_push / ell_pull / block_mxu and the direction-optimized switch must
+produce bit-identical final states vs the numpy oracle and vs each other,
+across ER and power-law graphs, all dense edge computes, the msbfs lane
+computes, and both engine state layouts; plus operand-construction and
+frontier pack/unpack invariants.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from proptest import given, st_ints, st_sampled, st_seeds
+from oracle import bfs_levels
+
+from repro.graph.csr import CSRGraph, ell_from_csr, truncate_csr
+from repro.graph.generators import erdos_renyi, powerlaw
+from repro.core import (
+    build_operands,
+    policy_ntks,
+    policy_ntkms,
+    recommend_backend,
+    run_recursive_query,
+)
+from repro.core.extend import ExtendSpec, GraphOperands, as_spec
+from repro.core.ife import run_ife
+from repro.launch.mesh import make_mesh
+
+BACKENDS = ["ell_push", "ell_pull", "block_mxu", "dopt"]
+DENSE_ECS = ["sp_lengths", "sp_parents", "bellman_ford", "reachability"]
+
+
+def mesh11():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def full_operands(csr, block=128):
+    """One bundle carrying every operand at a common pad so final states
+    are comparable bitwise across backends (engines strip what they don't
+    scan)."""
+    pull, n1 = build_operands(csr, "dopt", block=block)
+    blk, n2 = build_operands(
+        csr, ExtendSpec(backend="block_mxu", block=block), block=block
+    )
+    assert n1 == n2
+    return GraphOperands(fwd=pull.fwd, rev=pull.rev, blocks=blk.blocks), n1
+
+
+def assert_states_equal(a, b, msg=""):
+    fa = jax.tree_util.tree_leaves(a)
+    fb = jax.tree_util.tree_leaves(b)
+    assert len(fa) == len(fb), msg
+    for x, y in zip(fa, fb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=msg)
+
+
+@given(st_seeds(), st_ints(48, 160), st_sampled(["er", "pl"]), cases=4)
+def test_prop_backend_parity_all_dense_edge_computes(seed, n, kind):
+    rng = np.random.default_rng(seed)
+    csr = (
+        erdos_renyi(n, 5.0, seed=seed)
+        if kind == "er"
+        else powerlaw(n, 4.0, seed=seed)
+    )
+    csr_w = CSRGraph(
+        indptr=csr.indptr,
+        indices=csr.indices,
+        weights=rng.uniform(0.1, 2.0, csr.n_edges).astype(np.float32),
+    )
+    ops, n_pad = full_operands(csr)
+    ops_w, _ = full_operands(csr_w)
+    srcs = jnp.asarray(
+        rng.integers(0, csr.n_nodes, size=2).astype(np.int32)
+    )
+    for ec in DENSE_ECS:
+        use = ops_w if ec == "bellman_ford" else ops
+        ref = run_ife(use, srcs, ec, extend="ell_push")
+        if ec in ("sp_lengths",):
+            exp = bfs_levels(csr, np.asarray(srcs))
+            np.testing.assert_array_equal(
+                np.asarray(ref.state.levels)[: csr.n_nodes], exp
+            )
+        for be in BACKENDS[1:]:
+            got = run_ife(use, srcs, ec, extend=be)
+            assert_states_equal(ref.state, got.state, f"{ec}/{be}")
+
+
+@given(st_seeds(), st_ints(64, 200), cases=3)
+def test_prop_backend_parity_msbfs(seed, n):
+    csr = powerlaw(n, 4.0, seed=seed)
+    ops, n_pad = full_operands(csr)
+    rng = np.random.default_rng(seed)
+    srcs = jnp.asarray(rng.integers(0, n, size=8).astype(np.int32))
+    for ec in ("msbfs_lengths", "msbfs_parents"):
+        ref = run_ife(ops, srcs, ec, extend="ell_push")
+        for be in BACKENDS[1:]:
+            got = run_ife(ops, srcs, ec, extend=be)
+            assert_states_equal(ref.state, got.state, f"{ec}/{be}")
+
+
+@pytest.mark.parametrize("state_layout", ["replicated", "sharded"])
+def test_engine_backend_parity_both_layouts(state_layout):
+    csr = powerlaw(150, 5.0, seed=3)
+    n = csr.n_nodes
+    mesh = mesh11()
+    srcs = np.array([0, 11, 42], np.int32)
+    expected = np.stack([bfs_levels(csr, [s]) for s in srcs])
+    for be in BACKENDS:
+        res = run_recursive_query(
+            mesh, csr, srcs, policy_ntks(), "sp_lengths",
+            state_layout=state_layout, extend=be,
+        )
+        got = np.asarray(res.state.levels)[: len(srcs), :n]
+        np.testing.assert_array_equal(got, expected, err_msg=be)
+
+
+def test_engine_backend_parity_lane_morsels():
+    csr = erdos_renyi(140, 5.0, seed=9)
+    n = csr.n_nodes
+    mesh = mesh11()
+    srcs = np.array([1, 7, 99], np.int32)
+    ref = run_recursive_query(
+        mesh, csr, srcs, policy_ntkms(), "msbfs_parents", extend="ell_push"
+    )
+    for be in BACKENDS[1:]:
+        got = run_recursive_query(
+            mesh, csr, srcs, policy_ntkms(), "msbfs_parents", extend=be
+        )
+        for fa, fb in zip(ref.state, got.state):
+            np.testing.assert_array_equal(
+                np.asarray(fa)[:, :n], np.asarray(fb)[:, :n], err_msg=be
+            )
+
+
+def test_scheduler_backend_selection_and_cache_keys():
+    from repro.runtime.scheduler import AdaptiveScheduler
+
+    csr = powerlaw(200, 5.0, seed=11)
+    n = csr.n_nodes
+    sched = AdaptiveScheduler(mesh11(), csr, max_iters=64, phase1_iters=2)
+    srcs = np.array([0, 17, 60], np.int32)
+    ref = sched.query(srcs)
+    n_engines = len(sched.cache)
+    for be in ["ell_pull", "block_mxu", "dopt", "recommend"]:
+        out = sched.query(srcs, backend=be)
+        np.testing.assert_array_equal(
+            np.asarray(ref.result.state.levels)[:, :n],
+            np.asarray(out.result.state.levels)[:, :n],
+            err_msg=be,
+        )
+    # each distinct backend compiled its own engines under its own key ...
+    assert len(sched.cache) > n_engines
+    # ... and re-serving a backend is pure cache hits
+    h0, m0 = sched.cache.hits, sched.cache.misses
+    sched.query(srcs, backend="dopt")
+    assert sched.cache.hits > h0 and sched.cache.misses == m0
+
+
+def test_max_deg_truncation_consistent_across_backends():
+    """Reverse/block operands must be derived from the truncated forward
+    graph, or pull would scan edges push cannot see."""
+    csr = powerlaw(120, 6.0, seed=13)
+    srcs = jnp.array([3])
+    cap = 4
+    spec_pull = as_spec("ell_pull")
+    ops_t, _ = build_operands(csr, spec_pull, max_deg=cap, block=128)
+    blk_t, _ = build_operands(
+        csr, ExtendSpec(backend="block_mxu"), max_deg=cap, block=128
+    )
+    ops_t = GraphOperands(fwd=ops_t.fwd, rev=ops_t.rev, blocks=blk_t.blocks)
+    ref = run_ife(ops_t, srcs, "sp_lengths", extend="ell_push")
+    for be in BACKENDS[1:]:
+        got = run_ife(ops_t, srcs, "sp_lengths", extend=be)
+        assert_states_equal(ref.state, got.state, be)
+    # and the effective graph really is capped
+    eff = truncate_csr(csr, cap)
+    assert int(eff.degrees.max()) <= cap
+    assert eff.n_edges == int(np.minimum(csr.degrees, cap).sum())
+
+
+@given(st_seeds(), st_ints(16, 120), st_ints(1, 9), cases=6)
+def test_prop_ell_from_csr_vectorized_matches_loop(seed, n, deg):
+    """The numpy-index ELL builder == the straightforward per-row loop,
+    including weights and degree truncation."""
+    rng = np.random.default_rng(seed)
+    csr = erdos_renyi(n, float(deg), seed=seed)
+    csr = CSRGraph(
+        indptr=csr.indptr,
+        indices=csr.indices,
+        weights=rng.uniform(0.1, 1.0, csr.n_edges).astype(np.float32),
+    )
+    cap = None if seed % 2 else max(1, deg // 2)
+    g = ell_from_csr(csr, max_deg=cap)
+    # reference: the original interpreted loop
+    degs = csr.degrees.astype(np.int32)
+    width = g.indices.shape[1]
+    ref_idx = np.full((n, width), n, np.int32)
+    ref_w = np.zeros((n, width), np.float32)
+    for v in range(n):
+        d = min(int(degs[v]), width)
+        lo = csr.indptr[v]
+        ref_idx[v, :d] = csr.indices[lo : lo + d]
+        ref_w[v, :d] = csr.weights[lo : lo + d]
+    np.testing.assert_array_equal(np.asarray(g.indices), ref_idx)
+    np.testing.assert_array_equal(np.asarray(g.weights), ref_w)
+    np.testing.assert_array_equal(
+        np.asarray(g.degrees), np.minimum(degs, width)
+    )
+
+
+@given(st_seeds(), st_ints(4, 64), cases=6)
+def test_prop_pack_unpack_lanes_roundtrip(seed, n):
+    from repro.core.frontier import LANES, pack_lanes, unpack_lanes
+
+    rng = np.random.default_rng(seed)
+    lanes = (rng.random((n, LANES)) < 0.3).astype(np.uint8)
+    packed = pack_lanes(jnp.asarray(lanes))
+    assert packed.shape == (n, LANES // 32) and packed.dtype == jnp.uint32
+    back = unpack_lanes(packed)
+    np.testing.assert_array_equal(np.asarray(back), lanes)
+    repacked = pack_lanes(back)
+    np.testing.assert_array_equal(np.asarray(repacked), np.asarray(packed))
+
+
+def test_recommend_backend_rules():
+    assert recommend_backend("bellman_ford", 300.0, n_nodes=1000) == "ell_push"
+    assert (
+        recommend_backend("msbfs_lengths", 300.0, n_nodes=1000, lanes=64)
+        == "block_mxu"
+    )
+    # lane morsels on block-sparse (huge) graphs: stay direction-optimized
+    assert (
+        recommend_backend("msbfs_lengths", 8.0, n_nodes=10**7, lanes=64)
+        == "dopt"
+    )
+    assert recommend_backend("sp_lengths", 8.0, n_nodes=1000) == "dopt"
+
+
+def test_block_operands_regroup_for_pad_shards():
+    """prepare_graph(pad_shards=K) with K > the policy's own shard count
+    must regroup the stacked block tiles (rebased local row-block ids) —
+    the scheduler's shared-n_pad contract for the block backend."""
+    from repro.core.dispatcher import (
+        build_engine,
+        pad_sources,
+        prepare_graph,
+    )
+
+    csr = powerlaw(300, 5.0, seed=3)
+    n = csr.n_nodes
+    mesh = mesh11()
+    spec = ExtendSpec(backend="block_mxu")
+    pol = policy_ntks()
+    g, n_pad = prepare_graph(csr, mesh, pol, pad_shards=4, extend=spec)
+    assert n_pad % (4 * spec.block) == 0
+    eng = build_engine(mesh, pol, "sp_lengths", n_pad, 64, extend=spec)
+    srcs = np.array([0, 11, 42], np.int32)
+    res = eng(g, jnp.asarray(pad_sources(srcs, 1, 1, n_pad)))
+    expected = np.stack([bfs_levels(csr, [s]) for s in srcs])
+    np.testing.assert_array_equal(
+        np.asarray(res.state.levels)[:3, :n], expected
+    )
+
+
+def test_extend_spec_validation_and_errors():
+    with pytest.raises(ValueError):
+        ExtendSpec(backend="nope")
+    with pytest.raises(ValueError):
+        ExtendSpec(direction="sometimes")
+    with pytest.raises(ValueError):
+        # auto IS the push/pull choice; pinning another backend with it
+        # would otherwise be silently ignored
+        ExtendSpec(backend="block_mxu", direction="auto")
+    csr = erdos_renyi(64, 3.0, seed=1)
+    ops, _ = build_operands(csr, "ell_push")
+    with pytest.raises(ValueError):
+        run_ife(ops, jnp.array([0]), "sp_lengths", extend="ell_pull")
+    with pytest.raises(ValueError):
+        run_ife(ops, jnp.array([0]), "sp_lengths", extend="block_mxu")

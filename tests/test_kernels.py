@@ -96,6 +96,54 @@ def test_msbfs_full_bfs_through_kernel():
         np.testing.assert_array_equal(got, exp)
 
 
+def test_msbfs_extend_sparse_frontier_activity_skip():
+    """Frontier active in ONE row-block stripe: the activity-skip kernel
+    (inactive blocks gated by pl.when + DMA-elided via the cummax select
+    index) must still match the dense reference exactly."""
+    csr = erdos_renyi(400, 6.0, seed=9)
+    block = 128
+    n_pad = -(-csr.n_nodes // block) * block
+    kb = kernel_blocks_from_csr(csr, block=block)
+    f = np.zeros((n_pad, 64), np.uint8)
+    f[5:40, :7] = 1  # only stripe 0 is active
+    got = np.asarray(msbfs_extend(kb, jnp.asarray(f)))
+    ref = np.asarray(msbfs_extend(kb, jnp.asarray(f), use_ref=True))
+    np.testing.assert_array_equal(got, ref)
+
+    # all-zero frontier: every block inactive, output must be all zeros
+    # (output tiles still initialize on first visit)
+    z = np.zeros((n_pad, 64), np.uint8)
+    out = np.asarray(msbfs_extend(kb, jnp.asarray(z)))
+    assert (out == 0).all()
+
+
+def test_msbfs_block_activity_counter():
+    """core.msbfs.active_block_count == the numpy count of materialized
+    blocks whose source stripe holds a frontier bit."""
+    from repro.core.msbfs import active_block_count, block_extend_lanes
+
+    csr = powerlaw(300, 4.0, seed=3)
+    block = 64
+    n_pad = -(-csr.n_nodes // block) * block
+    adj = blocks_from_csr(csr, block=block)
+    rng = np.random.default_rng(0)
+    f = np.zeros((n_pad, 8), np.uint8)
+    f[rng.integers(0, csr.n_nodes, 5), 0] = 1
+    stripe = f.reshape(-1, block, 8).any(axis=(1, 2))
+    expect = int(stripe[np.asarray(adj.block_rows)].sum())
+    got = int(active_block_count(adj, jnp.asarray(f)))
+    assert got == expect
+    # masking inactive stripes must not change the extension result
+    from repro.core.edge_compute import ell_reach_lanes
+    from repro.graph.csr import ell_from_csr
+    from repro.graph.partition import pad_ell
+
+    g = pad_ell(ell_from_csr(csr), shards=1, block=block)
+    ref = np.asarray(ell_reach_lanes(g, jnp.asarray(f)))
+    out = np.asarray(block_extend_lanes(adj, jnp.asarray(f)))
+    np.testing.assert_array_equal(out, ref)
+
+
 # ----------------------------------------------------------------- spmm ----
 
 @pytest.mark.parametrize("block,feat", [(128, 128), (128, 256), (64, 128)])

@@ -79,6 +79,19 @@ for pol in (policy_1t1s(), policy_nt1s(or_impl="ring"),
     assert (got == expected).all(), f"policy {pol.name}/{pol.or_impl} mismatch"
 print("policies OK")
 
+# --- extension-backend parity on a real 2x4 mesh ----------------------------
+# pull's inverse communication (global-frontier union) + the dopt lax.cond
+# with psum'd predicate must agree with push under real collectives, in
+# BOTH state layouts
+for layout in ("replicated", "sharded"):
+    for be in ("ell_pull", "dopt", "block_mxu"):
+        res = run_recursive_query(mesh, csr, sources, policy_ntks(),
+                                  "sp_lengths", state_layout=layout,
+                                  extend=be)
+        got = np.asarray(res.state.levels)[: len(sources), : csr.n_nodes]
+        assert (got == expected).all(), f"backend {be}/{layout} mismatch"
+print("backends OK")
+
 # nTkMS on multi-device with 70 sources -> 2 morsels over data axis
 srcs70 = np.arange(70, dtype=np.int32) * 4 % csr.n_nodes
 res = run_recursive_query(mesh, csr, srcs70, policy_ntkms(or_impl="ring"),
