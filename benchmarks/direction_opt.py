@@ -6,11 +6,18 @@ regimes:
 
 - ``scanned_slots``: adjacency slots the backend's scan semantics require
   this iteration, computed from the *actual* frontier/visited tensors of the
-  run. ell_push gathers the full forward-ELL tensor every iteration (its
-  measured cost is constant by construction — that is the problem this PR
-  fixes); ell_pull scans only the padded in-neighbor lists of still-unvisited
-  rows; dopt takes whichever side its alpha/beta predicate picks that
-  iteration.
+  run. ell_push gathers the full forward-ELL tensor every iteration;
+  ell_pull scans the still-unvisited rows of the single reverse slab padded
+  to ``max_in_deg``; pull_binned scans each unvisited row at its own
+  degree-bucket slab width (~its true in-degree — asserted ≤ 1.1× the
+  ideal ``sum(deg)`` accounting on every workload, the binning acceptance
+  floor); dopt takes whichever side its alpha/beta predicate picks that
+  iteration (pull side = binned). Every iteration record also carries the
+  frontier/unexplored edge masses and all three hypothetical costs
+  (``m_frontier`` / ``m_unexplored`` / ``push_slots`` /
+  ``pull_slots_ell`` / ``pull_slots_binned``) — the samples
+  ``core.policies.fit_direction_thresholds`` fits per-(family,
+  degree-bucket) alpha/beta from.
 - ``touched_blocks`` (block_mxu): materialized adjacency tiles whose source
   stripe is frontier-active — exactly the tiles the jnp path masks and the
   Pallas kernel DMAs (inactive tiles are skip-listed), via
@@ -47,14 +54,18 @@ sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 from repro.core.edge_compute import EDGE_COMPUTES  # noqa: E402
 from repro.core.extend import (  # noqa: E402
     ExtendCtx,
+    ExtendSpec,
+    GraphOperands,
     as_spec,
     build_operands,
     make_backend,
 )
 from repro.graph.generators import erdos_renyi, powerlaw  # noqa: E402
 
-BACKENDS = ("ell_push", "ell_pull", "dopt", "block_mxu")
-SCHEMA_VERSION = 1
+BACKENDS = ("ell_push", "ell_pull", "pull_binned", "dopt", "block_mxu")
+SCHEMA_VERSION = 2
+#: binned-pull acceptance floor: scanned slots vs the ideal sum(deg) scan
+BINNED_OVERHEAD_FLOOR = 1.1
 
 
 def _wall_ms(fn, *args, reps: int = 3) -> float:
@@ -75,15 +86,42 @@ def _use_pull_host(spec, fwd_deg, frontier, visited, n) -> bool:
     return bool((m_f * spec.alpha > m_u) and (n_f * spec.beta > n))
 
 
-def run_backend(csr, source: int, backend: str, max_iters: int) -> dict:
+#: one row-padding unit for every operand bundle the bench builds — the
+#: block_mxu tile size, which every other backend's pad (32) divides — so
+#: the shared counter bundle and each backend's scan operands agree on
+#: n_pad for ANY node count, not just 128-multiples
+BENCH_PAD_BLOCK = 128
+
+
+def build_counter_operands(csr, block: int = BENCH_PAD_BLOCK):
+    """The backend-independent scan-extent counters: one bundle carrying
+    BOTH pull layouts (padded reverse ELL + binned slabs), built once per
+    graph and shared by every backend's instrumentation."""
+    ell_ops, n_pad = build_operands(
+        csr, ExtendSpec(direction="auto", pull="ell"), shards=1, block=block
+    )
+    bin_ops, n_pad_b = build_operands(
+        csr, as_spec("pull_binned"), shards=1, block=block
+    )
+    assert n_pad_b == n_pad, (n_pad_b, n_pad)
+    return (
+        GraphOperands(
+            fwd=ell_ops.fwd, rev=ell_ops.rev, rev_binned=bin_ops.rev_binned
+        ),
+        n_pad,
+    )
+
+
+def run_backend(
+    csr, source: int, backend: str, max_iters: int, full_ops, n_pad
+) -> dict:
     """One full BFS under one backend, instrumented per iteration."""
     spec = as_spec(backend)
-    # counters need rev (pull scan extents) regardless of backend; operands
-    # handed to the engine carry exactly what the spec says
-    full_ops, n_pad = build_operands(
-        csr, as_spec("dopt"), shards=1, block=spec.pad_block
+    # operands handed to the engine carry exactly what the spec says; the
+    # shared ``full_ops`` bundle only feeds the scan counters
+    ops, n_pad2 = build_operands(
+        csr, spec, shards=1, block=BENCH_PAD_BLOCK
     )
-    ops, n_pad2 = build_operands(csr, spec, shards=1)
     assert n_pad2 == n_pad, (n_pad2, n_pad)
     ec = EDGE_COMPUTES["sp_lengths"]
     be = make_backend(spec)
@@ -97,6 +135,11 @@ def run_backend(csr, source: int, backend: str, max_iters: int) -> dict:
     fwd_slots = int(np.prod(full_ops.fwd.indices.shape))
     rev_row_w = int(full_ops.rev.indices.shape[1])
     fwd_deg = np.asarray(full_ops.fwd.degrees)
+    # per-row binned slab widths + true in-degrees: the binned-pull scan
+    # cost of one iteration is the widths of the still-unvisited rows
+    # (the uncapped reverse ELL's degree vector IS the true in-degrees)
+    bin_width = full_ops.rev_binned.row_widths()[0].astype(np.int64)
+    rev_deg = np.asarray(full_ops.rev.degrees).astype(np.int64)
 
     touched_fn = None
     if spec.needs_blocks:
@@ -115,22 +158,36 @@ def run_backend(csr, source: int, backend: str, max_iters: int) -> dict:
 
     state = ec.init(n_pad, jnp.array([source], jnp.int32))
     iters = []
+    ideal_pull_slots = 0  # sum over iterations of sum(deg of unvisited)
     for it in range(max_iters):
         f = np.asarray(state.frontier)
         v = np.asarray(state.visited)
         n_f = int((f != 0).sum())
         if n_f == 0:
             break
-        unvis = int((v == 0).sum())
+        unvis_mask = v == 0
+        unvis = int(unvis_mask.sum())
+        active = f != 0
+        # the three hypothetical costs + the edge masses of the Beamer
+        # predicate — identical across backends (bit-parity => identical
+        # frontier trajectories), recorded for fit_direction_thresholds
+        push_slots = fwd_slots
+        pull_slots_ell = unvis * rev_row_w
+        pull_slots_binned = int(bin_width[unvis_mask].sum())
+        ideal_pull_slots += int(rev_deg[unvis_mask].sum())
+        m_f = int(fwd_deg[active].sum())
+        m_u = int(fwd_deg[unvis_mask].sum())
         direction = None
         if backend == "ell_push":
-            scanned = fwd_slots
+            scanned = push_slots
         elif backend == "ell_pull":
-            scanned = unvis * rev_row_w
+            scanned = pull_slots_ell
+        elif backend == "pull_binned":
+            scanned = pull_slots_binned
         elif backend == "dopt":
             pull = _use_pull_host(spec, fwd_deg, f, v, n_pad)
             direction = "pull" if pull else "push"
-            scanned = unvis * rev_row_w if pull else fwd_slots
+            scanned = pull_slots_binned if pull else push_slots
         else:  # block_mxu: dense tiles, reported in tile cells
             tb = int(touched_fn(state.frontier))
             scanned = tb * spec.block * spec.block
@@ -139,6 +196,11 @@ def run_backend(csr, source: int, backend: str, max_iters: int) -> dict:
             "frontier": n_f,
             "unvisited": unvis,
             "scanned_slots": int(scanned),
+            "push_slots": push_slots,
+            "pull_slots_ell": pull_slots_ell,
+            "pull_slots_binned": pull_slots_binned,
+            "m_frontier": m_f,
+            "m_unexplored": m_u,
             "touched_blocks": (
                 int(touched_fn(state.frontier))
                 if touched_fn is not None
@@ -150,10 +212,21 @@ def run_backend(csr, source: int, backend: str, max_iters: int) -> dict:
         iters.append(rec)
         state = jax.block_until_ready(step(state, jnp.int32(it)))
     levels = np.asarray(state.levels)[: csr.n_nodes]
+    bn = full_ops.rev_binned
     return {
         "iterations": iters,
         "total_slots": int(sum(r["scanned_slots"] for r in iters)),
         "total_wall_ms": float(sum(r["wall_ms"] for r in iters)),
+        "ideal_pull_slots": int(ideal_pull_slots),
+        "binned": {
+            "n_slabs": int(bn.n_slabs),
+            "widths": list(bn.widths),
+            "capacity_slots": int(bn.capacity_slots),
+            "rev_sum_deg": int(rev_deg.sum()),
+            "overhead_vs_sum_deg": round(
+                bn.capacity_slots / max(int(rev_deg.sum()), 1), 4
+            ),
+        },
         "levels": levels,  # stripped before serialization (parity check)
     }
 
@@ -162,10 +235,15 @@ def bench_graph(name, kind, csr, max_iters: int) -> dict:
     from repro.graph.generators import pick_sources
 
     source = int(pick_sources(csr, 1, seed=7)[0])
+    full_ops, n_pad = build_counter_operands(csr)
     out = {
         "graph": name,
         "kind": kind,
         "n": int(csr.n_nodes),
+        # the live Beamer predicate compares n_f*beta against the PADDED
+        # row count (ExtendCtx.n_out); fit_direction_thresholds fits beta
+        # against this field so served thresholds match the fit
+        "n_pad": int(n_pad),
         "n_edges": int(csr.n_edges),
         "avg_degree": float(csr.avg_degree),
         "source": source,
@@ -173,18 +251,33 @@ def bench_graph(name, kind, csr, max_iters: int) -> dict:
     }
     ref = None
     for be in BACKENDS:
-        r = run_backend(csr, source, be, max_iters)
+        r = run_backend(csr, source, be, max_iters, full_ops, n_pad)
         levels = r.pop("levels")
         if ref is None:
             ref = levels
         else:
             assert (levels == ref).all(), f"{name}:{be} parity violation"
+        out.setdefault("binned", r.pop("binned"))
         out["backends"][be] = r
         print(
-            f"  {name:12s} {be:10s} slots {r['total_slots']:>12,} "
+            f"  {name:12s} {be:11s} slots {r['total_slots']:>12,} "
             f"wall {r['total_wall_ms']:8.1f} ms "
             f"({len(r['iterations'])} iters)"
         )
+    # binned-pull scanned-slot accounting floor (ISSUE 3 acceptance): the
+    # degree-binned slabs must scan within BINNED_OVERHEAD_FLOOR of the
+    # ideal sum(deg)-based scan — both as layout capacity and as actually
+    # scanned slots over this live trace — on EVERY workload, and never
+    # more than the single padded reverse slab.
+    pb = out["backends"]["pull_binned"]
+    ideal = max(pb["ideal_pull_slots"], 1)
+    assert pb["total_slots"] <= BINNED_OVERHEAD_FLOOR * ideal, (
+        name, pb["total_slots"], ideal,
+    )
+    assert pb["total_slots"] <= out["backends"]["ell_pull"]["total_slots"], name
+    assert (
+        out["binned"]["overhead_vs_sum_deg"] <= BINNED_OVERHEAD_FLOOR
+    ), (name, out["binned"])
     return out
 
 
@@ -209,7 +302,7 @@ def summarize(workloads: list[dict]) -> dict:
     pull_slots = slots_at("ell_pull")
     dopt_slots = slots_at("dopt")
     reduction = push_slots / max(dopt_slots, 1)
-    return {
+    summary = {
         "dense_er": {
             "graph": w["graph"],
             "large_frontier_iterations": large,
@@ -223,6 +316,34 @@ def summarize(workloads: list[dict]) -> dict:
             "passes_2x": bool(reduction >= 2.0),
         }
     }
+    # power-law acceptance: the heavy-tail graph where the padded reverse
+    # slab pays n·max_in_deg and binning pays ~sum(deg)
+    pls = [w for w in workloads if w["kind"] == "powerlaw"]
+    if pls:
+        w = max(pls, key=lambda w: w["n_edges"])
+        pb = w["backends"]["pull_binned"]
+        pe = w["backends"]["ell_pull"]
+        ideal = max(pb["ideal_pull_slots"], 1)
+        overhead = pb["total_slots"] / ideal
+        summary["powerlaw_binned"] = {
+            "graph": w["graph"],
+            "ideal_pull_slots": ideal,
+            "binned_pull_slots": pb["total_slots"],
+            "ell_pull_slots": pe["total_slots"],
+            "binned_overhead_vs_ideal": round(overhead, 4),
+            "scan_reduction_binned_vs_ell_pull": round(
+                pe["total_slots"] / max(pb["total_slots"], 1), 2
+            ),
+            "capacity_overhead_vs_sum_deg": w["binned"][
+                "overhead_vs_sum_deg"
+            ],
+            "passes_overhead_floor": bool(
+                overhead <= BINNED_OVERHEAD_FLOOR
+                and w["binned"]["overhead_vs_sum_deg"]
+                <= BINNED_OVERHEAD_FLOOR
+            ),
+        }
+    return summary
 
 
 def validate(doc: dict) -> None:
@@ -233,23 +354,47 @@ def validate(doc: dict) -> None:
         assert isinstance(doc["meta"][k], (int, float)), k
     assert isinstance(doc["workloads"], list) and doc["workloads"]
     for w in doc["workloads"]:
-        for k in ("graph", "kind", "n", "n_edges", "avg_degree", "backends"):
+        for k in ("graph", "kind", "n", "n_pad", "n_edges", "avg_degree",
+                  "backends", "binned"):
             assert k in w, (w["graph"], k)
         assert set(w["backends"]) == set(BACKENDS), w["graph"]
+        # per-bucket slab schema: widths ascending with a zero-width slab
+        # first (the truncation-emptied / zero-in-degree rows), capacity
+        # within the overhead floor of the true edge count
+        b = w["binned"]
+        for k in ("n_slabs", "widths", "capacity_slots", "rev_sum_deg",
+                  "overhead_vs_sum_deg"):
+            assert k in b, (w["graph"], k)
+        assert b["n_slabs"] == len(b["widths"]) >= 1, b
+        assert b["widths"][0] == 0, b["widths"]
+        assert b["widths"] == sorted(b["widths"]), b["widths"]
+        assert b["overhead_vs_sum_deg"] <= BINNED_OVERHEAD_FLOOR, b
         for be, r in w["backends"].items():
             assert r["iterations"], (w["graph"], be)
             for rec in r["iterations"]:
-                for k in ("it", "frontier", "scanned_slots", "wall_ms"):
+                for k in ("it", "frontier", "scanned_slots", "wall_ms",
+                          "push_slots", "pull_slots_ell",
+                          "pull_slots_binned", "m_frontier",
+                          "m_unexplored"):
                     assert k in rec, (w["graph"], be, k)
             assert r["total_slots"] == sum(
                 rec["scanned_slots"] for rec in r["iterations"]
             )
+            assert "ideal_pull_slots" in r, (w["graph"], be)
     s = doc["summary"]["dense_er"]
     for k in (
         "push_slots", "dopt_slots", "scan_reduction_dopt_vs_push",
         "passes_2x",
     ):
         assert k in s, k
+    pl = doc["summary"].get("powerlaw_binned")
+    assert pl is not None, "powerlaw workload missing from bench"
+    for k in ("ideal_pull_slots", "binned_pull_slots",
+              "binned_overhead_vs_ideal",
+              "scan_reduction_binned_vs_ell_pull",
+              "passes_overhead_floor"):
+        assert k in pl, k
+    assert pl["passes_overhead_floor"], pl
 
 
 def main(argv=None) -> int:
@@ -262,7 +407,10 @@ def main(argv=None) -> int:
 
     spec = as_spec("dopt")
     if args.smoke:
-        graphs = [("er_smoke", "er", erdos_renyi(512, 8.0, seed=5))]
+        graphs = [
+            ("er_smoke", "er", erdos_renyi(512, 8.0, seed=5)),
+            ("pl_smoke", "powerlaw", powerlaw(512, 4.0, seed=7)),
+        ]
     else:
         graphs = [
             ("er_d4", "er", erdos_renyi(2048, 4.0, seed=5)),
@@ -292,14 +440,23 @@ def main(argv=None) -> int:
     validate(doc)
     Path(args.out).write_text(json.dumps(doc, indent=1))
     s = doc["summary"]["dense_er"]
+    pl = doc["summary"]["powerlaw_binned"]
     print(
         f"summary [{s['graph']}] large-frontier scan reduction: "
         f"dopt {s['scan_reduction_dopt_vs_push']}x, "
         f"pull {s['scan_reduction_pull_vs_push']}x vs ell_push "
         f"(passes_2x={s['passes_2x']})"
     )
+    print(
+        f"summary [{pl['graph']}] binned pull: "
+        f"{pl['binned_overhead_vs_ideal']}x the ideal sum(deg) scan "
+        f"(floor {BINNED_OVERHEAD_FLOOR}), "
+        f"{pl['scan_reduction_binned_vs_ell_pull']}x fewer slots than the "
+        f"padded reverse slab "
+        f"(passes_overhead_floor={pl['passes_overhead_floor']})"
+    )
     print(f"wrote {args.out} (schema v{SCHEMA_VERSION} validated)")
-    return 0 if s["passes_2x"] else 1
+    return 0 if (s["passes_2x"] and pl["passes_overhead_floor"]) else 1
 
 
 if __name__ == "__main__":

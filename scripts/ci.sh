@@ -2,16 +2,23 @@
 # Tier-1 CI runner with a wall-clock budget and a fast/full marker split.
 #
 #   scripts/ci.sh               # fast lane: -m "not slow" (skips subprocess /
-#                               # multi-device / train-driver tests; ~3 min on
-#                               # the 1-core reference box)
-#   scripts/ci.sh --full        # the whole tier-1 suite (~6 min)
+#                               # multi-device / train-driver / heavy-tail
+#                               # sharded tests; FAILS if it exceeds its own
+#                               # wall budget so the growing parity corpus
+#                               # stays cheap)
+#   scripts/ci.sh --full        # the whole tier-1 suite
 #   scripts/ci.sh --bench-smoke # perf-trajectory lane: run the direction-opt
-#                               # benchmark on a tiny graph, validate the
-#                               # emitted BENCH_direction_opt.json schema and
-#                               # the >=2x large-frontier scan reduction
+#                               # benchmark on tiny ER + power-law graphs,
+#                               # validate the emitted BENCH_direction_opt.json
+#                               # schema v2 (per-bucket binned-slab fields),
+#                               # the >=2x large-frontier scan reduction AND
+#                               # the <=1.1x binned-pull scan-overhead floor
 #
-# CI_BUDGET_SECONDS caps the run (default 1800); a hung XLA compile or
-# subprocess fails the lane instead of wedging the pipeline.
+# CI_BUDGET_SECONDS caps any lane via timeout (default 1800); a hung XLA
+# compile or subprocess fails the lane instead of wedging the pipeline.
+# FAST_LANE_BUDGET_SECONDS (default 900) is the fast lane's pass/fail wall
+# gate: finishing late is a FAILURE even when every test passed — new tests
+# that belong to the fast lane must stay cheap or be marked `slow`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -23,7 +30,7 @@ if [[ "${1:-}" == "--full" ]]; then
 elif [[ "${1:-}" == "--bench-smoke" ]]; then
   OUT="${BENCH_OUT:-/tmp/BENCH_direction_opt.smoke.json}"
   # the benchmark validates its own schema before writing and exits nonzero
-  # if the dense-ER reduction target is missed
+  # if the dense-ER reduction or the binned-pull overhead floor is missed
   timeout --signal=INT "$BUDGET" \
     python benchmarks/direction_opt.py --smoke --out "$OUT"
   python - "$OUT" <<'EOF'
@@ -31,10 +38,26 @@ import json, sys
 sys.path.insert(0, "benchmarks")
 from direction_opt import validate
 doc = json.loads(open(sys.argv[1]).read())
-validate(doc)
+validate(doc)  # schema v2: per-bucket slab fields + powerlaw floor
+pl = doc["summary"]["powerlaw_binned"]
+assert pl["passes_overhead_floor"], pl
 print(f"bench-smoke OK: {sys.argv[1]} schema valid, "
-      f"reduction {doc['summary']['dense_er']['scan_reduction_dopt_vs_push']}x")
+      f"dense-ER reduction "
+      f"{doc['summary']['dense_er']['scan_reduction_dopt_vs_push']}x, "
+      f"binned pull {pl['binned_overhead_vs_ideal']}x ideal / "
+      f"{pl['scan_reduction_binned_vs_ell_pull']}x fewer slots than padded "
+      f"pull")
 EOF
 else
-  exec timeout --signal=INT "$BUDGET" python -m pytest -x -q -m "not slow"
+  FAST_BUDGET="${FAST_LANE_BUDGET_SECONDS:-900}"
+  START=$(date +%s)
+  timeout --signal=INT "$BUDGET" python -m pytest -x -q -m "not slow"
+  ELAPSED=$(( $(date +%s) - START ))
+  if (( ELAPSED > FAST_BUDGET )); then
+    echo "FAIL: fast lane took ${ELAPSED}s > ${FAST_BUDGET}s budget" \
+         "(mark expensive new tests 'slow' or raise" \
+         "FAST_LANE_BUDGET_SECONDS deliberately)" >&2
+    exit 1
+  fi
+  echo "fast lane OK: ${ELAPSED}s (budget ${FAST_BUDGET}s)"
 fi

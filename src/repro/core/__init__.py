@@ -12,6 +12,9 @@ from .ife import (
 from .policies import (
     MorselPolicy,
     POLICIES,
+    DirectionThresholds,
+    degree_bucket,
+    fit_direction_thresholds,
     policy_1t1s,
     policy_nt1s,
     policy_ntks,
@@ -27,6 +30,7 @@ from .extend import (
     GraphOperands,
     as_spec,
     build_operands,
+    effective_csr,
     make_backend,
 )
 from .dispatcher import (
@@ -36,6 +40,7 @@ from .dispatcher import (
     run_recursive_query,
     prepare_graph,
     pad_sources,
+    strip_operands,
 )
 from .collectives import (
     REDISPATCH_OR_IMPL,

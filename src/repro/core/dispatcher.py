@@ -95,25 +95,7 @@ class QueryEngine:
         """Accept an EllGraph or any GraphOperands bundle and hand ``fn``
         exactly the operand structure its in_specs declare (push engines
         keep the historical bare-EllGraph calling convention)."""
-        ops = as_operands(graph)
-        spec = self.extend
-        if not (spec.needs_rev or spec.needs_blocks):
-            return ops.fwd
-        if spec.needs_rev and ops.rev is None:
-            raise ValueError(
-                f"engine extend={spec.backend}/{spec.direction} needs "
-                "reverse operands; use prepare_graph(..., extend=spec)"
-            )
-        if spec.needs_blocks and ops.blocks is None:
-            raise ValueError(
-                "engine extend=block_mxu needs block operands; use "
-                "prepare_graph(..., extend=spec)"
-            )
-        return GraphOperands(
-            fwd=ops.fwd,
-            rev=ops.rev if spec.needs_rev else None,
-            blocks=ops.blocks if spec.needs_blocks else None,
-        )
+        return strip_operands(self.extend, as_operands(graph))
 
     def __call__(self, graph, *args) -> IFEResult:
         """Static/phase-1 engines: ``engine(graph, source_morsels)``.
@@ -121,10 +103,55 @@ class QueryEngine:
         return self.fn(self._coerce(graph), *args)
 
 
-def _operand_specs(spec: ExtendSpec, ga: tuple[str, ...]):
-    """shard_map in_specs for the operand bundle an engine scans: ELL rows
-    (fwd and rev) shard over the graph axes; the stacked per-shard block
-    tensors shard over their leading K axis."""
+def strip_operands(spec: ExtendSpec, ops: GraphOperands):
+    """Exactly the operands ``spec`` scans (push engines keep the
+    historical bare-EllGraph calling convention) — the structure shard_map
+    in_specs are derived from, so treedefs always match."""
+    if not (spec.needs_rev or spec.needs_binned or spec.needs_blocks):
+        return ops.fwd
+    if spec.needs_rev and ops.rev is None:
+        raise ValueError(
+            f"engine extend={spec.backend}/{spec.direction} needs reverse "
+            "operands; use prepare_graph(..., extend=spec)"
+        )
+    if spec.needs_binned and ops.rev_binned is None:
+        raise ValueError(
+            f"engine extend={spec.backend}/{spec.direction} needs "
+            "degree-binned reverse operands; use "
+            "prepare_graph(..., extend=spec)"
+        )
+    if spec.needs_blocks and ops.blocks is None:
+        raise ValueError(
+            "engine extend=block_mxu needs block operands; use "
+            "prepare_graph(..., extend=spec)"
+        )
+    return GraphOperands(
+        fwd=ops.fwd,
+        rev=ops.rev if spec.needs_rev else None,
+        rev_binned=ops.rev_binned if spec.needs_binned else None,
+        blocks=ops.blocks if spec.needs_blocks else None,
+    )
+
+
+def _operand_specs(spec: ExtendSpec, ga: tuple[str, ...], operands=None):
+    """shard_map in_specs for the operand bundle an engine scans.
+
+    Every operand leaf shards its leading (row / stacked-shard) axis over
+    the graph axes and replicates the rest. When the actual ``operands``
+    bundle is given the spec pytree is derived from its stripped
+    structure leaf-by-leaf — required for binned slabs, whose bucket
+    count (treedef) is graph-dependent; the hand-built fallback keeps the
+    historical operand-free ``build_engine`` calling convention alive for
+    specs with graph-independent treedefs."""
+    row_leaf = lambda x: P(ga if ga else None, *(None,) * (x.ndim - 1))
+    if operands is not None:
+        return jax.tree.map(row_leaf, strip_operands(spec, as_operands(operands)))
+    if spec.needs_binned:
+        raise ValueError(
+            "binned-pull engines need the operand bundle to derive "
+            "shard_map specs (slab count is graph-dependent); pass "
+            "operands=... to build_engine/build_resume_engine"
+        )
     ell = EllGraph(
         indices=P(ga if ga else None, None),
         degrees=P(ga if ga else None),
@@ -153,8 +180,14 @@ def build_engine(
     state_layout: str = "replicated",
     sync: str = "global",
     extend="ell_push",
+    operands=None,
 ) -> QueryEngine:
-    """``state_layout``:
+    """``operands``: the graph's GraphOperands bundle (or any graph whose
+    stripped structure matches what the engine will be called with). Needed
+    to derive shard_map specs for graph-dependent operand treedefs (binned
+    pull slabs); optional for the other backends.
+
+    ``state_layout``:
 
     - "replicated" — paper-faithful: every device holds the FULL per-node
       state of the morsels it works on ("every thread sees the whole next
@@ -251,7 +284,7 @@ def build_engine(
 
         return lax.map(one_morsel, sources_local)
 
-    g_specs = _operand_specs(spec, ga)
+    g_specs = _operand_specs(spec, ga, operands)
     src_spec = P(sa if sa else None, None)
     if sharded:
         # state rows live on the graph axes: leaves are [morsel, rows, ...]
@@ -293,6 +326,7 @@ def build_resume_engine(
     n_nodes_padded: int,
     max_iters: int | None = None,
     extend="ell_push",
+    operands=None,
 ) -> QueryEngine:
     """Phase-2 (re-dispatch) engine of the adaptive hybrid.
 
@@ -357,7 +391,7 @@ def build_resume_engine(
 
         return lax.map(one_morsel, (state0, it0))
 
-    g_specs = _operand_specs(spec, ga)
+    g_specs = _operand_specs(spec, ga, operands)
     # state/it0 replicated in, outputs replicated (post-merge state is
     # identical on every device of the graph group)
     fn = jax.jit(
@@ -388,9 +422,10 @@ def prepare_graph(
     extend="ell_push",
 ) -> tuple[GraphOperands, int]:
     """Host-side: CSR → padded, device-placed extension operands for this
-    policy's mesh: the forward ELL always, plus the reverse ELL and/or the
-    per-shard block adjacency when the ``extend`` spec scans them (all
-    derived from the same truncated edge set — backend bit-parity).
+    policy's mesh: the forward ELL always, plus the reverse ELL, the
+    degree-binned reverse slabs, and/or the per-shard block adjacency when
+    the ``extend`` spec scans them (all derived from the same truncated
+    edge set — backend bit-parity).
 
     Rows pad to a multiple of shards×pad_block (32, or the MXU tile size
     for block operands) so the sharded-state engine's bit-packed ring
@@ -403,10 +438,15 @@ def prepare_graph(
     and phase-2 (nT1S, graph over all axes) graphs share one ``n_pad`` and
     state arrays can flow between the two engines unchanged."""
     spec = as_spec(extend)
-    shards = _axes_size(mesh, policy.graph_axes)
+    k_policy = _axes_size(mesh, policy.graph_axes)
+    shards = k_policy
     if pad_shards is not None:
         shards = int(np.lcm(shards, int(pad_shards)))
-    ops, n_pad = build_operands(csr, spec, max_deg=max_deg, shards=shards)
+    # rows pad for the lcm shard count, but binned slabs are built directly
+    # at the policy's own shard count (per-shard binning can't reshape)
+    ops, n_pad = build_operands(
+        csr, spec, max_deg=max_deg, shards=shards, binned_shards=k_policy
+    )
     ga = policy.graph_axes
     row_sharding = NamedSharding(mesh, P(ga if ga else None, None))
     deg_sharding = NamedSharding(mesh, P(ga if ga else None))
@@ -420,9 +460,19 @@ def prepare_graph(
             else jax.device_put(g.weights, row_sharding),
         )
 
+    k_shards = k_policy
+    rev_binned = None
+    if ops.rev_binned is not None:
+        bn = ops.rev_binned
+        assert bn.rows_local * k_shards == n_pad, (bn.rows_local, k_shards)
+        leaf_sharding = lambda x: NamedSharding(
+            mesh, P(ga if ga else None, *(None,) * (x.ndim - 1))
+        )
+        rev_binned = jax.tree.map(
+            lambda x: jax.device_put(x, leaf_sharding(x)), bn
+        )
     blocks = None
     if ops.blocks is not None:
-        k_shards = _axes_size(mesh, ga)
         sb = ops.blocks
         if k_shards != shards:
             # operands were padded for more shards than this policy uses
@@ -450,6 +500,7 @@ def prepare_graph(
     ops = GraphOperands(
         fwd=put_ell(ops.fwd),
         rev=None if ops.rev is None else put_ell(ops.rev),
+        rev_binned=rev_binned,
         blocks=blocks,
     )
     return ops, n_pad
@@ -491,6 +542,6 @@ def run_recursive_query(
     )
     engine = build_engine(
         mesh, policy, edge_compute, n_pad, max_iters,
-        state_layout=state_layout, extend=spec,
+        state_layout=state_layout, extend=spec, operands=g,
     )
     return engine(g, morsels)

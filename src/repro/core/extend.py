@@ -13,7 +13,18 @@ direction-optimizing switch:
 - ``ell_pull``  — gather over the *reverse* ELL with visited-suppression:
   each unvisited v scans its in-neighbor list and ORs the frontier bits it
   finds — the classic bottom-up win when frontiers are large, because the
-  rows that still need scanning (unvisited) shrink every iteration.
+  rows that still need scanning (unvisited) shrink every iteration. The
+  reverse ELL is one slab padded to ``max_in_deg``, so on heavy-tailed
+  graphs (power-law: rev max_deg ≫ mean) each scan still pays
+  ``n × max_in_deg`` slots.
+- ``pull_binned`` — the same pull contract over **degree-binned reverse
+  slabs** (``graph.csr.BinnedRevEll``): reverse rows are permuted into
+  pow2-bounded degree buckets, each bucket padded only to its own width,
+  and the per-slab gather results are un-permuted back to row order. A
+  full scan costs ~``sum(in_deg)`` slots instead of ``n × max_in_deg`` —
+  the EmptyHeaded lesson (degree-specialized physical layouts) applied to
+  the bottom-up direction, which is what makes pull (and therefore the
+  Beamer switch) profitable on skewed graphs.
 - ``block_mxu`` — the saturating-matmul path over the per-shard block-sparse
   adjacency (``ShardedBlocks``), upgraded to skip frontier-empty source
   row-block *stripes* (a per-row-block activity bitmap masks contributions;
@@ -22,12 +33,17 @@ direction-optimizing switch:
 ``direction="auto"`` realizes Beamer's alpha/beta direction optimization as
 a per-iteration ``lax.cond`` between push and pull with fixed shapes, so it
 composes with ``jit`` / ``while_loop`` / ``shard_map`` in both the
-replicated and sharded state layouts. The decision is a pure, stateless
+replicated and sharded state layouts. ``ExtendSpec.pull`` selects the
+bottom-up flavor of the switch — ``"ell"`` (padded reverse ELL) or
+``"binned"`` (degree-binned slabs; the ``"dopt_binned"`` alias and the
+default ``recommend_backend`` path). The decision is a pure, stateless
 function of (frontier, visited): pull when the frontier's out-edge mass
 exceeds the unexplored edge mass / alpha AND the frontier holds more than
-n / beta nodes. Collectives (global-frontier union, stat psums) are hoisted
-*outside* the cond so both branches are collective-free and every device in
-a sync group takes the same branch.
+n / beta nodes — alpha/beta default to Beamer's CPU constants and can be
+replaced per (dataset-family, degree-bucket) by
+``core.policies.fit_direction_thresholds``. Collectives (global-frontier
+union, stat psums) are hoisted *outside* the cond so both branches are
+collective-free and every device in a sync group takes the same branch.
 
 All backends produce bit-identical final states: push and pull enumerate the
 same edge set (reverse operands are derived from the *truncated* forward
@@ -36,8 +52,9 @@ and visited-suppression only changes contribution values that
 ``ec.apply``'s ``& ~visited`` masks away.
 
 Backends consume a ``GraphOperands`` bundle (forward ELL + optional reverse
-ELL + optional per-shard blocks) built once host-side by
-``core.dispatcher.prepare_graph`` / ``build_operands``.
+ELL + optional degree-binned reverse slabs + optional per-shard blocks)
+built once host-side by ``core.dispatcher.prepare_graph`` /
+``build_operands``.
 """
 from __future__ import annotations
 
@@ -49,9 +66,11 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..graph.csr import (
+    BinnedRevEll,
     CSRGraph,
     EllGraph,
     ShardedBlocks,
+    binned_rev_csr,
     ell_from_csr,
     sharded_blocks_from_csr,
     truncate_csr,
@@ -69,7 +88,7 @@ from .edge_compute import (
     ell_reach_lanes,
 )
 
-BACKENDS = ("ell_push", "ell_pull", "block_mxu")
+BACKENDS = ("ell_push", "ell_pull", "pull_binned", "block_mxu")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,28 +96,42 @@ class ExtendSpec:
     """Static configuration of the extension step (hashable: engine-cache
     key material and jit static argument)."""
 
-    backend: str = "ell_push"  # ell_push | ell_pull | block_mxu
+    backend: str = "ell_push"  # ell_push | ell_pull | pull_binned | block_mxu
     direction: str = "fixed"  # fixed | auto (Beamer push/pull switch)
     alpha: float = 14.0  # pull when m_frontier > m_unexplored / alpha
     beta: float = 24.0  # ... and n_frontier > n / beta
     block: int = 128  # tile size of the block_mxu operand
+    pull: str = "binned"  # auto's bottom-up flavor: binned slabs | padded ell
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
             raise ValueError(f"unknown extension backend: {self.backend}")
         if self.direction not in ("fixed", "auto"):
             raise ValueError(f"unknown direction mode: {self.direction}")
+        if self.pull not in ("binned", "ell"):
+            raise ValueError(f"unknown pull flavor: {self.pull}")
         if self.direction == "auto" and self.backend != "ell_push":
             # the auto switch IS the backend choice (push vs pull); pinning
             # another backend alongside it would be silently ignored
             raise ValueError(
-                "direction='auto' switches between ell_push and ell_pull; "
-                f"it cannot be combined with backend={self.backend!r}"
+                "direction='auto' switches between push and pull (flavor "
+                "chosen by the `pull` field); it cannot be combined with "
+                f"backend={self.backend!r}"
             )
 
     @property
     def needs_rev(self) -> bool:
-        return self.direction == "auto" or self.backend == "ell_pull"
+        """Scans the single padded reverse-ELL slab."""
+        return self.backend == "ell_pull" or (
+            self.direction == "auto" and self.pull == "ell"
+        )
+
+    @property
+    def needs_binned(self) -> bool:
+        """Scans the degree-binned reverse slabs."""
+        return self.backend == "pull_binned" or (
+            self.direction == "auto" and self.pull == "binned"
+        )
 
     @property
     def needs_blocks(self) -> bool:
@@ -115,6 +148,8 @@ class ExtendSpec:
 _ALIASES = {
     "dopt": ExtendSpec(direction="auto"),
     "auto": ExtendSpec(direction="auto"),
+    "dopt_ell": ExtendSpec(direction="auto", pull="ell"),
+    "dopt_binned": ExtendSpec(direction="auto", pull="binned"),
 }
 
 
@@ -136,13 +171,15 @@ def as_spec(extend) -> ExtendSpec:
 class GraphOperands:
     """The physical scan operands of one graph (or one graph shard).
 
-    ``fwd`` is always present; ``rev`` / ``blocks`` are materialized only
-    when the engine's ExtendSpec needs them (treedefs must match shard_map
-    in_specs exactly, so engines carry precisely the operands they scan).
+    ``fwd`` is always present; ``rev`` / ``rev_binned`` / ``blocks`` are
+    materialized only when the engine's ExtendSpec needs them (treedefs
+    must match shard_map in_specs exactly, so engines carry precisely the
+    operands they scan).
     """
 
     fwd: EllGraph
     rev: Optional[EllGraph] = None
+    rev_binned: Optional[BinnedRevEll] = None
     blocks: Optional[ShardedBlocks] = None
 
     @property
@@ -162,31 +199,47 @@ def build_operands(
     max_deg: int | None = None,
     shards: int = 1,
     block: int | None = None,
+    binned_shards: int | None = None,
 ) -> tuple[GraphOperands, int]:
     """Host-side operand construction (single-host variant; the mesh-aware
     path in ``dispatcher.prepare_graph`` adds device placement).
 
     Pads rows to a multiple of ``shards * pad_block`` and derives reverse /
-    block operands from the *truncated* forward graph so every backend scans
-    the identical edge set. Returns (operands, n_pad).
+    binned / block operands from the *truncated* forward graph so every
+    backend scans the identical edge set. ``binned_shards`` overrides the
+    shard count the binned slabs are built for (binning is per shard, so
+    ``prepare_graph`` bins at the policy's own shard count even when rows
+    pad for a larger ``pad_shards`` lcm). Returns (operands, n_pad).
     """
     spec = as_spec(extend)
     pad_block = block or spec.pad_block
-    # the effective cap is the ELL row width, i.e. max_deg rounded up to the
-    # ELL pad multiple — matching the historical ell_from_csr(csr, max_deg)
-    # semantics so capped queries return the same results as the seed engine
-    cap = None if max_deg is None else -(-int(max_deg) // 8) * 8
-    eff = truncate_csr(csr, cap)
+    eff = effective_csr(csr, max_deg)
     fwd = pad_ell(ell_from_csr(eff), shards, block=pad_block)
     n_pad = fwd.n_nodes
     rev = None
     if spec.needs_rev:
         rev = pad_ell(ell_from_csr(eff.reverse()), shards, block=pad_block)
         assert rev.n_nodes == n_pad, (rev.n_nodes, n_pad)
+    rev_binned = None
+    if spec.needs_binned:
+        k = shards if binned_shards is None else int(binned_shards)
+        rev_binned = binned_rev_csr(eff, n_pad, k)
     blocks = None
     if spec.needs_blocks:
         blocks = sharded_blocks_from_csr(eff, n_pad, shards, spec.block)
-    return GraphOperands(fwd=fwd, rev=rev, blocks=blocks), n_pad
+    return (
+        GraphOperands(fwd=fwd, rev=rev, rev_binned=rev_binned, blocks=blocks),
+        n_pad,
+    )
+
+
+def effective_csr(csr: CSRGraph, max_deg: int | None) -> CSRGraph:
+    """The edge set every backend scans under a ``max_deg`` cap: the cap is
+    the ELL row width (max_deg rounded up to the ELL pad multiple) —
+    matching the historical ``ell_from_csr(csr, max_deg)`` semantics so
+    capped queries return the same results as the seed engine."""
+    cap = None if max_deg is None else -(-int(max_deg) // 8) * 8
+    return truncate_csr(csr, cap)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -321,6 +374,8 @@ def _pull_gather_lanes(rev: EllGraph, gl: jax.Array) -> jax.Array:
     scatter so the gather temp stays bounded."""
     rows, D = rev.indices.shape
     L = gl.shape[-1]
+    if D == 0:  # zero-width slab (edgeless/zero-cap): reductions over a
+        return jnp.zeros((rows, L), gl.dtype)  # size-0 axis have no identity
     chunk = _deg_chunk(rows, L)
     if chunk >= D:
         got = gl.at[rev.indices].get(mode="fill", fill_value=0)
@@ -339,6 +394,8 @@ def _pull_gather_lanes(rev: EllGraph, gl: jax.Array) -> jax.Array:
 def _pull_min_parent_lanes(rev: EllGraph, gl: jax.Array) -> jax.Array:
     rows, D = rev.indices.shape
     L = gl.shape[-1]
+    if D == 0:
+        return jnp.full((rows, L), NO_PARENT, jnp.int32)
     chunk = _deg_chunk(rows, 4 * L)
 
     def step(idx, acc):
@@ -390,8 +447,11 @@ class PullBackend:
     def _min_parent(ops, gf, visited, ctx):
         rev = ops.rev
         rows = rev.indices.shape[0]
-        got = gf.at[rev.indices].get(mode="fill", fill_value=False)
-        cand = jnp.where(got, rev.indices, NO_PARENT).min(axis=1)
+        if rev.indices.shape[1] == 0:
+            cand = jnp.full((rows,), NO_PARENT, jnp.int32)
+        else:
+            got = gf.at[rev.indices].get(mode="fill", fill_value=False)
+            cand = jnp.where(got, rev.indices, NO_PARENT).min(axis=1)
         if visited is not None:
             cand = jnp.where(
                 _local_state(visited, rows, ctx), NO_PARENT, cand
@@ -411,6 +471,12 @@ class PullBackend:
     @staticmethod
     def _min_dist(ops, gdu, ctx):
         rev = ops.rev
+        rows = rev.indices.shape[0]
+        if rev.indices.shape[1] == 0:
+            return _place_rows(
+                jnp.full((rows,), jnp.inf, jnp.float32), ctx,
+                jnp.float32(jnp.inf),
+            )
         w = (
             rev.weights
             if rev.weights is not None
@@ -467,6 +533,179 @@ class PullBackend:
         return (
             PullBackend._reach_lanes(ops, gl, visited, ctx),
             PullBackend._min_parent_lanes(ops, gl, visited, ctx),
+        )
+
+
+# ---------------------------------------------------------------------------
+# pull_binned — the pull gather over degree-binned reverse slabs.
+# ---------------------------------------------------------------------------
+
+
+def _binned_map(bn: BinnedRevEll, per_slab, neutral):
+    """Run ``per_slab(slab_idx, slab)`` over every nonempty slab, produce
+    the ``neutral(rows_b)`` value for zero-width/zero-row slabs, and
+    un-permute the concatenated per-binned-row results back to original
+    local-row order. ``per_slab`` maps ``[rows_b, width_b]`` indices to a
+    ``[rows_b, ...]`` reduction; padding rows/slots carry the sentinel
+    index so gathers fill with the reduction's neutral element."""
+    parts = []
+    for b, slab in enumerate(bn.slabs):
+        s = slab[0]  # shard-local slice: [rows_b, width_b]
+        if s.shape[0] == 0 or s.shape[1] == 0:
+            parts.append(neutral(s.shape[0]))
+        else:
+            parts.append(per_slab(b, s))
+    cat = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+    return cat[bn.inv[0]]
+
+
+class BinnedPullBackend:
+    """The ``ell_pull`` contract over ``BinnedRevEll`` slabs.
+
+    Identical math to PullBackend — same reverse edge set (both derive
+    from the truncated forward graph), same OR/min merges, same
+    visited-suppression — so final states stay bit-identical; only the
+    scan layout changes: each degree bucket is padded to its own width,
+    so a full scan costs ~sum(in_deg) slots instead of n·max_in_deg.
+    """
+
+    name = "pull_binned"
+
+    # -- collective-free cores (global activation tensors precomputed) ------
+
+    @staticmethod
+    def _reach_dense(ops, gf, visited, ctx):
+        bn = ops.rev_binned
+        rows = bn.rows_local
+        reached = _binned_map(
+            bn,
+            lambda b, s: gf.at[s]
+            .get(mode="fill", fill_value=False)
+            .any(axis=1),
+            lambda r: jnp.zeros((r,), jnp.bool_),
+        )
+        if visited is not None:
+            reached &= ~_local_state(visited, rows, ctx)
+        return _place_rows(reached, ctx, False)
+
+    @staticmethod
+    def _reach_lanes(ops, gl, visited, ctx):
+        bn = ops.rev_binned
+        rows = bn.rows_local
+        L = gl.shape[-1]
+        reached = _binned_map(
+            bn,
+            lambda b, s: gl.at[s].get(mode="fill", fill_value=0).max(axis=1),
+            lambda r: jnp.zeros((r, L), gl.dtype),
+        )
+        if visited is not None:
+            vloc = _local_state(visited, rows, ctx)
+            reached = jnp.where(vloc != 0, 0, reached)
+        return _place_rows(reached, ctx, 0)
+
+    @staticmethod
+    def _min_parent(ops, gf, visited, ctx):
+        bn = ops.rev_binned
+        rows = bn.rows_local
+        cand = _binned_map(
+            bn,
+            lambda b, s: jnp.where(
+                gf.at[s].get(mode="fill", fill_value=False), s, NO_PARENT
+            ).min(axis=1),
+            lambda r: jnp.full((r,), NO_PARENT, jnp.int32),
+        )
+        if visited is not None:
+            cand = jnp.where(
+                _local_state(visited, rows, ctx), NO_PARENT, cand
+            )
+        return _place_rows(cand, ctx, NO_PARENT)
+
+    @staticmethod
+    def _min_parent_lanes(ops, gl, visited, ctx):
+        bn = ops.rev_binned
+        rows = bn.rows_local
+        L = gl.shape[-1]
+
+        def per_slab(b, s):
+            act = gl.at[s].get(mode="fill", fill_value=0)  # [rb, w, L]
+            cand = jnp.where(
+                act != 0, s[:, :, None].astype(jnp.int32), NO_PARENT
+            )
+            return cand.min(axis=1)
+
+        cand = _binned_map(
+            bn, per_slab, lambda r: jnp.full((r, L), NO_PARENT, jnp.int32)
+        )
+        if visited is not None:
+            vloc = _local_state(visited, rows, ctx)
+            cand = jnp.where(vloc != 0, NO_PARENT, cand)
+        return _place_rows(cand, ctx, NO_PARENT)
+
+    @staticmethod
+    def _min_dist(ops, gdu, ctx):
+        bn = ops.rev_binned
+
+        def per_slab(b, s):
+            w = (
+                bn.slab_weights[b][0]
+                if bn.slab_weights is not None
+                else jnp.ones(s.shape, jnp.float32)
+            )
+            got = gdu.at[s].get(mode="fill", fill_value=jnp.inf)
+            return (got + w).min(axis=1)
+
+        cand = _binned_map(
+            bn, per_slab, lambda r: jnp.full((r,), jnp.inf, jnp.float32)
+        )
+        return _place_rows(cand, ctx, jnp.float32(jnp.inf))
+
+    # -- public contract ----------------------------------------------------
+
+    @staticmethod
+    def reach_dense(ops, frontier, visited, ctx):
+        return BinnedPullBackend._reach_dense(
+            ops, _global_or(frontier, ctx), visited, ctx
+        )
+
+    @staticmethod
+    def reach_lanes(ops, lanes, visited, ctx):
+        return BinnedPullBackend._reach_lanes(
+            ops, _global_or(lanes, ctx), visited, ctx
+        )
+
+    @staticmethod
+    def min_parent(ops, frontier, visited, ctx):
+        return BinnedPullBackend._min_parent(
+            ops, _global_or(frontier, ctx), visited, ctx
+        )
+
+    @staticmethod
+    def min_parent_lanes(ops, lanes, visited, ctx):
+        return BinnedPullBackend._min_parent_lanes(
+            ops, _global_or(lanes, ctx), visited, ctx
+        )
+
+    @staticmethod
+    def min_dist(ops, dist, frontier, ctx):
+        du = jnp.where(frontier, dist, jnp.inf)
+        return BinnedPullBackend._min_dist(
+            ops, _global_min(du, ctx, jnp.float32(jnp.inf)), ctx
+        )
+
+    @staticmethod
+    def reach_parent_dense(ops, frontier, visited, ctx):
+        gf = _global_or(frontier, ctx)  # one union serves both scans
+        return (
+            BinnedPullBackend._reach_dense(ops, gf, visited, ctx),
+            BinnedPullBackend._min_parent(ops, gf, visited, ctx),
+        )
+
+    @staticmethod
+    def reach_parent_lanes(ops, lanes, visited, ctx):
+        gl = _global_or(lanes, ctx)
+        return (
+            BinnedPullBackend._reach_lanes(ops, gl, visited, ctx),
+            BinnedPullBackend._min_parent_lanes(ops, gl, visited, ctx),
         )
 
 
@@ -558,6 +797,11 @@ class AutoBackend:
     def __init__(self, spec: ExtendSpec):
         self.alpha = spec.alpha
         self.beta = spec.beta
+        # bottom-up flavor of the switch: degree-binned slabs (default)
+        # or the single padded reverse ELL — same math, different scan
+        self.pull_be = (
+            BinnedPullBackend if spec.pull == "binned" else PullBackend
+        )
 
     def _use_pull(self, ops, frontier, visited, ctx):
         g = ops.fwd
@@ -587,7 +831,7 @@ class AutoBackend:
         gf = _global_or(frontier, ctx)
         return self._switch(
             ops, frontier, visited, ctx,
-            lambda: PullBackend._reach_dense(ops, gf, visited, ctx),
+            lambda: self.pull_be._reach_dense(ops, gf, visited, ctx),
             lambda: PushBackend.reach_dense(ops, frontier, visited, ctx),
         )
 
@@ -595,7 +839,7 @@ class AutoBackend:
         gl = _global_or(lanes, ctx)
         return self._switch(
             ops, lanes, visited, ctx,
-            lambda: PullBackend._reach_lanes(ops, gl, visited, ctx),
+            lambda: self.pull_be._reach_lanes(ops, gl, visited, ctx),
             lambda: PushBackend.reach_lanes(ops, lanes, visited, ctx),
         )
 
@@ -603,7 +847,7 @@ class AutoBackend:
         gf = _global_or(frontier, ctx)
         return self._switch(
             ops, frontier, visited, ctx,
-            lambda: PullBackend._min_parent(ops, gf, visited, ctx),
+            lambda: self.pull_be._min_parent(ops, gf, visited, ctx),
             lambda: PushBackend.min_parent(ops, frontier, visited, ctx),
         )
 
@@ -611,7 +855,7 @@ class AutoBackend:
         gl = _global_or(lanes, ctx)
         return self._switch(
             ops, lanes, visited, ctx,
-            lambda: PullBackend._min_parent_lanes(ops, gl, visited, ctx),
+            lambda: self.pull_be._min_parent_lanes(ops, gl, visited, ctx),
             lambda: PushBackend.min_parent_lanes(ops, lanes, visited, ctx),
         )
 
@@ -620,7 +864,7 @@ class AutoBackend:
         gdu = _global_min(du, ctx, jnp.float32(jnp.inf))
         return self._switch(
             ops, frontier, None, ctx,
-            lambda: PullBackend._min_dist(ops, gdu, ctx),
+            lambda: self.pull_be._min_dist(ops, gdu, ctx),
             lambda: PushBackend.min_dist(ops, dist, frontier, ctx),
         )
 
@@ -630,8 +874,8 @@ class AutoBackend:
         return self._switch(
             ops, frontier, visited, ctx,
             lambda: (
-                PullBackend._reach_dense(ops, gf, visited, ctx),
-                PullBackend._min_parent(ops, gf, visited, ctx),
+                self.pull_be._reach_dense(ops, gf, visited, ctx),
+                self.pull_be._min_parent(ops, gf, visited, ctx),
             ),
             lambda: PushBackend.reach_parent_dense(
                 ops, frontier, visited, ctx
@@ -643,8 +887,8 @@ class AutoBackend:
         return self._switch(
             ops, lanes, visited, ctx,
             lambda: (
-                PullBackend._reach_lanes(ops, gl, visited, ctx),
-                PullBackend._min_parent_lanes(ops, gl, visited, ctx),
+                self.pull_be._reach_lanes(ops, gl, visited, ctx),
+                self.pull_be._min_parent_lanes(ops, gl, visited, ctx),
             ),
             lambda: PushBackend.reach_parent_lanes(ops, lanes, visited, ctx),
         )
@@ -653,6 +897,7 @@ class AutoBackend:
 _FIXED = {
     "ell_push": PushBackend,
     "ell_pull": PullBackend,
+    "pull_binned": BinnedPullBackend,
     "block_mxu": BlockBackend,
 }
 

@@ -59,6 +59,12 @@ def run_ife(
     if spec.needs_rev and ops.rev is None:
         raise ValueError(f"extend={spec.backend!r} needs reverse operands; "
                          "build the graph with core.extend.build_operands")
+    if spec.needs_binned and ops.rev_binned is None:
+        raise ValueError(
+            f"extend={spec.backend!r}/{spec.direction} needs degree-binned "
+            "reverse operands; build the graph with "
+            "core.extend.build_operands"
+        )
     if spec.needs_blocks and ops.blocks is None:
         raise ValueError("extend='block_mxu' needs block operands; "
                          "build the graph with core.extend.build_operands")

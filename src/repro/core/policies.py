@@ -21,13 +21,26 @@ morsels (nTkS, per-shard convergence), phase 2 re-dispatches the surviving
 morsels as frontier-level morsels (nT1S over every mesh axis) — the paper's
 "morsels at both the source node and frontier levels", realized at runtime
 instead of as a static mesh assignment.
+
+``recommend_backend`` + ``fit_direction_thresholds`` do the same for the
+*physical scan layout* of the extension step (core.extend backends): the
+default recommendation is the Beamer direction switch over degree-binned
+pull slabs, and its alpha/beta constants — Beamer's hand-tuned CPU values —
+can be replaced by thresholds fitted per (dataset-family, degree-bucket)
+from the per-iteration scan traces ``benchmarks/direction_opt.py``
+accumulates in ``BENCH_direction_opt.json`` (same shape as the adaptive
+scheduler's phase-1 budget learner: measure, quantize, serve).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+import json
+import math
+from pathlib import Path
+from typing import Mapping, Sequence
 
 from .collectives import REDISPATCH_OR_IMPL
+from .extend import ExtendSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,13 +148,161 @@ def recommend_policy(
     return "ntks"
 
 
+# ---------------------------------------------------------------------------
+# Direction thresholds: Beamer's constants, optionally re-fitted from traces.
+# ---------------------------------------------------------------------------
+
+BEAMER_ALPHA = 14.0
+BEAMER_BETA = 24.0
+
+
+def degree_bucket(avg_degree: float) -> int:
+    """pow2 bucket id of a workload's average degree (the granularity the
+    fitted threshold table is keyed at): 0 for <=1, else ceil(log2)."""
+    if avg_degree <= 1.0:
+        return 0
+    return int(math.ceil(math.log2(avg_degree) - 1e-12))
+
+
+@dataclasses.dataclass(frozen=True)
+class DirectionThresholds:
+    """Fitted (alpha, beta) per (dataset-family, degree-bucket).
+
+    ``table`` maps ``(family, bucket)`` to ``(alpha, beta)``; lookups fall
+    back family-first (nearest bucket of the same family), then to the
+    Beamer defaults — so the table is total over every query even when the
+    bench traces only covered a few workload families.
+    """
+
+    table: Mapping  # {(family, bucket): (alpha, beta)}
+    default: tuple = (BEAMER_ALPHA, BEAMER_BETA)
+
+    def lookup(self, family: str | None, avg_degree: float) -> tuple:
+        b = degree_bucket(avg_degree)
+        if family is not None:
+            if (family, b) in self.table:
+                return self.table[(family, b)]
+            near = [
+                (abs(kb - b), kb, v)
+                for (kf, kb), v in self.table.items()
+                if kf == family
+            ]
+            if near:
+                return min(near)[2]
+        # no family match: nearest bucket across all families, then default
+        near = [(abs(kb - b), kb, v) for (_, kb), v in self.table.items()]
+        if near:
+            return min(near)[2]
+        return self.default
+
+
+def _fit_group(recs: list[tuple], pull_key: str) -> tuple:
+    """One (family, bucket) group: pick (alpha, beta) minimizing the total
+    scanned slots the Beamer predicate would have chosen over the trace.
+    ``recs`` are (iteration_record, n) pairs — n travels per record, since
+    one group may aggregate same-family workloads of different sizes.
+
+    Candidate thresholds come from the trace itself — each iteration's
+    ``m_u/m_f`` (resp. ``n/n_f``) ratio is the exact alpha (beta) at which
+    that iteration's predicate flips — plus the Beamer defaults, so the
+    search space is the set of distinct decision boundaries the trace can
+    express. Deterministic: ties break toward the Beamer constants."""
+    pts = []
+    for r, n in recs:
+        if any(
+            r.get(k) is None
+            for k in ("m_frontier", "m_unexplored", "frontier",
+                      "push_slots", pull_key)
+        ):
+            continue  # pre-v2 / trimmed record: contributes no sample
+        m_f = float(r["m_frontier"])
+        m_u = float(r["m_unexplored"])
+        n_f = float(r["frontier"])
+        pts.append(
+            (m_f, m_u, n_f, float(n), float(r["push_slots"]),
+             float(r[pull_key]))
+        )
+    if not pts:
+        return (BEAMER_ALPHA, BEAMER_BETA)
+    eps = 1e-9
+    alphas = sorted(
+        {m_u / m_f * (1 + eps) for m_f, m_u, *_ in pts if m_f > 0}
+        | {BEAMER_ALPHA, 0.0}
+    )
+    betas = sorted(
+        {n / n_f * (1 + eps) for _, _, n_f, n, _, _ in pts if n_f > 0}
+        | {BEAMER_BETA, 0.0}
+    )
+
+    def cost(a: float, b: float) -> float:
+        tot = 0.0
+        for m_f, m_u, n_f, n, push, pull in pts:
+            use_pull = (m_f * a > m_u) and (n_f * b > n)
+            tot += pull if use_pull else push
+        return tot
+
+    def key(ab):
+        a, b = ab
+        return (
+            cost(a, b),
+            abs(a - BEAMER_ALPHA) + abs(b - BEAMER_BETA),
+            a,
+            b,
+        )
+
+    return min(((a, b) for a in alphas for b in betas), key=key)
+
+
+def fit_direction_thresholds(
+    traces, pull: str = "binned"
+) -> DirectionThresholds:
+    """Fit per-(dataset-family, degree-bucket) alpha/beta from bench traces.
+
+    ``traces``: a parsed ``BENCH_direction_opt.json`` document (or its
+    ``workloads`` list, or a path to the file). Iteration records need the
+    schema-v2 fields ``m_frontier`` / ``m_unexplored`` / ``push_slots`` /
+    ``pull_slots_{binned,ell}`` (older records are skipped — the fit
+    degrades to the Beamer defaults, never fails). ``pull`` selects which
+    pull flavor's measured cost the thresholds optimize for; "binned" is
+    what ``recommend_backend`` serves.
+    """
+    if isinstance(traces, (str, Path)):
+        traces = json.loads(Path(traces).read_text())
+    workloads = traces.get("workloads", traces) if isinstance(
+        traces, dict
+    ) else traces
+    pull_key = f"pull_slots_{pull}"
+    groups: dict[tuple, list] = {}
+    for w in workloads:
+        # the runtime predicate compares n_f*beta against the PADDED row
+        # count (ExtendCtx.n_out), so beta must be fitted against n_pad,
+        # not the logical node count; old traces fall back to n
+        n = w.get("n_pad", w.get("n"))
+        if n is None:
+            continue
+        fam = w.get("kind", "unknown")
+        bucket = degree_bucket(float(w.get("avg_degree", 1.0)))
+        recs = groups.setdefault((fam, bucket), [])
+        # every backend replays the same frontier trajectory (bit-parity),
+        # so the canonical push trace carries the group's cost samples
+        be = w.get("backends", {}).get("ell_push", {})
+        recs.extend((r, int(n)) for r in be.get("iterations", []))
+    table = {
+        k: _fit_group(recs, pull_key) for k, recs in groups.items()
+    }
+    return DirectionThresholds(table=table)
+
+
 def recommend_backend(
     edge_compute: str = "sp_lengths",
     avg_degree: float = 8.0,
     n_nodes: int | None = None,
     lanes: int = 1,
     block: int = 128,
-) -> str:
+    family: str | None = None,
+    thresholds: DirectionThresholds | None = None,
+    operands=None,
+):
     """Physical scan layout for the extension step (core.extend backends).
 
     The EmptyHeaded lesson as a dispatch rule: pick the layout by expected
@@ -154,17 +315,45 @@ def recommend_backend(
       saturating-matmul block path amortizes one adjacency scan over all
       lanes on the MXU and skips frontier-empty stripes.
     - everything else (BFS-family traversals): the Beamer alpha/beta
-      direction switch — push while frontiers are sparse, pull with
-      visited-suppression once the frontier's edge mass dominates.
+      direction switch over **degree-binned** pull slabs — push while
+      frontiers are sparse, binned pull with visited-suppression once the
+      frontier's edge mass dominates. With a fitted ``thresholds`` table
+      the switch runs the trace-fitted alpha/beta for this
+      (``family``, degree-bucket) instead of Beamer's CPU constants.
+
+    Deterministic and *total*: a pure function of its arguments, and when
+    the caller passes the ``operands`` bundle (or a bare EllGraph, like
+    every other operand-accepting entry point) it will only ever name a
+    backend whose physical operands exist in that bundle (falling back
+    toward ``ell_push``, which every bundle carries).
     """
+    from .extend import as_operands
+
+    ops = None if operands is None else as_operands(operands)
+    have = lambda attr: ops is None or getattr(ops, attr) is not None
     if edge_compute == "bellman_ford":
         return "ell_push"
     dense_blocks = (
         n_nodes is not None and avg_degree * block * block >= n_nodes
     )  # expected edges per block² tile = avg_degree·block²/n ≥ 1
-    if lanes >= 64 and dense_blocks:
+    if lanes >= 64 and dense_blocks and have("blocks"):
         return "block_mxu"
-    return "dopt"
+    if have("rev_binned"):
+        if thresholds is not None:
+            alpha, beta = thresholds.lookup(family, avg_degree)
+            return ExtendSpec(
+                direction="auto", alpha=float(alpha), beta=float(beta)
+            )
+        return "dopt_binned"
+    if have("rev"):
+        if thresholds is not None:
+            alpha, beta = thresholds.lookup(family, avg_degree)
+            return ExtendSpec(
+                direction="auto", pull="ell",
+                alpha=float(alpha), beta=float(beta),
+            )
+        return "dopt_ell"
+    return "ell_push"
 
 
 def recommend_k(avg_degree: float, n_threads: int = 32) -> int:

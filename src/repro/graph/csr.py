@@ -8,6 +8,13 @@ Two device-side layouts and one host-side layout:
   TPU-friendly: every row has ``max_deg`` slots, padding uses the out-of-bounds
   sentinel ``n_nodes`` so scatter ops drop it. This is the layout the IFE engine
   extends frontiers over.
+- ``BinnedRevEll`` (device, jnp): degree-binned reverse-adjacency slabs for the
+  bottom-up (pull) extension. Rows are permuted into pow2-bounded degree
+  buckets and each bucket is its own ELL slab padded only to that bucket's
+  width, so a pull scan costs ~``sum(in_deg)`` slots instead of the single
+  padded slab's ``n × max_in_deg`` (EmptyHeaded-style per-row layout
+  specialization). The (permutation, inverse) pair restores the original row
+  order bit-identically.
 - ``BlockAdjacency`` (device, jnp): 0/1 dense blocks of the adjacency matrix plus
   block coordinates — the block-sparse layout consumed by the ``msbfs_extend``
   Pallas kernel (MXU formulation of MS-BFS).
@@ -157,12 +164,22 @@ def ell_from_csr(
 
     Fully vectorized (no per-node Python loop): host-side graph prep is
     O(n_edges) numpy index arithmetic, so setup no longer dominates for
-    large graphs."""
+    large graphs.
+
+    A zero effective cap (``max_deg=0``, or an edgeless graph with
+    ``max_deg=None``) yields a genuine zero-width ``[n, 0]`` slab — NOT a
+    1-wide padded row. Every slot of a 1-wide slab would be scanned by
+    every backend on every iteration for rows that own no edges, which
+    breaks the binned-pull scanned-slot accounting (and the historical
+    ``max_deg or 1`` coercion silently turned an explicit 0 into 8)."""
     n = csr.n_nodes
     degs = csr.degrees.astype(np.int32)
-    cap = int(degs.max()) if max_deg is None and n else int(max_deg or 1)
-    cap = max(cap, 1)
-    cap = -(-cap // pad_to_multiple) * pad_to_multiple
+    if max_deg is None:
+        cap = int(degs.max()) if n else 0
+    else:
+        cap = max(int(max_deg), 0)
+    if cap > 0:
+        cap = -(-cap // pad_to_multiple) * pad_to_multiple
     indices = np.full((n, cap), n, dtype=np.int32)  # sentinel = n
     rows, slots, pos = _ell_slot_positions(csr.indptr, cap)
     indices[rows, slots] = csr.indices[pos]
@@ -194,6 +211,185 @@ def truncate_csr(csr: CSRGraph, max_deg: Optional[int]) -> CSRGraph:
         indptr=indptr,
         indices=csr.indices[pos].astype(np.int32),
         weights=None if csr.weights is None else csr.weights[pos],
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BinnedRevEll:
+    """Degree-binned reverse-adjacency slabs (the pull-gather operand).
+
+    Reverse rows are partitioned into degree buckets with pow2-bounded
+    edges, refined so that every row's slab width is within
+    ``max_overhead`` of its true in-degree; bucket ``b`` is a dense ELL
+    slab ``slabs[b]: [K, rows_b, width_b]`` holding in-neighbor ids
+    (sentinel = padded row count ⇒ out-of-range gathers fill with the
+    neutral element). ``K`` is the graph shard count: shard ``k`` owns
+    contiguous local rows ``[k·rows_local, (k+1)·rows_local)`` and bins
+    them independently, but slab shapes are common across shards (counts
+    padded to the per-bucket max) so the structure is SPMD under
+    shard_map — leading axes shard over the policy's graph mesh axes.
+
+    Row placement is carried by a per-shard permutation: concatenating
+    the slabs row-major gives a ``[K, rows_binned]`` virtual vector of
+    per-row gather results; ``perm[k, p]`` is the local row stored at
+    binned position ``p`` (``rows_local`` for slab-padding rows) and
+    ``inv[k, r]`` is the binned position of local row ``r`` — so
+    ``cat[inv]`` restores the original row order bit-identically.
+
+    Zero-in-degree rows (including rows emptied by degree truncation)
+    live in a genuine **zero-width** slab: they cost nothing to scan.
+    """
+
+    slabs: tuple  # of jax.Array [K, rows_b, width_b] int32 per bucket
+    perm: jax.Array  # [K, rows_binned] int32 (binned pos -> local row)
+    inv: jax.Array  # [K, rows_local] int32 (local row -> binned pos)
+    slab_weights: Optional[tuple] = None  # [K, rows_b, width_b] f32 each
+
+    @property
+    def n_slabs(self) -> int:
+        return len(self.slabs)
+
+    @property
+    def rows_local(self) -> int:
+        return self.inv.shape[-1]
+
+    @property
+    def widths(self) -> tuple:
+        return tuple(int(s.shape[-1]) for s in self.slabs)
+
+    @property
+    def capacity_slots(self) -> int:
+        """Total adjacency slots of one shard's full scan (the binned
+        pull's worst-case per-iteration scan extent)."""
+        return int(sum(s.shape[-2] * s.shape[-1] for s in self.slabs))
+
+    def row_widths(self) -> np.ndarray:
+        """[K, rows_local] host array: each local row's slab width — the
+        slots a pull scan pays for that row (scanned-slot accounting)."""
+        w = np.concatenate(
+            [
+                np.full((s.shape[-2],), s.shape[-1], np.int64)
+                for s in self.slabs
+            ]
+        )
+        return w[np.asarray(self.inv)]
+
+
+def _degree_bucket_edges(
+    degs: np.ndarray, max_overhead: float
+) -> list[tuple[int, int]]:
+    """Inclusive (lo, hi) degree ranges of the nonzero buckets.
+
+    Pow2 bucket edges, greedily refined over the distinct degree values
+    so every bucket satisfies ``hi <= max_overhead * lo`` — which bounds
+    each row's padding (slab width / true degree) and therefore the whole
+    structure's scan overhead by ``max_overhead``."""
+    uniq = np.unique(degs[degs > 0])
+    edges: list[tuple[int, int]] = []
+    i = 0
+    while i < len(uniq):
+        lo = int(uniq[i])
+        pow2_hi = 1 << (lo - 1).bit_length() if lo > 1 else 1
+        limit = min(int(lo * max_overhead), pow2_hi) if lo > 1 else 1
+        j = i
+        while j + 1 < len(uniq) and int(uniq[j + 1]) <= limit:
+            j += 1
+        edges.append((lo, int(uniq[j])))
+        i = j + 1
+    return edges
+
+
+def binned_rev_csr(
+    csr: CSRGraph,
+    n_pad: int,
+    shards: int = 1,
+    max_overhead: float = 1.1,
+) -> BinnedRevEll:
+    """Build the degree-binned reverse slabs of (the truncated) ``csr``.
+
+    ``csr`` is the *forward* effective graph (see ``truncate_csr``) so the
+    pull gather enumerates exactly the edge set every other backend scans;
+    ``n_pad`` is the padded row count (divisible by ``shards``); rows
+    ``>= csr.n_nodes`` are empty and land in the zero-width slab.
+    Host-side, vectorized numpy; deterministic in its inputs.
+    """
+    assert n_pad % max(shards, 1) == 0, (n_pad, shards)
+    rev = csr.reverse()
+    n = rev.n_nodes
+    rows_local = n_pad // shards
+    degs = np.zeros(n_pad, np.int64)
+    degs[:n] = rev.degrees
+    nz_edges = _degree_bucket_edges(degs, max_overhead)
+    # bucket 0 is always the zero-width slab (rows with no in-edges)
+    bucket_of = np.zeros(n_pad, np.int64)
+    widths = [0]
+    for b, (lo, hi) in enumerate(nz_edges, start=1):
+        bucket_of[(degs >= lo) & (degs <= hi)] = b
+        widths.append(hi)
+    n_buckets = len(widths)
+    shard_of = np.arange(n_pad, dtype=np.int64) // rows_local
+    local = np.arange(n_pad, dtype=np.int64) % rows_local
+
+    # per-(shard, bucket) counts; slab row counts pad to the shard max
+    counts = np.zeros((shards, n_buckets), np.int64)
+    np.add.at(counts, (shard_of, bucket_of), 1)
+    rows_b = counts.max(axis=0)
+    starts = np.concatenate([[0], np.cumsum(rows_b)])[:-1]
+    rows_binned = int(rows_b.sum())
+
+    # stable slot assignment: rows of one (shard, bucket) keep ascending
+    # local-row order — the permutation is deterministic
+    order = np.lexsort((local, bucket_of, shard_of))
+    o_shard, o_bucket, o_local = (
+        shard_of[order], bucket_of[order], local[order]
+    )
+    key = o_shard * n_buckets + o_bucket
+    run_start = np.concatenate([[0], np.cumsum(np.bincount(
+        key.astype(np.int64), minlength=shards * n_buckets
+    ))])[:-1]
+    slot_in_bucket = np.arange(n_pad, dtype=np.int64) - run_start[key]
+    pos = starts[o_bucket] + slot_in_bucket  # binned position per row
+
+    perm = np.full((shards, rows_binned), rows_local, np.int32)
+    perm[o_shard, pos] = o_local.astype(np.int32)
+    inv = np.zeros((shards, rows_local), np.int32)
+    inv[o_shard, o_local] = pos.astype(np.int32)
+
+    has_w = rev.weights is not None
+    slabs, slab_w = [], []
+    for b in range(n_buckets):
+        w = widths[b]
+        slab = np.full((shards, int(rows_b[b]), w), n_pad, np.int32)
+        wslab = (
+            np.zeros((shards, int(rows_b[b]), w), np.float32)
+            if has_w
+            else None
+        )
+        if w > 0:
+            sel = o_bucket == b  # rows of this bucket, slot order
+            rows = order[sel]  # global row ids
+            kept = degs[rows]
+            flat = np.repeat(np.arange(len(rows)), kept)
+            slots = np.arange(int(kept.sum()), dtype=np.int64) - np.repeat(
+                np.cumsum(kept) - kept, kept
+            )
+            src = rev.indptr[rows][flat] + slots
+            slab[o_shard[sel][flat], slot_in_bucket[sel][flat], slots] = (
+                rev.indices[src]
+            )
+            if has_w:
+                wslab[
+                    o_shard[sel][flat], slot_in_bucket[sel][flat], slots
+                ] = rev.weights[src]
+        slabs.append(jnp.asarray(slab))
+        if has_w:
+            slab_w.append(jnp.asarray(wslab))
+    return BinnedRevEll(
+        slabs=tuple(slabs),
+        perm=jnp.asarray(perm),
+        inv=jnp.asarray(inv),
+        slab_weights=tuple(slab_w) if has_w else None,
     )
 
 

@@ -112,6 +112,16 @@ PAPER_DATASETS = {
     "graph500": lambda scale=1.0, seed=3: graph500_proxy(12, seed=seed),
 }
 
+#: degree-structure family of each proxy — the key the fitted
+#: direction-threshold table (core.policies.DirectionThresholds) is looked
+#: up by; keep in sync with PAPER_DATASETS when adding datasets
+PAPER_DATASET_FAMILIES = {
+    "ldbc": "powerlaw",
+    "lj": "powerlaw",
+    "spotify": "er",
+    "graph500": "powerlaw",  # RMAT: heavy-tail, closest to the powerlaw fit
+}
+
 
 def pick_sources(
     csr: CSRGraph, n_sources: int, seed: int = 0, min_levels: int = 3

@@ -7,8 +7,12 @@ and reused across request batches, and each batch executes as the paper's
 hybrid — phase 1 issues source-level morsels with per-shard convergence,
 phase 2 re-dispatches stragglers at the frontier level — with the policy
 picked per batch by the paper's robustness rule (``recommend_policy``)
-unless pinned. The driver reports per-phase latency percentiles so the
-hybrid's split is observable in serving terms.
+unless pinned, and the frontier-extension scan layout picked by
+``recommend_backend`` (the default: direction-optimized degree-binned
+pull; ``--thresholds`` swaps Beamer's alpha/beta for constants fitted
+from ``BENCH_direction_opt.json`` traces). The driver reports per-phase
+latency percentiles so the hybrid's split is observable in serving
+terms.
 
     PYTHONPATH=src python -m repro.launch.serve --dataset ldbc \
         --batches 20 --sources-per-batch 8
@@ -22,7 +26,11 @@ import jax
 import numpy as np
 
 from ..core import histogram_lengths, reconstruct_paths
-from ..graph.generators import PAPER_DATASETS, pick_sources
+from ..graph.generators import (
+    PAPER_DATASET_FAMILIES,
+    PAPER_DATASETS,
+    pick_sources,
+)
 from ..runtime.scheduler import AdaptiveScheduler
 from .mesh import make_mesh
 
@@ -35,14 +43,16 @@ class QueryService:
     while the scheduler underneath decides static vs two-phase execution.
     """
 
-    def __init__(self, mesh, csr, max_deg=None, max_iters=64, adaptive=True):
+    def __init__(self, mesh, csr, max_deg=None, max_iters=64, adaptive=True,
+                 backend="recommend", direction_thresholds=None, family=None):
         self.mesh = mesh
         self.csr = csr
         self.max_iters = max_iters
         self.max_deg = max_deg
         self.scheduler = AdaptiveScheduler(
             mesh, csr, max_deg=max_deg, max_iters=max_iters,
-            adaptive=adaptive,
+            adaptive=adaptive, backend=backend,
+            direction_thresholds=direction_thresholds, family=family,
         )
         self.last_outcome = None  # per-phase latency of the last query
 
@@ -73,18 +83,32 @@ def main(argv=None) -> int:
                     help="return actual paths (parents), not lengths")
     ap.add_argument("--policy", default=None,
                     choices=(None, "1t1s", "nt1s", "ntks", "ntkms"))
-    ap.add_argument("--backend", default=None,
-                    choices=(None, "ell_push", "ell_pull", "block_mxu",
-                             "dopt", "recommend"),
-                    help="frontier-extension backend (None = ell_push; "
-                         "'recommend' picks per batch via recommend_backend)")
+    ap.add_argument("--backend", default="recommend",
+                    choices=("ell_push", "ell_pull", "pull_binned",
+                             "block_mxu", "dopt", "dopt_ell", "dopt_binned",
+                             "recommend"),
+                    help="frontier-extension backend; the default "
+                         "'recommend' picks the scan layout per batch via "
+                         "recommend_backend (direction-optimized binned "
+                         "pull for the BFS family) — all choices are "
+                         "bit-identical in results")
+    ap.add_argument("--thresholds", default=None, metavar="BENCH_JSON",
+                    help="fit the direction switch's alpha/beta from this "
+                         "BENCH_direction_opt.json trace file "
+                         "(core.policies.fit_direction_thresholds) instead "
+                         "of Beamer's constants")
     ap.add_argument("--static", action="store_true",
                     help="disable the adaptive hybrid (static dispatch)")
     args = ap.parse_args(argv)
 
     csr = PAPER_DATASETS[args.dataset](args.scale)
     mesh = make_mesh((1, jax.device_count()), ("data", "model"))
-    svc = QueryService(mesh, csr, adaptive=not args.static)
+    # threshold-table family of the dataset (None => Beamer-default /
+    # nearest-bucket fallback inside DirectionThresholds.lookup)
+    family = PAPER_DATASET_FAMILIES.get(args.dataset)
+    svc = QueryService(mesh, csr, adaptive=not args.static,
+                       backend=args.backend,
+                       direction_thresholds=args.thresholds, family=family)
     print(
         f"serving {args.dataset} proxy: {csr.n_nodes} nodes, "
         f"{csr.n_edges} edges, avg degree {csr.avg_degree:.0f}"
@@ -99,7 +123,7 @@ def main(argv=None) -> int:
         )
         t0 = time.perf_counter()
         res, pol = svc.query(sources, returns_paths=args.paths,
-                             policy=args.policy, backend=args.backend)
+                             policy=args.policy)
         if args.paths and not pol.startswith("ntkms"):
             dests = rng.integers(0, csr.n_nodes, 4).astype(np.int32)
             paths = reconstruct_paths(

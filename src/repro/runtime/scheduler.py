@@ -33,6 +33,15 @@ serving layer that fixes both:
    query runs under the hybrid. ``recommend_k`` caps in-flight source
    morsels per shard on dense graphs (paper Fig 13's locality cliff).
 
+4. **Recommended scan layout by default** — ``backend="recommend"`` is the
+   default: ``recommend_backend`` picks the physical frontier-extension
+   layout per batch (Beamer direction switch over degree-binned pull slabs
+   for the BFS family, block-MXU for saturated lane morsels on block-dense
+   graphs, forward push for weighted relax), optionally with alpha/beta
+   fitted per (dataset-family, degree-bucket) from bench traces
+   (``direction_thresholds=``). Every choice is bit-identical in result
+   state — the recommendation only moves scan cost.
+
 Supported jax range: 0.4.35 — 0.8.x (see repro.compat / repro.launch.mesh).
 """
 from __future__ import annotations
@@ -40,6 +49,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
+from pathlib import Path
 from typing import Any, Callable
 
 import jax
@@ -47,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import (
+    DirectionThresholds,
     POLICIES,
     ExtendSpec,
     IFEResult,
@@ -54,6 +65,7 @@ from ..core import (
     as_spec,
     build_engine,
     build_resume_engine,
+    fit_direction_thresholds,
     hybrid_phases,
     pad_sources,
     prepare_graph,
@@ -141,7 +153,9 @@ class AdaptiveScheduler:
         adaptive: bool = True,
         phase1_iters: int | None = None,
         max_inflight: int | None = None,
-        backend="ell_push",
+        backend="recommend",
+        direction_thresholds: DirectionThresholds | str | Path | None = None,
+        family: str | None = None,
     ):
         self.mesh = mesh
         self.csr = csr
@@ -150,9 +164,20 @@ class AdaptiveScheduler:
         self.adaptive = adaptive
         self.phase1_iters = phase1_iters  # pin the phase-1 budget (tests)
         self.max_inflight = max_inflight  # override recommend_k (tests)
-        # default extension backend; per-query override via query(backend=);
-        # "recommend" applies recommend_backend per batch
+        # default extension backend; per-query override via query(backend=).
+        # The default IS "recommend": recommend_backend picks the scan
+        # layout per batch (direction-optimized binned pull for the
+        # BFS family), bit-identical to any explicit choice.
         self.backend = backend
+        # fitted per-(family, degree-bucket) alpha/beta for the direction
+        # switch (core.policies.fit_direction_thresholds); a path loads a
+        # BENCH_direction_opt.json trace file. None = Beamer defaults.
+        if isinstance(direction_thresholds, (str, Path)):
+            direction_thresholds = fit_direction_thresholds(
+                direction_thresholds
+            )
+        self.direction_thresholds = direction_thresholds
+        self.family = family  # dataset family key for threshold lookup
         self.cache = EngineCache()
         self._graphs: dict[tuple, tuple] = {}  # (axes, operands) -> (ops, n_pad)
         # p90 per-morsel iteration count of recent batches drives the
@@ -170,6 +195,7 @@ class AdaptiveScheduler:
         key = (
             policy.graph_axes,
             spec.needs_rev,
+            spec.needs_binned,
             spec.needs_blocks,
             spec.pad_block,
         )
@@ -191,24 +217,31 @@ class AdaptiveScheduler:
         max_iters: int | None = None,
         state_layout: str = "replicated",
         extend: ExtendSpec = ExtendSpec(),
+        operands=None,
     ):
         cap = int(max_iters if max_iters is not None else self.max_iters)
         key = EngineKey(
             kind, policy, edge_compute, n_pad, cap, state_layout, extend
         )
+        if operands is None and (
+            extend.needs_binned or extend.needs_rev or extend.needs_blocks
+        ):
+            operands = self._graph_for(policy, extend)[0]
         if kind == "static":
             builder = lambda: build_engine(
                 self.mesh, policy, edge_compute, n_pad, cap,
-                state_layout=state_layout, extend=extend,
+                state_layout=state_layout, extend=extend, operands=operands,
             )
         elif kind == "phase1":
             builder = lambda: build_engine(
                 self.mesh, policy, edge_compute, n_pad, cap,
                 state_layout=state_layout, sync="shard", extend=extend,
+                operands=operands,
             )
         elif kind == "resume":
             builder = lambda: build_resume_engine(
-                self.mesh, policy, edge_compute, n_pad, cap, extend=extend
+                self.mesh, policy, edge_compute, n_pad, cap, extend=extend,
+                operands=operands,
             )
         else:
             raise ValueError(f"unknown engine kind: {kind}")
@@ -241,7 +274,8 @@ class AdaptiveScheduler:
         )
         budget = self._phase1_budget()
         eng1 = self.engine(
-            "phase1", p1, ec, n_pad, max_iters=budget, extend=extend
+            "phase1", p1, ec, n_pad, max_iters=budget, extend=extend,
+            operands=g,
         )
         t0 = time.perf_counter()
         res1 = jax.block_until_ready(eng1(g, morsels))
@@ -277,7 +311,9 @@ class AdaptiveScheduler:
 
         g2, n_pad2 = self._graph_for(p2, extend)
         assert n_pad2 == n_pad, (n_pad2, n_pad)
-        eng2 = self.engine("resume", p2, ec, n_pad, extend=extend)
+        eng2 = self.engine(
+            "resume", p2, ec, n_pad, extend=extend, operands=g2
+        )
         res2 = jax.block_until_ready(eng2(g2, sub_state, sub_it))
         t2 = time.perf_counter()
         phase_ms["phase2"] = (t2 - t1) * 1e3
@@ -306,7 +342,7 @@ class AdaptiveScheduler:
                     extend=ExtendSpec()):
         eng = self.engine(
             "static", pol, ec, n_pad, state_layout=state_layout,
-            extend=extend,
+            extend=extend, operands=g,
         )
         t0 = time.perf_counter()
         res = jax.block_until_ready(eng(g, morsels))
@@ -353,7 +389,8 @@ class AdaptiveScheduler:
         if backend == "recommend":
             backend = recommend_backend(
                 ec, self.csr.avg_degree, n_nodes=self.csr.n_nodes,
-                lanes=pol.lanes,
+                lanes=pol.lanes, family=self.family,
+                thresholds=self.direction_thresholds,
             )
         spec = as_spec(backend)
         g, n_pad = self._graph_for(pol, spec)

@@ -82,9 +82,10 @@ print("policies OK")
 # --- extension-backend parity on a real 2x4 mesh ----------------------------
 # pull's inverse communication (global-frontier union) + the dopt lax.cond
 # with psum'd predicate must agree with push under real collectives, in
-# BOTH state layouts
+# BOTH state layouts; pull_binned additionally exercises the multi-shard
+# per-shard binning (4 graph shards here => stacked [K,...] slab operands)
 for layout in ("replicated", "sharded"):
-    for be in ("ell_pull", "dopt", "block_mxu"):
+    for be in ("ell_pull", "pull_binned", "dopt", "dopt_ell", "block_mxu"):
         res = run_recursive_query(mesh, csr, sources, policy_ntks(),
                                   "sp_lengths", state_layout=layout,
                                   extend=be)

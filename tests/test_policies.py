@@ -1,6 +1,11 @@
 """Policy dispatcher correctness on a 1x1 mesh (degenerate but full code path)
-plus policy-equivalence invariants. Real multi-device parity is covered by
+plus policy-equivalence invariants and the policy-layer oracles: direction-
+threshold fitting recovers known crossovers, and ``recommend_backend`` is a
+deterministic, total function (it never names a backend whose operands the
+given bundle can't supply). Real multi-device parity is covered by
 test_multidev.py (subprocess with forced host device count)."""
+import itertools
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -10,14 +15,21 @@ from proptest import given, st_ints, st_seeds
 
 from repro.graph.generators import erdos_renyi, powerlaw
 from repro.core import (
+    DirectionThresholds,
+    as_spec,
+    build_operands,
+    degree_bucket,
+    fit_direction_thresholds,
     run_recursive_query,
     policy_1t1s,
     policy_nt1s,
     policy_ntks,
     policy_ntkms,
+    recommend_backend,
     recommend_policy,
     recommend_k,
 )
+from repro.core.ife import run_ife
 from repro.launch.mesh import make_mesh
 
 
@@ -112,6 +124,161 @@ def test_recommendations():
     assert recommend_k(44.0) == 32
     assert recommend_k(535.0) == 4
     assert recommend_k(250.0) == 8
+
+
+# ---------------------------------------------------------------------------
+# Policy-layer oracles: threshold fitting + backend recommendation (ISSUE 3)
+# ---------------------------------------------------------------------------
+
+
+def _synthetic_trace(n, alpha_star, m_u=8000.0, push=1000.0):
+    """A trace whose oracle-optimal direction flips exactly at
+    ``m_f * alpha_star > m_u`` (beta non-binding: full frontier)."""
+    iters = []
+    for i in range(20):
+        m_f = 150.0 * (i + 1)
+        pull_wins = m_f * alpha_star > m_u
+        iters.append({
+            "it": i,
+            "frontier": n,  # n_f*beta > n for any beta > 1
+            "unvisited": n // 2,
+            "m_frontier": m_f,
+            "m_unexplored": m_u,
+            "push_slots": push,
+            "pull_slots_binned": 100.0 if pull_wins else 10 * push,
+            "pull_slots_ell": 100.0 if pull_wins else 10 * push,
+            "scanned_slots": push,
+            "wall_ms": 0.1,
+        })
+    return iters
+
+
+def test_fit_direction_thresholds_recovers_crossover():
+    """A synthetic trace with a known optimal alpha crossover: the fitted
+    alpha must land within one pow2 bucket (factor 2) of the true value,
+    and the fitted table must beat Beamer's constants on its own trace."""
+    n, alpha_star = 1024, 4.0
+    doc = {
+        "workloads": [{
+            "graph": "synth", "kind": "powerlaw", "n": n,
+            "n_edges": n * 8, "avg_degree": 8.0,
+            "backends": {"ell_push": {
+                "iterations": _synthetic_trace(n, alpha_star)
+            }},
+        }]
+    }
+    th = fit_direction_thresholds(doc)
+    alpha, beta = th.table[("powerlaw", degree_bucket(8.0))]
+    assert alpha_star / 2 <= alpha <= alpha_star * 2, alpha
+    # fitted predicate reproduces the oracle labels over the whole trace
+    for r in doc["workloads"][0]["backends"]["ell_push"]["iterations"]:
+        use_pull = (r["m_frontier"] * alpha > r["m_unexplored"]) and (
+            r["frontier"] * beta > n
+        )
+        assert use_pull == (r["pull_slots_binned"] < r["push_slots"]), r
+    # degraded inputs never fail the fit: missing fields => Beamer defaults
+    th0 = fit_direction_thresholds(
+        {"workloads": [{"graph": "old", "kind": "er", "n": 64,
+                        "n_edges": 128, "avg_degree": 2.0,
+                        "backends": {"ell_push": {"iterations": [
+                            {"it": 0, "frontier": 1, "scanned_slots": 9,
+                             "wall_ms": 0.1}]}}}]}
+    )
+    assert th0.table[("er", 1)] == (14.0, 24.0)
+
+
+def test_fit_direction_thresholds_mixed_sizes_one_group():
+    """Two same-(family, bucket) workloads of very different node counts:
+    the beta predicate must be evaluated against each record's OWN n, not
+    the first workload's — a beta fitted for the small graph must still
+    dispatch the big graph's iterations correctly."""
+    alpha_star = 4.0
+    small, big = 1024, 65536
+    doc = {"workloads": [
+        {"graph": "s", "kind": "powerlaw", "n": small, "n_edges": small * 8,
+         "avg_degree": 8.0,
+         "backends": {"ell_push": {
+             "iterations": _synthetic_trace(small, alpha_star)}}},
+        {"graph": "b", "kind": "powerlaw", "n": big, "n_edges": big * 8,
+         "avg_degree": 8.0,
+         "backends": {"ell_push": {
+             "iterations": _synthetic_trace(big, alpha_star)}}},
+    ]}
+    th = fit_direction_thresholds(doc)
+    alpha, beta = th.table[("powerlaw", 3)]
+    # with each record's own n, the fit classifies BOTH workloads'
+    # iterations optimally (each trace has frontier = its own n)
+    for w in doc["workloads"]:
+        n = w["n"]
+        for r in w["backends"]["ell_push"]["iterations"]:
+            use_pull = (r["m_frontier"] * alpha > r["m_unexplored"]) and (
+                r["frontier"] * beta > n
+            )
+            assert use_pull == (
+                r["pull_slots_binned"] < r["push_slots"]
+            ), (w["graph"], r["it"])
+
+
+def test_direction_threshold_lookup_fallbacks():
+    th = DirectionThresholds(table={
+        ("powerlaw", 3): (4.0, 16.0),
+        ("powerlaw", 6): (30.0, 24.0),
+        ("er", 2): (7.0, 12.0),
+    })
+    assert th.lookup("powerlaw", 8.0) == (4.0, 16.0)  # exact bucket
+    assert th.lookup("powerlaw", 20.0) == (30.0, 24.0)  # nearest in family
+    assert th.lookup("er", 4.0) == (7.0, 12.0)
+    assert th.lookup("rmat", 4.0) == (7.0, 12.0)  # nearest cross-family
+    empty = DirectionThresholds(table={})
+    assert empty.lookup("powerlaw", 8.0) == (14.0, 24.0)  # Beamer default
+    assert degree_bucket(1.0) == 0 and degree_bucket(8.0) == 3
+    assert degree_bucket(9.0) == 4
+
+
+def test_recommend_backend_deterministic_and_total():
+    """recommend_backend is a pure function of its arguments (identical
+    result on repeated calls across the whole argument grid) and total:
+    with an operand bundle it only ever names a backend that bundle can
+    actually run."""
+    th = DirectionThresholds(table={("powerlaw", 3): (4.0, 16.0)})
+    grid = itertools.product(
+        ["sp_lengths", "sp_parents", "bellman_ford", "msbfs_lengths"],
+        [2.0, 8.0, 300.0],
+        [512, 10**7],
+        [1, 64],
+        [None, th],
+    )
+    for ec, deg, n, lanes, t in grid:
+        r1 = recommend_backend(ec, deg, n_nodes=n, lanes=lanes,
+                               family="powerlaw", thresholds=t)
+        r2 = recommend_backend(ec, deg, n_nodes=n, lanes=lanes,
+                               family="powerlaw", thresholds=t)
+        assert r1 == r2, (ec, deg, n, lanes)
+        as_spec(r1)  # always a constructible spec
+
+    # totality vs concrete operand bundles: the recommendation must run
+    csr = powerlaw(96, 4.0, seed=2)
+    for built in ["ell_push", "ell_pull", "pull_binned", "dopt",
+                  "dopt_ell"]:
+        ops, _ = build_operands(csr, built)
+        for ec, lanes in [("sp_lengths", 1), ("bellman_ford", 1),
+                          ("msbfs_lengths", 64)]:
+            rec = recommend_backend(
+                ec, csr.avg_degree, n_nodes=csr.n_nodes, lanes=lanes,
+                operands=ops, thresholds=th, family="powerlaw",
+            )
+            spec = as_spec(rec)
+            assert not spec.needs_rev or ops.rev is not None
+            assert not spec.needs_binned or ops.rev_binned is not None
+            assert not spec.needs_blocks or ops.blocks is not None
+            if ec != "msbfs_lengths":  # dense path: actually execute it
+                run_ife(ops, jnp.array([0]), ec, extend=spec)
+    # a bare-push bundle degrades all the way to ell_push
+    ops_push, _ = build_operands(csr, "ell_push")
+    assert recommend_backend(
+        "sp_lengths", csr.avg_degree, n_nodes=csr.n_nodes,
+        operands=ops_push,
+    ) == "ell_push"
 
 
 def test_block_extend_matches_ell():

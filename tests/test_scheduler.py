@@ -175,6 +175,74 @@ def test_chunked_dispatch_matches_unchunked():
 
 
 # ---------------------------------------------------------------------------
+# backend="recommend" default (ISSUE 3): the served default must be
+# bit-identical to any explicitly pinned backend
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("returns_paths", [False, True])
+def test_recommend_default_bit_identical_to_explicit(returns_paths):
+    """The scheduler's (and serve's) default is now backend="recommend"
+    (direction-optimized binned pull for the BFS family). One scheduler
+    left on the default and one pinned to each explicit backend must
+    produce byte-identical result states — and both must match the static
+    single-engine dispatcher."""
+    csr = powerlaw(240, 5.0, seed=13)
+    mesh = mesh11()
+    srcs = np.array([0, 9, 41, 77, 160], np.int32)
+    ec = "sp_parents" if returns_paths else "sp_lengths"
+
+    sched = AdaptiveScheduler(mesh, csr, max_iters=64, phase1_iters=2)
+    assert sched.backend == "recommend"
+    out = sched.query(srcs, returns_paths=returns_paths)
+    ref = jax.tree.map(np.asarray, out.result.state)
+
+    static = run_recursive_query(mesh, csr, srcs, policy_ntks(), ec)
+    for field in ref._fields:
+        np.testing.assert_array_equal(
+            getattr(ref, field),
+            np.asarray(getattr(static.state, field)),
+            err_msg=f"recommend-vs-static/{field}",
+        )
+
+    for be in ("ell_push", "ell_pull", "pull_binned", "dopt", "dopt_ell"):
+        pinned = AdaptiveScheduler(
+            mesh, csr, max_iters=64, phase1_iters=2, backend=be
+        )
+        got = jax.tree.map(
+            np.asarray,
+            pinned.query(srcs, returns_paths=returns_paths).result.state,
+        )
+        for field in ref._fields:
+            a, b = getattr(ref, field), getattr(got, field)
+            assert a.dtype == b.dtype and a.shape == b.shape, (be, field)
+            np.testing.assert_array_equal(a, b, err_msg=f"{be}/{field}")
+
+
+def test_recommend_with_fitted_thresholds_bit_identical():
+    """A fitted threshold table changes WHEN the switch pulls, never WHAT
+    it computes: results stay bit-identical, and the fitted spec is served
+    through the same engine-cache path (fresh keys, then pure hits)."""
+    from repro.core import DirectionThresholds
+
+    csr = powerlaw(200, 6.0, seed=5)
+    mesh = mesh11()
+    srcs = np.array([2, 30, 71], np.int32)
+    base = AdaptiveScheduler(mesh, csr, max_iters=64, phase1_iters=2)
+    th = DirectionThresholds(table={("powerlaw", 4): (2.0, 2.0)})
+    fitted = AdaptiveScheduler(
+        mesh, csr, max_iters=64, phase1_iters=2,
+        direction_thresholds=th, family="powerlaw",
+    )
+    a = np.asarray(base.query(srcs).result.state.levels)
+    b = np.asarray(fitted.query(srcs).result.state.levels)
+    np.testing.assert_array_equal(a, b)
+    h0, m0 = fitted.cache.hits, fitted.cache.misses
+    fitted.query(srcs)
+    assert fitted.cache.hits > h0 and fitted.cache.misses == m0
+
+
+# ---------------------------------------------------------------------------
 # Multi-tenant admission
 # ---------------------------------------------------------------------------
 
