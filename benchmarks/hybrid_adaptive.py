@@ -1,15 +1,31 @@
-"""Static nTkS vs adaptive two-phase hybrid on a skewed source set.
+"""Static nTkS vs adaptive two-phase hybrid — ganged vs serial phase 2.
 
 The adversarial workload for static source-morsel dispatch (paper §5.4):
 most sources sit in a small-diameter powerlaw component and converge in a
-few IFE iterations, while one source starts at the head of a long path
-component and needs ~diameter iterations. Static nTkS reduces its
-convergence check over source AND graph axes, so every source shard's
-while_loop for a given morsel slot spins until the slowest shard's morsel
-in that slot finishes — almost all of it inert. The adaptive runtime runs
-phase 1 with per-shard convergence under a learned iteration budget, then
-re-dispatches only the path morsel under nT1S frontier parallelism (ring
-frontier union) with every device cooperating.
+few IFE iterations, while several sources start at the heads of long path
+components of staggered lengths and need ~diameter iterations each. Static
+nTkS reduces its convergence check over source AND graph axes, so every
+source shard's while_loop for a given morsel slot spins until the slowest
+shard's morsel in that slot finishes — almost all of it inert. The adaptive
+runtime runs phase 1 with per-shard convergence under a learned iteration
+budget, then re-dispatches only the straggler morsels under nT1S frontier
+parallelism (ring frontier union) with every device cooperating.
+
+Phase 2 itself is measured two ways (ISSUE 4):
+
+- **serial** (``gang_resume=False``): the legacy per-morsel resume —
+  ``lax.map`` drains survivors sequentially, so phase-2 iteration slots are
+  the SUM of the survivors' remaining trip counts;
+- **ganged** (default): one batched multi-frontier resume with per-survivor
+  convergence masks — slots are the MAX of the remaining trips, because
+  every survivor iterates in the same while_loop and early finishers go
+  inert. The staggered path lengths make the gap visible: the shorter
+  stragglers finish mid-gang without holding anyone up.
+
+Emits ``BENCH_hybrid_adaptive.json`` (``--out``) with per-phase wall times,
+the gang occupancy, and the ganged-vs-serial phase-2 iteration-slot floor;
+``scripts/ci.sh --bench-smoke`` re-runs this in ``--smoke`` mode and
+``validate()``s the document.
 
 Runs on 8 forced host devices, mesh (4, 2): 4 source shards × 2 graph
 shards, so the static waste is real (4 shards × inert slot iterations).
@@ -17,11 +33,15 @@ Standalone on purpose (NOT in benchmarks/run.py): it must force its own
 XLA device count before first jax init, which would leak into sibling
 suites in a shared process.
 
-    PYTHONPATH=src python benchmarks/hybrid_adaptive.py
+    PYTHONPATH=src python benchmarks/hybrid_adaptive.py [--smoke] [--out F]
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
+import time
+from pathlib import Path
 
 os.environ.setdefault(
     "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
@@ -31,25 +51,102 @@ import numpy as np
 
 import common
 
+SCHEMA = 1
 
-def skewed_graph(n_pl: int = 400, path_len: int = 96, seed: int = 0):
-    """Powerlaw component (small diameter) + a path component (diameter ≈
-    path_len) in one CSR. Returns (csr, powerlaw_sources, path_head)."""
+REQUIRED = {
+    "schema": int,
+    "mesh": list,
+    "smoke": bool,
+    "workload": dict,
+    "phase1_budget": int,
+    "static_ntks": dict,
+    "adaptive": dict,
+    "gang": dict,
+    "summary": dict,
+}
+GANG_FIELDS = (
+    "survivors", "gang_width", "occupancy",
+    "phase2_slots_ganged", "phase2_slots_serial",
+    "phase2_wall_ms_ganged_p50", "phase2_wall_ms_serial_p50",
+    "phase2_wall_ratio_serial_over_ganged",
+)
+
+
+def validate(doc: dict) -> None:
+    """Schema + acceptance guard for BENCH_hybrid_adaptive.json: the gang
+    block must be complete, at least two survivors must actually have been
+    ganged, and the ganged phase-2 iteration-slot count must sit on its
+    floor (<= the serial per-morsel drain's slot sum)."""
+    for key, ty in REQUIRED.items():
+        assert key in doc, f"missing top-level field: {key}"
+        assert isinstance(doc[key], ty), (key, type(doc[key]))
+    assert doc["schema"] == SCHEMA, doc["schema"]
+    g = doc["gang"]
+    for f in GANG_FIELDS:
+        assert f in g, f"missing gang field: {f}"
+    assert g["survivors"] >= 2, f"need >=2 ganged survivors, got {g}"
+    assert g["gang_width"] >= g["survivors"], g
+    assert 0.0 < g["occupancy"] <= 1.0, g
+    assert g["phase2_slots_ganged"] >= 1, g
+    assert g["phase2_slots_ganged"] <= g["phase2_slots_serial"], (
+        "ganged phase-2 slot floor violated: "
+        f"{g['phase2_slots_ganged']} > {g['phase2_slots_serial']}"
+    )
+    assert doc["summary"]["passes_slot_floor"] is True, doc["summary"]
+
+
+def skewed_graph(n_pl: int = 400, paths: tuple = (96, 80, 64), seed: int = 0):
+    """Powerlaw component (small diameter) + ``len(paths)`` path components
+    of staggered diameters in one CSR. Returns (csr, powerlaw_sources,
+    path_heads)."""
     from repro.graph.csr import csr_from_edges
     from repro.graph.generators import powerlaw
 
     pl = powerlaw(n_pl, 5.0, seed=seed)
     src_pl, dst_pl = pl.edge_list()
-    p = np.arange(path_len - 1, dtype=np.int32) + n_pl
-    src = np.concatenate([src_pl, p, p + 1])
-    dst = np.concatenate([dst_pl, p + 1, p])
-    csr = csr_from_edges(n_pl + path_len, src, dst)
+    srcs, dsts, base, heads = [src_pl], [dst_pl], n_pl, []
+    for length in paths:
+        p = np.arange(length - 1, dtype=np.int64) + base
+        srcs += [p, p + 1]
+        dsts += [p + 1, p]
+        heads.append(base)
+        base += length
+    csr = csr_from_edges(base, np.concatenate(srcs), np.concatenate(dsts))
     rng = np.random.default_rng(seed + 1)
     pl_sources = rng.integers(0, n_pl, 7).astype(np.int32)
-    return csr, pl_sources, np.int32(n_pl)
+    return csr, pl_sources, np.asarray(heads, np.int32)
 
 
-def main() -> int:
+def _timed_queries(sched, sources, reps: int):
+    """Median wall (us) + median per-phase ms over ``reps`` repeat queries
+    (budget pinned by the caller, so every rep runs the same program)."""
+    import jax
+
+    walls, p1, p2, last = [], [], [], None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        last = sched.query(sources)
+        jax.block_until_ready(last.result.state)
+        walls.append((time.perf_counter() - t0) * 1e6)
+        p1.append(last.phase_ms["phase1"])
+        p2.append(last.phase_ms["phase2"])
+    return (
+        float(np.median(walls)),
+        float(np.median(p1)),
+        float(np.median(p2)),
+        last,
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small graph / few reps (CI bench-smoke lane)")
+    ap.add_argument("--out", default=str(
+        Path(__file__).resolve().parent.parent / "BENCH_hybrid_adaptive.json"
+    ))
+    args = ap.parse_args(argv)
+
     import jax
 
     from repro.core import (
@@ -66,15 +163,19 @@ def main() -> int:
         mesh = make_mesh((4, 2), ("data", "model"))
     else:  # degraded single-device fallback (no inert spins to recover)
         mesh = make_mesh((1, jax.device_count()), ("data", "model"))
-    csr, pl_sources, path_src = skewed_graph()
-    # the path source shares a morsel SLOT with powerlaw sources on the
+    if args.smoke:
+        n_pl, paths, reps, max_iters = 220, (48, 36), 3, 64
+    else:
+        n_pl, paths, reps, max_iters = 400, (96, 80, 64), 5, 128
+    csr, pl_sources, heads = skewed_graph(n_pl, paths)
+    # every path head shares a morsel SLOT with powerlaw sources on the
     # other shards: its slot spins every shard under static global sync
-    sources = np.concatenate([pl_sources, [path_src]]).astype(np.int32)
-    max_iters = 128
+    sources = np.concatenate([pl_sources, heads]).astype(np.int32)
 
     print(
         f"skewed workload: {csr.n_nodes} nodes ({len(pl_sources)} powerlaw "
-        f"sources + 1 path source, path diameter ~96), mesh {dict(mesh.shape)}"
+        f"sources + {len(heads)} path heads, path diameters "
+        f"~{tuple(int(p) - 1 for p in paths)}), mesh {dict(mesh.shape)}"
     )
 
     # --- static nTkS: one engine, globally-synchronized convergence --------
@@ -88,47 +189,115 @@ def main() -> int:
     static_iters = np.asarray(static_res.iterations)[: len(sources)]
     static_us = common.time_fn(lambda: eng(g, morsels))
 
-    # --- adaptive hybrid: warm it on the easy sources, then hit the skew ---
-    sched = AdaptiveScheduler(mesh, csr, max_iters=max_iters)
+    # --- adaptive hybrid: learn the budget, then pin it for both phase-2
+    # modes so they see the *identical* phase-1 survivor set ---------------
+    learner = AdaptiveScheduler(mesh, csr, max_iters=max_iters)
     for _ in range(3):  # learn the phase-1 budget from easy batches
-        sched.query(pl_sources)
-    sched.query(sources)  # compile the skewed-batch shapes once
-    out = sched.query(sources)
+        learner.query(pl_sources)
+    budget = learner.query(sources).phase1_budget
+
+    gang = AdaptiveScheduler(
+        mesh, csr, max_iters=max_iters, phase1_iters=budget
+    )
+    serial = AdaptiveScheduler(
+        mesh, csr, max_iters=max_iters, phase1_iters=budget,
+        gang_resume=False,
+    )
+    gang.query(sources)  # compile the skewed-batch shapes once
+    serial.query(sources)
+    gang_us, gang_p1, gang_p2, out = _timed_queries(gang, sources, reps)
+    serial_us, ser_p1, ser_p2, sout = _timed_queries(serial, sources, reps)
+
     adaptive_iters = np.asarray(out.result.iterations)[: len(sources)]
-    # freeze the budget for the timed reps: otherwise the skewed batches
-    # feed the learner mid-measurement and later reps time a different
-    # (bigger-budget, no-phase-2) configuration than the one reported
-    sched.phase1_iters = out.phase1_budget
-    adaptive_us = common.time_fn(lambda: sched.query(sources).result)
-
     lv_s = np.asarray(static_res.state.levels)[: len(sources), : csr.n_nodes]
-    lv_a = np.asarray(out.result.state.levels)[: len(sources), : csr.n_nodes]
-    assert (lv_s == lv_a).all(), "hybrid result != static result"
+    lv_g = np.asarray(out.result.state.levels)[: len(sources), : csr.n_nodes]
+    lv_r = np.asarray(sout.result.state.levels)[: len(sources), : csr.n_nodes]
+    assert (lv_s == lv_g).all(), "ganged hybrid result != static result"
+    assert (lv_g == lv_r).all(), "ganged result != serial-resume result"
 
-    # iteration-slots: static reports each morsel's while trip count, which
-    # under global sync is the max over its slot's source-shard group (inert
-    # spins included); adaptive reports each morsel's own convergence point
+    # phase-2 iteration slots: each survivor still owes (iters - budget)
+    # trips after phase 1. The serial lax.map drains them back-to-back
+    # (slots = sum); the gang runs them in one masked while_loop
+    # (slots = max) — the structural serialization this bench guards.
+    trips = np.maximum(adaptive_iters - budget, 0)
+    survivors = int(out.redispatched)
+    slots_serial = int(trips.sum())
+    slots_ganged = int(trips.max()) if trips.size else 0
     slots_static = int(static_iters.sum())
     slots_adaptive = int(adaptive_iters.sum())
+    occupancy = survivors / out.gang_width if out.gang_width else 0.0
+
     print(f"per-morsel iterations (static)  : {static_iters}")
     print(f"per-morsel iterations (adaptive): {adaptive_iters}")
     print(
-        f"phase-1 budget {out.phase1_budget}, re-dispatched "
-        f"{out.redispatched} morsel(s); phase latencies "
-        f"p1 {out.phase_ms['phase1']:.1f} ms / "
-        f"p2 {out.phase_ms['phase2']:.1f} ms"
+        f"phase-1 budget {budget}; {survivors} survivor(s) ganged into a "
+        f"{out.gang_width}-wide dispatch (occupancy {occupancy:.2f})"
+    )
+    print(
+        f"phase-2 iteration slots: ganged {slots_ganged} (max trips) vs "
+        f"serial {slots_serial} (sum); wall p50 "
+        f"{gang_p2:.1f} ms vs {ser_p2:.1f} ms"
     )
     common.emit("hybrid_adaptive.static_ntks", static_us,
                 f"iter_slots={slots_static}")
-    common.emit("hybrid_adaptive.adaptive", adaptive_us,
+    common.emit("hybrid_adaptive.adaptive_ganged", gang_us,
                 f"iter_slots={slots_adaptive}")
-    speedup = static_us / max(adaptive_us, 1e-9)
+    common.emit("hybrid_adaptive.adaptive_serial", serial_us,
+                f"phase2_slots={slots_serial}")
+    speedup = static_us / max(gang_us, 1e-9)
     print(
         f"iteration-slots: static {slots_static} vs adaptive "
         f"{slots_adaptive} ({slots_static / max(slots_adaptive, 1):.1f}x "
-        f"fewer); wall: {static_us:.0f} us vs {adaptive_us:.0f} us "
+        f"fewer); wall: {static_us:.0f} us vs {gang_us:.0f} us "
         f"({speedup:.2f}x)"
     )
+
+    doc = {
+        "schema": SCHEMA,
+        "mesh": [int(v) for v in mesh.shape.values()],
+        "smoke": bool(args.smoke),
+        "workload": {
+            "n_nodes": int(csr.n_nodes),
+            "n_edges": int(csr.n_edges),
+            "avg_degree": float(csr.avg_degree),
+            "n_sources": int(len(sources)),
+            "path_lengths": [int(p) for p in paths],
+        },
+        "phase1_budget": int(budget),
+        "static_ntks": {
+            "wall_us": static_us,
+            "iter_slots": slots_static,
+        },
+        "adaptive": {
+            "wall_us_ganged": gang_us,
+            "wall_us_serial": serial_us,
+            "iter_slots": slots_adaptive,
+            "phase1_wall_ms_p50": gang_p1,
+        },
+        "gang": {
+            "survivors": survivors,
+            "gang_width": int(out.gang_width),
+            "occupancy": occupancy,
+            "phase2_slots_ganged": slots_ganged,
+            "phase2_slots_serial": slots_serial,
+            "phase2_wall_ms_ganged_p50": gang_p2,
+            "phase2_wall_ms_serial_p50": ser_p2,
+            "phase2_wall_ratio_serial_over_ganged": (
+                ser_p2 / max(gang_p2, 1e-9)
+            ),
+        },
+        "summary": {
+            "iter_slot_reduction_vs_static": (
+                slots_static / max(slots_adaptive, 1)
+            ),
+            "wall_speedup_vs_static": speedup,
+            "passes_slot_floor": slots_ganged <= slots_serial
+            and survivors >= 2,
+        },
+    }
+    validate(doc)
+    Path(args.out).write_text(json.dumps(doc, indent=1, sort_keys=True))
+    print(f"wrote {args.out}")
     return 0
 
 

@@ -12,7 +12,14 @@
 #                               # validate the emitted BENCH_direction_opt.json
 #                               # schema v2 (per-bucket binned-slab fields),
 #                               # the >=2x large-frontier scan reduction AND
-#                               # the <=1.1x binned-pull scan-overhead floor
+#                               # the <=1.1x binned-pull scan-overhead floor;
+#                               # then run the hybrid-adaptive benchmark in
+#                               # --smoke mode and validate the emitted
+#                               # BENCH_hybrid_adaptive.json schema plus the
+#                               # ganged-vs-serial phase-2 iteration-slot
+#                               # floor (gang slots = max survivor trips <=
+#                               # serial slots = sum, with >=2 survivors
+#                               # actually ganged)
 #
 # CI_BUDGET_SECONDS caps any lane via timeout (default 1800); a hung XLA
 # compile or subprocess fails the lane instead of wedging the pipeline.
@@ -47,6 +54,24 @@ print(f"bench-smoke OK: {sys.argv[1]} schema valid, "
       f"binned pull {pl['binned_overhead_vs_ideal']}x ideal / "
       f"{pl['scan_reduction_binned_vs_ell_pull']}x fewer slots than padded "
       f"pull")
+EOF
+  HOUT="${BENCH_HYBRID_OUT:-/tmp/BENCH_hybrid_adaptive.smoke.json}"
+  # the benchmark validates before writing; re-validate the artifact here
+  # so a stale/hand-edited file also fails the lane
+  timeout --signal=INT "$BUDGET" \
+    python benchmarks/hybrid_adaptive.py --smoke --out "$HOUT"
+  python - "$HOUT" <<'EOF'
+import json, sys
+sys.path.insert(0, "benchmarks")
+from hybrid_adaptive import validate
+doc = json.loads(open(sys.argv[1]).read())
+validate(doc)  # schema + the ganged-vs-serial phase-2 iteration-slot floor
+g = doc["gang"]
+print(f"bench-smoke OK: {sys.argv[1]} schema valid, "
+      f"{g['survivors']} survivors ganged (occupancy {g['occupancy']:.2f}), "
+      f"phase-2 slots {g['phase2_slots_ganged']} ganged vs "
+      f"{g['phase2_slots_serial']} serial, wall ratio serial/ganged "
+      f"{g['phase2_wall_ratio_serial_over_ganged']:.2f}x")
 EOF
 else
   FAST_BUDGET="${FAST_LANE_BUDGET_SECONDS:-900}"

@@ -36,6 +36,7 @@ from .extend import (
 from .dispatcher import (
     QueryEngine,
     build_engine,
+    build_gang_resume_engine,
     build_resume_engine,
     run_recursive_query,
     prepare_graph,
@@ -44,6 +45,9 @@ from .dispatcher import (
 )
 from .collectives import (
     REDISPATCH_OR_IMPL,
+    gang_handoff,
+    gang_merge_scatter,
+    gang_scatter_back,
     or_allreduce,
     min_allreduce,
     ring_or_u32,
@@ -53,5 +57,7 @@ from .msbfs import (
     block_extend_dense,
     block_extend_lanes,
     frontier_block_activity,
+    gang_pack_lanes,
+    gang_unpack_lanes,
 )
 from . import frontier

@@ -233,6 +233,78 @@ def merge_scatter(merge: str, contribution, axis_names, or_impl: str):
     raise ValueError(f"unknown merge: {merge}")
 
 
+def gang_merge_scatter(merge: str, contribution, axis_names, or_impl: str):
+    """Sharded-state merge for *gang-stacked* contributions.
+
+    The gang-scheduled resume carries a leading morsel axis: contribution
+    leaves are ``[S, n_out, ...]`` and the row axis to reduce-scatter is
+    axis 1, not axis 0. Rotating the gang axis to the back makes rows
+    leading again (row-major flattening keeps each device's row block
+    contiguous and 32-bit word aligned — rows pad to 32×shards), so the
+    existing OR/MIN reduce-scatter rings apply unchanged; the result
+    rotates back to ``[S, rows_local, ...]``.
+    """
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    if not axis_names or _axis_size(axis_names) == 1:
+        return contribution
+    move = lambda x: jnp.moveaxis(x, 0, -1)
+    unmove = lambda x: jnp.moveaxis(x, -1, 0)
+    if merge == "or":
+        return unmove(or_reduce_scatter(move(contribution), axis_names, or_impl))
+    if merge == "min":
+        return unmove(min_reduce_scatter(move(contribution), axis_names))
+    if merge == "or_min":
+        reached, cand = contribution
+        return (
+            unmove(or_reduce_scatter(move(reached), axis_names, or_impl)),
+            unmove(min_reduce_scatter(move(cand), axis_names)),
+        )
+    raise ValueError(f"unknown merge: {merge}")
+
+
+def gang_handoff(state, idx, gang: int, mesh, axes):
+    """Phase-1 → phase-2 frontier handoff for the sharded state layout.
+
+    ``state``: the phase-1 stacked state pytree (leaves ``[m, n, ...]``,
+    rows sharded over the phase-1 graph axes, morsels over the source
+    axes). Gathers the surviving morsels ``idx``, zero-pads the morsel
+    axis to the pow2 ``gang`` width (all-zero frontiers are inert in the
+    resume loop), and re-places rows over ``axes`` (every mesh axis) —
+    the layout the sharded gang-resume engine consumes. XLA lowers the
+    re-placement to the all-gather(phase-1 graph axes) + dynamic-slice
+    (all axes) handoff; the per-iteration merge inside the resume stays
+    the OR/MIN reduce-scatter (``gang_merge_scatter``).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    idxa = jnp.asarray(np.asarray(idx), jnp.int32)
+    k = int(idxa.shape[0])
+
+    def pick(x):
+        sub = jnp.take(jnp.asarray(x), idxa, axis=0)
+        if gang > k:
+            pad = jnp.zeros((gang - k,) + sub.shape[1:], sub.dtype)
+            sub = jnp.concatenate([sub, pad], axis=0)
+        sharding = NamedSharding(
+            mesh, P(None, tuple(axes), *(None,) * (sub.ndim - 2))
+        )
+        return jax.device_put(sub, sharding)
+
+    return jax.tree.map(pick, state)
+
+
+def gang_scatter_back(full, sub, idx):
+    """Inverse handoff: write the ``len(idx)`` resumed survivors (leading
+    rows of the padded ``sub`` pytree) back into the stacked phase-1-layout
+    ``full`` state; gang pad slots are dropped."""
+    idxa = jnp.asarray(np.asarray(idx), jnp.int32)
+    k = int(idxa.shape[0])
+    return jax.tree.map(
+        lambda f, s: jnp.asarray(f).at[idxa].set(s[:k]), full, sub
+    )
+
+
 def min_allreduce(x: jax.Array, axis_names) -> jax.Array:
     if isinstance(axis_names, str):
         axis_names = (axis_names,)

@@ -20,6 +20,11 @@ driven by ``repro.runtime.scheduler``):
   re-dispatched with their saved state under nT1S frontier parallelism:
   every device cooperates on one morsel's frontier at a time, picking up
   at the iteration counter where phase 1 stopped.
+- ``build_gang_resume_engine`` — batched phase 2: when more than one morsel
+  survives, the survivors are ganged into a single multi-frontier resume
+  (one while_loop, per-survivor convergence masks, frontiers lane-packed so
+  one adjacency scan serves the gang) instead of draining one-at-a-time
+  under ``lax.map``; works in both the replicated and sharded state layouts.
 """
 from __future__ import annotations
 
@@ -36,7 +41,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import axis_size, shard_map
 from ..graph.csr import CSRGraph, EllGraph, ShardedBlocks
-from .collectives import merge_contribution, merge_scatter
+from .collectives import gang_merge_scatter, merge_contribution, merge_scatter
 from .edge_compute import EDGE_COMPUTES
 from .extend import (
     ExtendCtx,
@@ -407,6 +412,145 @@ def build_resume_engine(
         policy=policy,
         edge_compute=edge_compute,
         n_nodes_padded=n_nodes_padded,
+        max_iters=cap,
+        fn=fn,
+        extend=spec,
+    )
+
+
+def build_gang_resume_engine(
+    mesh: Mesh,
+    policy: MorselPolicy,
+    edge_compute: str,
+    n_nodes_padded: int,
+    max_iters: int | None = None,
+    extend="ell_push",
+    operands=None,
+    state_layout: str = "replicated",
+) -> QueryEngine:
+    """Gang-scheduled phase-2 (re-dispatch) engine of the adaptive hybrid.
+
+    Where ``build_resume_engine`` drains survivors one-morsel-at-a-time
+    (``lax.map`` is a sequential scan: morsel s+1's while_loop starts only
+    after morsel s converges — frontier-level serialization, the exact
+    failure mode the hybrid policy exists to avoid), this engine resumes
+    the WHOLE survivor batch under ONE while_loop:
+
+    - State arrives stacked ``[S_pad, ...]`` (pow2-padded by the caller for
+      stable trace shapes; all-zero pad morsels are inert) plus per-morsel
+      iteration counters ``it0 [S_pad]``.
+    - Each iteration runs ONE batched multi-frontier extension
+      (``ec.gang_extend``): dense survivors are repacked as MS-BFS lanes
+      (``core.msbfs.gang_pack_lanes``) so a single shared adjacency scan
+      serves the gang, and lane morsels fold into one ``[rows, S*64]``
+      tensor.
+    - Per-survivor convergence masks keep the batch bit-identical to the
+      serial resume: a morsel is *live* while its own frontier is globally
+      non-empty AND its own counter is under the cap; state updates and
+      counter increments apply only to live morsels (early finishers go
+      inert — their state freezes — instead of blocking or overrunning),
+      and the loop exits when no morsel is live. Total phase-2 iteration
+      slots drop from sum(survivor trips) to max(survivor trips).
+
+    ``state_layout="sharded"`` resumes with state rows sharded over the
+    policy's graph axes (all mesh axes under ``hybrid_phases``): the
+    per-iteration merge is the OR/MIN reduce-scatter
+    (``collectives.gang_merge_scatter``), which is what lets DESIGN.md §6
+    billion-node morsels get a phase 2 at all. Callers hand state over via
+    ``collectives.gang_handoff``.
+
+    The returned engine's ``fn`` signature is ``fn(graph, state0, it0)``.
+    """
+    ec = EDGE_COMPUTES[edge_compute]
+    spec = as_spec(extend)
+    ga = policy.graph_axes
+    sa = policy.source_axes
+    if sa:
+        raise ValueError(
+            "gang resume engine re-dispatches under frontier parallelism; "
+            f"policy must not shard sources (got source_axes={sa})"
+        )
+    cap = int(max_iters if max_iters is not None else n_nodes_padded)
+    n = n_nodes_padded
+    sharded = state_layout == "sharded" and bool(ga)
+    sync_axes = tuple(ga)
+
+    def worker(graph_in, state0, it0):
+        ops = as_operands(graph_in)
+        be = make_backend(spec)
+        rows_local = ops.fwd.indices.shape[0]
+        offset = _flat_axis_index(ga) * rows_local if ga else None
+        ctx = ExtendCtx(
+            n_out=n,
+            row_offset=None if sharded else offset,
+            row_base=offset if sharded else None,
+            axes=tuple(ga),
+            or_impl=policy.or_impl,
+            sharded=sharded,
+        )
+
+        def live(state, it):
+            # [S_pad] bool: morsels whose own frontier is still globally
+            # non-empty and whose own counter is under the cap
+            f = state.frontier
+            act = (f != 0).reshape(f.shape[0], -1).any(axis=1)
+            if sync_axes:
+                act = lax.psum(act.astype(jnp.int32), sync_axes) > 0
+            return act & (it < cap)
+
+        def cond(carry):
+            state, it = carry
+            return jnp.any(live(state, it))
+
+        def body(carry):
+            state, it = carry
+            mask = live(state, it)
+            contribution = ec.gang_extend(be, ops, state, ctx)
+            if sharded:
+                merged = gang_merge_scatter(
+                    ec.MERGE, contribution, ga, policy.or_impl
+                )
+            else:
+                merged = merge_contribution(
+                    ec.MERGE, contribution, ga, policy.or_impl
+                )
+            applied = jax.vmap(ec.apply)(state, merged, it)
+            bmask = lambda x: mask.reshape((-1,) + (1,) * (x.ndim - 1))
+            new_state = jax.tree.map(
+                lambda new, old: jnp.where(bmask(new), new, old),
+                applied, state,
+            )
+            return new_state, it + mask.astype(it.dtype)
+
+        state, iters = lax.while_loop(cond, body, (state0, it0))
+        return IFEResult(state=state, iterations=iters)
+
+    g_specs = _operand_specs(spec, ga, operands)
+    if sharded:
+        # state rows live on the graph axes: leaves are [gang, rows, ...]
+        lanes = getattr(ec, "LANES", 0)
+        probe = jax.eval_shape(
+            lambda: ec.init(8, jnp.zeros((max(lanes, 1),), jnp.int32))
+        )
+        state_spec = jax.tree.map(lambda _: P(None, ga), probe)
+        in_state, out_spec = state_spec, IFEResult(
+            state=state_spec, iterations=P()
+        )
+    else:
+        in_state, out_spec = P(), IFEResult(state=P(), iterations=P())
+    fn = jax.jit(
+        shard_map(
+            worker,
+            mesh,
+            in_specs=(g_specs, in_state, P()),
+            out_specs=out_spec,
+        )
+    )
+    return QueryEngine(
+        mesh=mesh,
+        policy=policy,
+        edge_compute=edge_compute,
+        n_nodes_padded=n,
         max_iters=cap,
         fn=fn,
         extend=spec,

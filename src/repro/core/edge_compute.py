@@ -37,6 +37,18 @@ INF_U8 = jnp.uint8(255)
 NO_PARENT = jnp.int32(2**31 - 1)
 
 
+def _gang_pack(x: jax.Array) -> jax.Array:
+    from .msbfs import gang_pack_lanes
+
+    return gang_pack_lanes(x)
+
+
+def _gang_unpack(y: jax.Array, gang: int, lanes: int = 0) -> jax.Array:
+    from .msbfs import gang_unpack_lanes
+
+    return gang_unpack_lanes(y, gang, lanes)
+
+
 # ---------------------------------------------------------------------------
 # Extension primitives over ELL (pure jnp; Pallas kernels mirror these).
 # ---------------------------------------------------------------------------
@@ -199,6 +211,19 @@ class SPLengths:
         return be.reach_dense(ops, state.frontier, state.visited, ctx)
 
     @staticmethod
+    def gang_extend(be, ops, state: SPLengthState, ctx):
+        """Batched multi-frontier extension for the gang-scheduled resume:
+        state leaves carry a leading gang axis ``[S, ...]``; the S dense
+        frontiers are repacked as MS-BFS lanes so one shared adjacency scan
+        serves the whole gang. Bit-identical per morsel to ``extend`` (the
+        lane scatter/gather computes the same OR per column)."""
+        S = state.frontier.shape[0]
+        reached = be.reach_lanes(
+            ops, _gang_pack(state.frontier), _gang_pack(state.visited), ctx
+        )
+        return _gang_unpack(reached, S) != 0
+
+    @staticmethod
     def apply(state: SPLengthState, reached: jax.Array, it: jax.Array):
         new = reached & ~state.visited
         return SPLengthState(
@@ -233,6 +258,14 @@ class Reachability:
     @staticmethod
     def extend(be, ops, state: ReachState, ctx):
         return be.reach_dense(ops, state.frontier, state.visited, ctx)
+
+    @staticmethod
+    def gang_extend(be, ops, state: ReachState, ctx):
+        S = state.frontier.shape[0]
+        reached = be.reach_lanes(
+            ops, _gang_pack(state.frontier), _gang_pack(state.visited), ctx
+        )
+        return _gang_unpack(reached, S) != 0
 
     @staticmethod
     def apply(state: ReachState, reached: jax.Array, it: jax.Array):
@@ -278,6 +311,14 @@ class SPParents:
         return be.reach_parent_dense(ops, state.frontier, state.visited, ctx)
 
     @staticmethod
+    def gang_extend(be, ops, state: SPParentState, ctx):
+        S = state.frontier.shape[0]
+        reached, parents = be.reach_parent_lanes(
+            ops, _gang_pack(state.frontier), _gang_pack(state.visited), ctx
+        )
+        return _gang_unpack(reached, S) != 0, _gang_unpack(parents, S)
+
+    @staticmethod
     def apply(state: SPParentState, merged, it: jax.Array):
         reached, parent_cand = merged
         new = reached & ~state.visited
@@ -314,6 +355,15 @@ class BellmanFord:
     @staticmethod
     def extend(be, ops, state: BellmanFordState, ctx):
         return be.min_dist(ops, state.dist, state.frontier, ctx)
+
+    @staticmethod
+    def gang_extend(be, ops, state: BellmanFordState, ctx):
+        # weighted relax has no saturating lane formulation (float min, not
+        # OR); batch the gang with vmap instead — still one while_loop for
+        # the whole gang, so re-dispatch does not serialize
+        return jax.vmap(
+            lambda st: BellmanFord.extend(be, ops, st, ctx)
+        )(state)
 
     @staticmethod
     def apply(state: BellmanFordState, cand: jax.Array, it: jax.Array):
@@ -356,6 +406,16 @@ class MSBFSLengths:
     @staticmethod
     def extend(be, ops, state: MSBFSState, ctx):
         return be.reach_lanes(ops, state.frontier, state.visited, ctx)
+
+    @staticmethod
+    def gang_extend(be, ops, state: MSBFSState, ctx):
+        # S surviving 64-lane morsels fold into one [rows, S*64] lane
+        # tensor: the shared scan now amortizes over S*64 BFS instances
+        S, L = state.frontier.shape[0], state.frontier.shape[-1]
+        reached = be.reach_lanes(
+            ops, _gang_pack(state.frontier), _gang_pack(state.visited), ctx
+        )
+        return _gang_unpack(reached, S, L)
 
     @staticmethod
     def apply(state: MSBFSState, reached: jax.Array, it: jax.Array):
@@ -406,6 +466,14 @@ class MSBFSParents:
     @staticmethod
     def extend(be, ops, state: MSBFSParentState, ctx):
         return be.reach_parent_lanes(ops, state.frontier, state.visited, ctx)
+
+    @staticmethod
+    def gang_extend(be, ops, state: MSBFSParentState, ctx):
+        S, L = state.frontier.shape[0], state.frontier.shape[-1]
+        reached, parents = be.reach_parent_lanes(
+            ops, _gang_pack(state.frontier), _gang_pack(state.visited), ctx
+        )
+        return _gang_unpack(reached, S, L), _gang_unpack(parents, S, L)
 
     @staticmethod
     def apply(state: MSBFSParentState, merged, it: jax.Array):

@@ -25,6 +25,33 @@ import jax.numpy as jnp
 from ..graph.csr import BlockAdjacency
 
 
+def gang_pack_lanes(x: jax.Array) -> jax.Array:
+    """Stack-of-morsels state -> one lane-packed activation tensor.
+
+    ``[S, rows]`` (dense per-morsel frontiers) or ``[S, rows, L]`` (lane
+    morsels) becomes ``[rows, S*L]`` uint8 — the survivors of phase 1 are
+    repacked as MS-BFS-style lanes so one shared adjacency scan per
+    iteration serves the whole gang (Then et al.'s "more the merrier"
+    economy applied to re-dispatch instead of admission). Per-morsel lanes
+    stay contiguous: morsel s owns columns ``[s*L, (s+1)*L)``.
+    """
+    if x.ndim == 2:
+        return jnp.moveaxis(x, 0, 1).astype(jnp.uint8)
+    S, rows, L = x.shape
+    return jnp.moveaxis(x, 0, 1).reshape(rows, S * L).astype(jnp.uint8)
+
+
+def gang_unpack_lanes(y: jax.Array, gang: int, lanes: int = 0) -> jax.Array:
+    """Inverse of ``gang_pack_lanes`` for a per-lane result ``[rows, S*L]``
+    (any dtype — reach bits or int32 parent candidates): back to the
+    stacked ``[S, rows]`` (``lanes=0``, dense morsels) or ``[S, rows, L]``
+    layout. Callers convert dtype (e.g. ``!= 0`` for bool frontiers)."""
+    rows = y.shape[0]
+    if lanes == 0:
+        return jnp.moveaxis(y, 0, 1)
+    return jnp.moveaxis(y.reshape(rows, gang, lanes), 0, 1)
+
+
 def frontier_block_activity(
     adj: BlockAdjacency, lanes: jax.Array
 ) -> jax.Array:

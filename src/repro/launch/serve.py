@@ -150,6 +150,7 @@ def main(argv=None) -> int:
                   f"{dt:8.1f} ms  [{phase}]")
     lat, p1_ms, p2_ms = map(np.asarray, (lat, p1_ms, p2_ms))
     cache = svc.scheduler.cache
+    stats = svc.scheduler.stats
     print(
         f"served {args.batches} batches: policies {used}; "
         f"p50 {np.percentile(lat, 50):.1f} ms, "
@@ -163,7 +164,14 @@ def main(argv=None) -> int:
         f"{np.percentile(p2_ms, 99):.1f} ms; "
         f"{redispatched} morsels re-dispatched; "
         f"engine cache {len(cache)} compiled, "
-        f"{cache.hits} hits / {cache.misses} misses"
+        f"{cache.hits} hits / {cache.misses} misses "
+        f"({dict(cache.misses_by_kind)} compiles by kind)"
+    )
+    print(
+        f"phase-2 resume: {stats.resumed_ganged} survivor(s) ganged across "
+        f"{stats.gangs} gang dispatch(es) "
+        f"(occupancy {stats.gang_occupancy:.2f}), "
+        f"{stats.resumed_serial} resumed serially"
     )
     return 0
 

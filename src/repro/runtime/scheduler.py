@@ -27,6 +27,36 @@ serving layer that fixes both:
    pad_shards=mesh.size``) so state flows between phases unchanged, making
    the hybrid bit-identical in final state to a single-phase nTkS run.
 
+   **Gang packing + convergence-mask contract (phase 2).** When more than
+   one morsel survives phase 1 the survivors are NOT drained serially
+   (``lax.map`` is a sequential scan — exactly the frontier-level
+   serialization the hybrid exists to avoid). Instead they are ganged into
+   one batched multi-frontier re-dispatch (``build_gang_resume_engine``):
+
+   - survivor state pytrees are stacked and zero-padded to a pow2 gang
+     width ``S_pad`` (stable trace shapes; all-zero pad morsels are inert
+     because their frontier is empty and the convergence mask never fires);
+   - dense survivor frontiers are repacked as MS-BFS lanes
+     (``core.msbfs.gang_pack_lanes`` — morsel s owns lane column s) so ONE
+     shared adjacency scan per iteration serves the whole gang; 64-lane
+     morsels fold into one ``[rows, S*64]`` lane tensor;
+   - a per-survivor convergence mask (own frontier globally non-empty AND
+     own iteration counter under the cap) gates every state update and
+     counter increment, so an early finisher goes *inert* — its state
+     freezes mid-gang — instead of blocking the batch or overrunning its
+     cap. This makes the gang bit-identical per morsel to the serial
+     resume: each morsel sees exactly the same (state, iteration) update
+     sequence, and OR/MIN merges are per-lane.
+
+   A single survivor takes the serial fast path (no packing win to pay
+   for). The sharded state layout gets the same treatment: survivor rows
+   are handed from the phase-1 layout (rows over the policy's graph axes)
+   to the phase-2 layout (rows over ALL axes) by
+   ``collectives.gang_handoff``, and the per-iteration merge is the OR/MIN
+   reduce-scatter (``collectives.gang_merge_scatter``) — so DESIGN §6
+   billion-node graphs get a phase 2 at all. ``SchedulerStats`` exposes
+   gang occupancy and the redispatched/ganged/serial counter split.
+
 3. **Multi-tenant admission** — ``submit``/``flush`` pack queries from many
    callers into 64-wide MS-BFS lane morsels only when ``recommend_policy``
    says packing wins (enough sources to saturate lanes); otherwise each
@@ -64,8 +94,11 @@ from ..core import (
     MorselPolicy,
     as_spec,
     build_engine,
+    build_gang_resume_engine,
     build_resume_engine,
     fit_direction_thresholds,
+    gang_handoff,
+    gang_scatter_back,
     hybrid_phases,
     pad_sources,
     prepare_graph,
@@ -99,22 +132,29 @@ class EngineKey:
 
 
 class EngineCache:
-    """Compiled-QueryEngine cache with hit/miss accounting."""
+    """Compiled-QueryEngine cache with hit/miss accounting. Hits and misses
+    are additionally counted per engine kind (static/phase1/resume/gang) so
+    the gang path's compile footprint is observable."""
 
     def __init__(self):
         self._engines: dict[EngineKey, Any] = {}
         self.hits = 0
         self.misses = 0
+        self.hits_by_kind: collections.Counter = collections.Counter()
+        self.misses_by_kind: collections.Counter = collections.Counter()
 
     def __len__(self) -> int:
         return len(self._engines)
 
     def get_or_build(self, key: EngineKey, builder: Callable[[], Any]):
+        kind = getattr(key, "kind", "?")
         eng = self._engines.get(key)
         if eng is not None:
             self.hits += 1
+            self.hits_by_kind[kind] += 1
             return eng
         self.misses += 1
+        self.misses_by_kind[kind] += 1
         eng = builder()
         self._engines[key] = eng
         return eng
@@ -122,26 +162,76 @@ class EngineCache:
 
 @dataclasses.dataclass
 class QueryOutcome:
-    """One served batch: result + how the runtime chose to execute it."""
+    """One served batch: result + how the runtime chose to execute it.
+
+    ``redispatched`` counts the morsels *handed* to phase 2 (the phase-1
+    survivors); ``resumed_ganged``/``resumed_serial`` split it by how they
+    actually ran (one batched gang dispatch vs the per-morsel engine), so
+    ``redispatched == resumed_ganged + resumed_serial`` always holds.
+    ``gang_width`` is the pow2-padded width of the gang dispatch (0 when no
+    gang ran; the max across chunks for chunked batches)."""
 
     result: IFEResult
     policy: str  # base policy name ("ntks", "ntkms", ...)
-    hybrid: bool  # did a phase-2 re-dispatch run?
+    hybrid: bool  # did the two-phase hybrid path run?
     redispatched: int  # morsels handed to phase 2
     phase_ms: dict  # {"phase1": ms, "phase2": ms}; static runs use phase1
     phase1_budget: int  # iteration cap phase 1 ran under (0 = static)
+    resumed_ganged: int = 0  # survivors resumed in a gang dispatch
+    resumed_serial: int = 0  # survivors resumed one-morsel-at-a-time
+    gang_width: int = 0  # padded gang width (0 = no gang dispatch)
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    """Cumulative runtime counters across every served batch.
+
+    The ``redispatched = resumed_ganged + resumed_serial`` split mirrors
+    QueryOutcome; ``gangs``/``gang_slots`` make gang occupancy observable
+    (survivors actually ganged over padded slots dispatched)."""
+
+    queries: int = 0
+    hybrid_runs: int = 0  # batches that took the two-phase path
+    redispatched: int = 0  # survivors handed to phase 2
+    resumed_ganged: int = 0
+    resumed_serial: int = 0
+    gangs: int = 0  # gang dispatches issued
+    gang_slots: int = 0  # padded gang widths summed over dispatches
+    phase1_ms: float = 0.0
+    phase2_ms: float = 0.0
+
+    @property
+    def gang_occupancy(self) -> float:
+        """Real survivors per padded gang slot (1.0 = pow2-tight gangs)."""
+        return self.resumed_ganged / self.gang_slots if self.gang_slots else 0.0
+
+    def record(self, outcome: "QueryOutcome") -> None:
+        self.queries += 1
+        if outcome.hybrid:
+            self.hybrid_runs += 1
+        self.redispatched += outcome.redispatched
+        self.resumed_ganged += outcome.resumed_ganged
+        self.resumed_serial += outcome.resumed_serial
+        self.phase1_ms += outcome.phase_ms.get("phase1", 0.0)
+        self.phase2_ms += outcome.phase_ms.get("phase2", 0.0)
 
 
 class AdaptiveScheduler:
     """Compile-once, serve-many recursive-query runtime over one graph.
 
     ``adaptive=True`` enables two-phase hybrid dispatch for any policy
-    with source morsels (nTkS/nTkMS/1T1S) under the replicated state
-    layout — pinning a policy picks WHICH morsels are issued, not the
-    execution mode, and the hybrid is bit-identical in result state.
-    ``adaptive=False`` degrades everything to the static dispatcher (one
-    engine per policy), which is also the fallback for the sharded-state
-    layout and for nT1S (no source morsels to re-dispatch).
+    with source morsels (nTkS/nTkMS/1T1S) — pinning a policy picks WHICH
+    morsels are issued, not the execution mode, and the hybrid is
+    bit-identical in result state. Replicated state always qualifies; the
+    sharded layout qualifies when ``gang_resume`` is on (its phase 2 is
+    the gang engine + reduce-scatter merge — there is no serial sharded
+    resume). ``adaptive=False`` degrades everything to the static
+    dispatcher (one engine per policy), which is also the fallback for
+    nT1S (no source morsels to re-dispatch).
+
+    ``gang_resume=False`` pins phase 2 to the legacy one-morsel-at-a-time
+    resume (kept as the differential baseline the parity corpus compares
+    the gang against).
     """
 
     def __init__(
@@ -156,6 +246,7 @@ class AdaptiveScheduler:
         backend="recommend",
         direction_thresholds: DirectionThresholds | str | Path | None = None,
         family: str | None = None,
+        gang_resume: bool = True,
     ):
         self.mesh = mesh
         self.csr = csr
@@ -178,6 +269,8 @@ class AdaptiveScheduler:
             )
         self.direction_thresholds = direction_thresholds
         self.family = family  # dataset family key for threshold lookup
+        self.gang_resume = gang_resume
+        self.stats = SchedulerStats()
         self.cache = EngineCache()
         self._graphs: dict[tuple, tuple] = {}  # (axes, operands) -> (ops, n_pad)
         # p90 per-morsel iteration count of recent batches drives the
@@ -243,6 +336,11 @@ class AdaptiveScheduler:
                 self.mesh, policy, edge_compute, n_pad, cap, extend=extend,
                 operands=operands,
             )
+        elif kind == "gang":
+            builder = lambda: build_gang_resume_engine(
+                self.mesh, policy, edge_compute, n_pad, cap, extend=extend,
+                operands=operands, state_layout=state_layout,
+            )
         else:
             raise ValueError(f"unknown engine kind: {kind}")
         return self.cache.get_or_build(key, builder)
@@ -267,25 +365,40 @@ class AdaptiveScheduler:
     def _run_hybrid(self, pol, ec, g, n_pad, morsels, state_layout,
                     extend=ExtendSpec()):
         """Two-phase hybrid on one morsel batch. Returns a QueryOutcome
-        whose result state is bit-identical to the static engine's."""
+        whose result state is bit-identical to the static engine's.
+
+        Phase-2 dispatch: >1 survivor => one gang-scheduled multi-frontier
+        resume (pow2-padded batch, per-survivor convergence masks — see the
+        module docstring's gang contract); exactly 1 survivor => the serial
+        per-morsel engine (no packing win to pay for); ``gang_resume=False``
+        pins the serial baseline (replicated layout only — the sharded
+        phase 2 IS the gang engine)."""
+        sharded = state_layout == "sharded"
         p1, p2 = hybrid_phases(
             pol.source_axes, pol.graph_axes, lanes=pol.lanes,
             or_impl=pol.or_impl,
         )
         budget = self._phase1_budget()
         eng1 = self.engine(
-            "phase1", p1, ec, n_pad, max_iters=budget, extend=extend,
-            operands=g,
+            "phase1", p1, ec, n_pad, max_iters=budget,
+            state_layout=state_layout, extend=extend, operands=g,
         )
         t0 = time.perf_counter()
         res1 = jax.block_until_ready(eng1(g, morsels))
         t1 = time.perf_counter()
 
-        # survivor test reads ONLY the frontier leaf; the full state pytree
-        # crosses to host just once, and only when phase 2 actually runs
-        frontier1 = np.asarray(res1.state.frontier)
-        m = frontier1.shape[0]
-        active = frontier1.reshape(m, -1).any(axis=1)
+        # survivor test reads ONLY the frontier leaf — and under the
+        # sharded layout only a per-morsel any() reduction (the full state
+        # never gathers to host; the handoff below stays on device)
+        f1 = res1.state.frontier
+        if sharded:
+            active = np.asarray(
+                jnp.any(f1 != 0, axis=tuple(range(1, f1.ndim)))
+            )
+        else:
+            frontier1 = np.asarray(f1)
+            m = frontier1.shape[0]
+            active = frontier1.reshape(m, -1).any(axis=1)
         idx = np.nonzero(active)[0]
         phase_ms = {"phase1": (t1 - t0) * 1e3, "phase2": 0.0}
         if idx.size == 0:
@@ -293,49 +406,76 @@ class AdaptiveScheduler:
                 result=res1, policy=pol.name, hybrid=True, redispatched=0,
                 phase_ms=phase_ms, phase1_budget=budget,
             )
-        state1 = jax.tree.map(np.asarray, res1.state)
         iters1 = np.asarray(res1.iterations)
+        use_gang = self.gang_resume and (idx.size > 1 or sharded)
 
         # pad survivors to a pow2 morsel count: stable resume-trace shapes
-        # (pad morsels are all-zero state => zero-trip while_loops)
+        # (pad morsels are all-zero state => inert / zero-trip loops)
         kp = _pow2ceil(idx.size)
-
-        def pick(x):
-            out = np.zeros((kp,) + x.shape[1:], np.asarray(x).dtype)
-            out[: idx.size] = np.asarray(x)[idx]
-            return out
-
-        sub_state = jax.tree.map(pick, state1)
         sub_it = np.zeros((kp,), iters1.dtype)
         sub_it[: idx.size] = iters1[idx]
 
         g2, n_pad2 = self._graph_for(p2, extend)
         assert n_pad2 == n_pad, (n_pad2, n_pad)
-        eng2 = self.engine(
-            "resume", p2, ec, n_pad, extend=extend, operands=g2
-        )
-        res2 = jax.block_until_ready(eng2(g2, sub_state, sub_it))
+
+        state1 = None
+        if not sharded:
+            state1 = jax.tree.map(np.asarray, res1.state)
+
+            def pick(x):
+                out = np.zeros((kp,) + x.shape[1:], np.asarray(x).dtype)
+                out[: idx.size] = np.asarray(x)[idx]
+                return out
+
+            sub_state = jax.tree.map(pick, state1)
+        else:
+            # all-gather/slice handoff: phase-1 rows (policy graph axes)
+            # -> phase-2 rows (every mesh axis), survivors gathered and
+            # pow2-padded on device
+            sub_state = gang_handoff(
+                res1.state, idx, kp, self.mesh, p2.graph_axes
+            )
+
+        if use_gang:
+            eng2 = self.engine(
+                "gang", p2, ec, n_pad, state_layout=state_layout,
+                extend=extend, operands=g2,
+            )
+            self.stats.gangs += 1
+            self.stats.gang_slots += kp
+        else:
+            eng2 = self.engine(
+                "resume", p2, ec, n_pad, extend=extend, operands=g2
+            )
+        res2 = jax.block_until_ready(eng2(g2, sub_state, jnp.asarray(sub_it)))
         t2 = time.perf_counter()
         phase_ms["phase2"] = (t2 - t1) * 1e3
 
-        state2 = jax.tree.map(np.asarray, res2.state)
         iters2 = np.asarray(res2.iterations)
+        if sharded:
+            final_state = gang_scatter_back(res1.state, res2.state, idx)
+        else:
+            state2 = jax.tree.map(np.asarray, res2.state)
 
-        def put(full, sub):
-            out = np.asarray(full).copy()
-            out[idx] = sub[: idx.size]
-            return out
+            def put(full, sub):
+                out = np.asarray(full).copy()
+                out[idx] = sub[: idx.size]
+                return out
 
-        final_state = jax.tree.map(put, state1, state2)
+            final_state = jax.tree.map(
+                jnp.asarray, jax.tree.map(put, state1, state2)
+            )
         final_iters = iters1.copy()
         final_iters[idx] = iters2[: idx.size]
         return QueryOutcome(
             result=IFEResult(
-                state=jax.tree.map(jnp.asarray, final_state),
-                iterations=jnp.asarray(final_iters),
+                state=final_state, iterations=jnp.asarray(final_iters)
             ),
             policy=pol.name, hybrid=True, redispatched=int(idx.size),
             phase_ms=phase_ms, phase1_budget=budget,
+            resumed_ganged=int(idx.size) if use_gang else 0,
+            resumed_serial=0 if use_gang else int(idx.size),
+            gang_width=kp if use_gang else 0,
         )
 
     def _run_static(self, pol, ec, g, n_pad, morsels, state_layout,
@@ -399,8 +539,10 @@ class AdaptiveScheduler:
 
         use_hybrid = (
             self.adaptive
-            and state_layout == "replicated"
             and bool(pol.source_axes)  # nT1S has no source morsels to split
+            # sharded phase 2 is the gang engine; without it, fall back to
+            # the static sharded dispatch (there is no serial sharded resume)
+            and (state_layout == "replicated" or self.gang_resume)
         )
         run_fn = self._run_hybrid if use_hybrid else self._run_static
         run = lambda *args: run_fn(*args, extend=spec)
@@ -423,6 +565,7 @@ class AdaptiveScheduler:
             self._record_iters(
                 np.asarray(outcome.result.iterations)[:n_real]
             )
+            self.stats.record(outcome)
             return outcome
 
         outcomes = []
@@ -446,7 +589,7 @@ class AdaptiveScheduler:
             ),
         )
         self._record_iters(np.asarray(result.iterations)[:n_real])
-        return QueryOutcome(
+        outcome = QueryOutcome(
             result=result,
             policy=name,
             hybrid=any(o.hybrid for o in outcomes),
@@ -456,7 +599,12 @@ class AdaptiveScheduler:
                 "phase2": sum(o.phase_ms["phase2"] for o in outcomes),
             },
             phase1_budget=max(o.phase1_budget for o in outcomes),
+            resumed_ganged=sum(o.resumed_ganged for o in outcomes),
+            resumed_serial=sum(o.resumed_serial for o in outcomes),
+            gang_width=max(o.gang_width for o in outcomes),
         )
+        self.stats.record(outcome)
+        return outcome
 
     # ----------------------------------------------------------- admission
 

@@ -46,6 +46,20 @@ def st_sampled(options):
     return draw
 
 
+def st_subset(options, min_size: int = 0):
+    """Random subset (stable order) of ``options`` with at least
+    ``min_size`` elements — e.g. which straggler components a fuzz case
+    seeds sources on."""
+    opts = list(options)
+
+    def draw(rng):
+        k = int(rng.integers(min_size, len(opts) + 1))
+        pick = rng.choice(len(opts), size=k, replace=False)
+        return [opts[i] for i in sorted(pick)]
+
+    return draw
+
+
 def given(*strategies, cases: int | None = None):
     n_cases = cases or N_CASES
 

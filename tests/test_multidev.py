@@ -114,6 +114,52 @@ lv = bfs_levels(csr, [7]).astype(np.float64)
 lv[lv < 0] = np.inf
 assert np.allclose(dist, lv), "bellman-ford (unit weights) != bfs levels"
 print("bellman OK")
+
+# --- gang-scheduled phase-2 resume on a real 2x4 mesh (ISSUE 4) -------------
+# skewed workload: small-diameter powerlaw component + 3 long-path straggler
+# components; with a tiny pinned phase-1 budget the path-head morsels survive
+# on different source shards and must be ganged into ONE multi-frontier
+# re-dispatch over all 8 devices — in BOTH state layouts the final state must
+# bit-match the replicated reference and the oracle (the sharded phase 2
+# exercises gang_handoff + the OR reduce-scatter merge across (data, model)).
+from repro.graph.csr import csr_from_edges
+from repro.runtime.scheduler import AdaptiveScheduler
+
+pl = powerlaw(200, 5.0, seed=2)
+src_pl, dst_pl = pl.edge_list()
+srcs_e, dsts_e, base, heads = [src_pl], [dst_pl], 200, []
+for L in (40, 28, 22):
+    p = np.arange(L - 1, dtype=np.int64) + base
+    srcs_e += [p, p + 1]; dsts_e += [p + 1, p]
+    heads.append(base); base += L
+skew = csr_from_edges(base, np.concatenate(srcs_e), np.concatenate(dsts_e))
+gsrcs = np.array(heads + [3, 9, 17], dtype=np.int32)
+expected_g = np.stack([bfs_levels(skew, [int(s)]) for s in gsrcs])
+
+ref_levels = None
+for layout in ("replicated", "sharded"):
+    sched = AdaptiveScheduler(mesh, skew, max_iters=64, phase1_iters=2)
+    out = sched.query(gsrcs, state_layout=layout)
+    assert out.hybrid and out.resumed_ganged >= 3, (layout, out)
+    assert out.gang_width >= out.resumed_ganged, (layout, out)
+    assert out.resumed_serial == 0, (layout, out)
+    got = np.asarray(out.result.state.levels)[: len(gsrcs), : skew.n_nodes]
+    assert (got == expected_g).all(), f"gang {layout} != oracle"
+    if ref_levels is None:
+        ref_levels = np.asarray(out.result.state.levels)
+    else:
+        assert (np.asarray(out.result.state.levels) == ref_levels).all(), \
+            "sharded gang != replicated gang"
+    # serial per-morsel baseline must agree bit-for-bit (replicated only:
+    # the sharded phase 2 IS the gang engine)
+    if layout == "replicated":
+        serial = AdaptiveScheduler(mesh, skew, max_iters=64, phase1_iters=2,
+                                   gang_resume=False)
+        sout = serial.query(gsrcs)
+        assert sout.resumed_serial == out.resumed_ganged, (sout, out)
+        assert (np.asarray(sout.result.state.levels) == ref_levels).all(), \
+            "serial resume != gang resume"
+print("gang OK")
 print("ALL_MULTIDEV_OK")
 """
 

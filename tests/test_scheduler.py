@@ -1,25 +1,63 @@
 """Adaptive morsel runtime + jax-compat regression tests.
 
 Covers the two root-cause seed fixes (version-compatible mesh construction,
-grad-through-optimization_barrier) and the new runtime: engine-cache hit/miss
-identity, two-phase hybrid bit-parity with static nTkS, chunked dispatch, and
-multi-tenant lane-packing admission.
+grad-through-optimization_barrier) and the runtime: engine-cache hit/miss
+identity, two-phase hybrid bit-parity with static nTkS, chunked dispatch,
+multi-tenant lane-packing admission, and the gang-scheduled phase-2 resume
+(differential parity corpus: ganged vs serial per-morsel resume vs static
+nTkS vs the numpy oracle, over both state layouts; pow2-pad boundary,
+single-survivor fast path, all-inert resume, and zero-survivor fixtures).
 """
+import functools
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
 from oracle import bfs_levels
+from proptest import given, st_ints, st_sampled, st_seeds, st_subset
 
-from repro.core import run_recursive_query, policy_ntks
+from repro.core import (
+    build_engine,
+    pad_sources,
+    policy_ntks,
+    policy_ntkms,
+    prepare_graph,
+    run_recursive_query,
+)
+from repro.core.extend import as_spec
+from repro.graph.csr import csr_from_edges
 from repro.graph.generators import erdos_renyi, powerlaw
 from repro.launch.mesh import make_mesh
 from repro.runtime.scheduler import AdaptiveScheduler, _pow2ceil
 
 
+@functools.lru_cache(maxsize=None)
 def mesh11():
     return make_mesh((1, 1), ("data", "model"))
+
+
+@functools.lru_cache(maxsize=None)
+def skew_graph(kind: str = "powerlaw", n_main: int = 160,
+               paths: tuple = (40, 28, 22), seed: int = 0):
+    """A small-diameter main component plus ``len(paths)`` long-path
+    straggler components: sources on the path heads survive any small
+    phase-1 budget, so the survivor count is controllable per test.
+    Returns (csr, path_head_ids)."""
+    main = (powerlaw if kind == "powerlaw" else erdos_renyi)(
+        n_main, 5.0, seed=seed
+    )
+    src_m, dst_m = main.edge_list()
+    srcs, dsts, base, heads = [src_m], [dst_m], n_main, []
+    for length in paths:
+        p = np.arange(length - 1, dtype=np.int64) + base
+        srcs += [p, p + 1]
+        dsts += [p + 1, p]
+        heads.append(base)
+        base += length
+    csr = csr_from_edges(base, np.concatenate(srcs), np.concatenate(dsts))
+    return csr, tuple(heads)
 
 
 # ---------------------------------------------------------------------------
@@ -283,3 +321,330 @@ def test_pow2ceil():
     assert [_pow2ceil(x) for x in (0, 1, 2, 3, 4, 5, 8, 9)] == [
         1, 1, 2, 4, 4, 8, 8, 16,
     ]
+
+
+# ---------------------------------------------------------------------------
+# Gang-scheduled phase-2 resume (ISSUE 4): batched multi-frontier re-dispatch
+# must be bit-identical to the serial per-morsel resume, to static nTkS, and
+# to the numpy oracle — plus edge-case fixtures for the gang path itself.
+# ---------------------------------------------------------------------------
+
+_SCHED_CACHE: dict = {}
+_STATIC_CACHE: dict = {}
+
+
+def _sched(kind: str, backend: str, layout: str = "replicated",
+           gang: bool = True) -> AdaptiveScheduler:
+    """One AdaptiveScheduler per corpus configuration — compiled engines
+    are reused across fuzz cases, so the corpus pays each (graph, backend,
+    engine-kind) compile exactly once."""
+    key = (kind, backend, layout, gang)
+    if key not in _SCHED_CACHE:
+        csr, _ = skew_graph(kind)
+        _SCHED_CACHE[key] = AdaptiveScheduler(
+            mesh11(), csr, max_iters=64, phase1_iters=2, backend=backend,
+            gang_resume=gang,
+        )
+    return _SCHED_CACHE[key]
+
+
+def _static_levels(kind: str, backend: str, srcs: np.ndarray,
+                   layout: str = "replicated") -> np.ndarray:
+    """Static single-engine nTkS reference levels (cached engine)."""
+    key = (kind, backend, layout)
+    if key not in _STATIC_CACHE:
+        csr, _ = skew_graph(kind)
+        spec = as_spec(backend)
+        g, n_pad = prepare_graph(csr, mesh11(), policy_ntks(), extend=spec)
+        eng = build_engine(
+            mesh11(), policy_ntks(), "sp_lengths", n_pad, 64,
+            state_layout=layout, extend=spec, operands=g,
+        )
+        _STATIC_CACHE[key] = (csr, g, n_pad, eng)
+    csr, g, n_pad, eng = _STATIC_CACHE[key]
+    morsels = pad_sources(srcs, 1, 1, n_pad)
+    res = eng(g, jnp.asarray(morsels))
+    return np.asarray(res.state.levels)[: len(srcs), : csr.n_nodes]
+
+
+def _gang_case_sources(kind: str, head_picks, rng) -> np.ndarray:
+    """Fixed-size source batch (stable trace shapes across fuzz cases):
+    the chosen straggler path heads + random main-component fillers."""
+    csr, heads = skew_graph(kind)
+    fill = rng.integers(0, 160, 6 - len(head_picks)).astype(np.int32)
+    return np.concatenate(
+        [np.asarray(head_picks, np.int32), fill]
+    ).astype(np.int32)
+
+
+@given(
+    st_seeds(),
+    st_sampled(["powerlaw", "er"]),
+    st_sampled(["ell_push", "dopt"]),
+    st_subset([0, 1, 2], min_size=0),
+    cases=10,
+)
+def test_gang_parity_fuzz_corpus(seed, kind, backend, head_ids):
+    """Differential engine-parity corpus (replicated layout): for a seeded
+    random (graph family x backend x source set) case, the gang-scheduled
+    hybrid, the serial per-morsel hybrid, the static nTkS engine, and the
+    numpy BFS oracle must agree bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    csr, heads = skew_graph(kind)
+    srcs = _gang_case_sources(
+        kind, [heads[i] for i in head_ids], rng
+    )
+    ganged = _sched(kind, backend).query(srcs)
+    serial = _sched(kind, backend, gang=False).query(srcs)
+    assert ganged.redispatched == serial.redispatched
+    assert ganged.resumed_serial == 0 or ganged.gang_width == 0
+    assert serial.resumed_ganged == 0
+
+    a = jax.tree.map(np.asarray, ganged.result.state)
+    b = jax.tree.map(np.asarray, serial.result.state)
+    for field in a._fields:
+        np.testing.assert_array_equal(
+            getattr(a, field), getattr(b, field),
+            err_msg=f"gang-vs-serial/{field}",
+        )
+    np.testing.assert_array_equal(
+        np.asarray(ganged.result.iterations),
+        np.asarray(serial.result.iterations),
+        err_msg="gang-vs-serial/iterations",
+    )
+
+    lv = a.levels[: len(srcs), : csr.n_nodes]
+    np.testing.assert_array_equal(
+        lv, _static_levels(kind, backend, srcs), err_msg="gang-vs-static"
+    )
+    for j, s in enumerate(srcs):
+        np.testing.assert_array_equal(
+            lv[j], bfs_levels(csr, [int(s)]), err_msg=f"oracle/src{j}"
+        )
+
+
+@pytest.mark.slow
+@given(
+    st_seeds(),
+    st_sampled(["powerlaw", "er"]),
+    st_sampled(["ell_push", "dopt"]),
+    st_subset([0, 1, 2], min_size=1),
+    cases=6,
+)
+def test_gang_parity_fuzz_corpus_sharded(seed, kind, backend, head_ids):
+    """Sharded-state layer of the corpus: the reduce-scatter/all-gather
+    gang resume must match the replicated gang hybrid and the sharded
+    static engine bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    csr, heads = skew_graph(kind)
+    srcs = _gang_case_sources(kind, [heads[i] for i in head_ids], rng)
+    out = _sched(kind, backend, layout="sharded").query(
+        srcs, state_layout="sharded"
+    )
+    assert out.hybrid and out.resumed_ganged == out.redispatched > 0
+    ref = _sched(kind, backend).query(srcs)
+    a = jax.tree.map(np.asarray, out.result.state)
+    b = jax.tree.map(np.asarray, ref.result.state)
+    for field in a._fields:
+        np.testing.assert_array_equal(
+            getattr(a, field), getattr(b, field),
+            err_msg=f"sharded-vs-replicated/{field}",
+        )
+    lv = a.levels[: len(srcs), : csr.n_nodes]
+    np.testing.assert_array_equal(
+        lv, _static_levels(kind, backend, srcs, layout="sharded"),
+        err_msg="sharded-gang-vs-sharded-static",
+    )
+
+
+def test_gang_pow2_pad_boundary_3_to_4():
+    """3 survivors pad to a 4-wide gang; counters split accordingly."""
+    csr, heads = skew_graph("powerlaw")
+    sched = AdaptiveScheduler(
+        mesh11(), csr, max_iters=64, phase1_iters=16
+    )
+    # budget 16 covers the main component (diameter << 16) but none of the
+    # 3 path components (depths 39/27/21) => exactly the 3 heads survive
+    srcs = np.concatenate([[heads[0], heads[1], heads[2]], [3, 9]]).astype(
+        np.int32
+    )
+    out = sched.query(srcs)
+    assert out.redispatched == 3
+    assert out.resumed_ganged == 3 and out.resumed_serial == 0
+    assert out.gang_width == 4
+    assert sched.stats.gangs == 1 and sched.stats.gang_slots == 4
+    assert sched.stats.gang_occupancy == 0.75
+    lv = np.asarray(out.result.state.levels)
+    for j, s in enumerate(srcs):
+        np.testing.assert_array_equal(
+            lv[j, : csr.n_nodes], bfs_levels(csr, [int(s)])
+        )
+
+
+def test_gang_pow2_pad_boundary_5_to_8():
+    """5 survivors cross the pow2 boundary to an 8-wide gang."""
+    csr, heads = skew_graph(
+        "powerlaw", paths=(40, 38, 39, 41, 37), seed=1
+    )
+    sched = AdaptiveScheduler(
+        mesh11(), csr, max_iters=64, phase1_iters=32
+    )
+    srcs = np.asarray(list(heads), np.int32)
+    assert len(srcs) == 5
+    out = sched.query(srcs)
+    assert out.redispatched == 5
+    assert out.resumed_ganged == 5 and out.gang_width == 8
+    lv = np.asarray(out.result.state.levels)
+    for j, s in enumerate(srcs):
+        np.testing.assert_array_equal(
+            lv[j, : csr.n_nodes], bfs_levels(csr, [int(s)])
+        )
+
+
+def test_gang_single_survivor_serial_fast_path():
+    """Exactly one survivor skips gang packing: the serial per-morsel
+    resume runs (no gang dispatch, gang_width 0)."""
+    csr, heads = skew_graph("powerlaw", paths=(40,))
+    sched = AdaptiveScheduler(
+        mesh11(), csr, max_iters=64, phase1_iters=16
+    )
+    srcs = np.asarray([heads[0], 3, 9], np.int32)
+    out = sched.query(srcs)
+    assert out.redispatched == 1
+    assert out.resumed_serial == 1 and out.resumed_ganged == 0
+    assert out.gang_width == 0
+    assert sched.stats.gangs == 0 and sched.stats.gang_slots == 0
+    assert sched.stats.resumed_serial == 1
+    lv = np.asarray(out.result.state.levels)
+    for j, s in enumerate(srcs):
+        np.testing.assert_array_equal(
+            lv[j, : csr.n_nodes], bfs_levels(csr, [int(s)])
+        )
+
+
+def test_gang_all_survivors_inert_first_resume_iteration():
+    """Survivors whose counters already sit at the iteration cap: the gang
+    while_loop must be a zero-trip no-op (convergence masks keep capped
+    morsels frozen), bit-identical to the static engine at the same cap."""
+    cap = 4
+    csr, heads = skew_graph("powerlaw")
+    sched = AdaptiveScheduler(
+        mesh11(), csr, max_iters=cap, phase1_iters=cap
+    )
+    srcs = np.asarray(list(heads), np.int32)  # all three survive at it==cap
+    out = sched.query(srcs)
+    assert out.redispatched == 3 and out.resumed_ganged == 3
+    static = run_recursive_query(
+        mesh11(), csr, srcs, policy_ntks(), "sp_lengths", max_iters=cap
+    )
+    a = jax.tree.map(np.asarray, out.result.state)
+    b = jax.tree.map(np.asarray, static.state)
+    for field in a._fields:
+        np.testing.assert_array_equal(
+            getattr(a, field), getattr(b, field), err_msg=field
+        )
+    np.testing.assert_array_equal(
+        np.asarray(out.result.iterations), np.full(len(srcs), cap)
+    )
+
+
+def test_gang_zero_survivor_flush():
+    """Budget covering convergence => no survivors, no gang dispatch, and
+    every phase-2 counter stays zero."""
+    csr, _ = skew_graph("powerlaw", paths=())
+    sched = AdaptiveScheduler(mesh11(), csr, max_iters=64, phase1_iters=64)
+    out = sched.query(np.asarray([3, 9, 17], np.int32))
+    assert out.hybrid and out.redispatched == 0
+    assert out.resumed_ganged == 0 and out.resumed_serial == 0
+    assert out.gang_width == 0 and out.phase_ms["phase2"] == 0.0
+    assert sched.stats.gangs == 0 and sched.stats.redispatched == 0
+    assert sched.stats.gang_occupancy == 0.0
+
+
+def test_stats_counter_split_invariant():
+    """SchedulerStats aggregates the redispatched = ganged + serial split
+    across queries, and the engine cache tracks gang compiles by kind."""
+    csr, heads = skew_graph("powerlaw")
+    sched = AdaptiveScheduler(mesh11(), csr, max_iters=64, phase1_iters=16)
+    sched.query(np.asarray([heads[0], 3], np.int32))  # 1 survivor: serial
+    sched.query(np.asarray(list(heads), np.int32))  # 3 survivors: gang
+    st = sched.stats
+    assert st.queries == 2 and st.hybrid_runs == 2
+    assert st.redispatched == st.resumed_ganged + st.resumed_serial == 4
+    assert st.resumed_serial == 1 and st.resumed_ganged == 3
+    assert st.gangs == 1 and st.gang_slots == 4
+    assert sched.cache.misses_by_kind["gang"] == 1
+    assert sched.cache.misses_by_kind["resume"] == 1
+    assert sched.cache.misses_by_kind["phase1"] >= 1
+    # same shapes again: pure cache hits, including the gang engine
+    h0 = sched.cache.hits_by_kind["gang"]
+    sched.query(np.asarray(list(heads), np.int32))
+    assert sched.cache.misses_by_kind["gang"] == 1
+    assert sched.cache.hits_by_kind["gang"] == h0 + 1
+
+
+def test_gang_ntkms_lane_morsels():
+    """Gang resume over 64-lane MS-BFS morsels: two surviving lane morsels
+    fold into one [rows, 2*64] lane tensor; results bit-match static
+    nTkMS over the logical node range (padding differs per backend)."""
+    csr, heads = skew_graph("powerlaw")
+    n = csr.n_nodes
+    sched = AdaptiveScheduler(mesh11(), csr, max_iters=64, phase1_iters=2)
+    srcs = np.concatenate(
+        [
+            np.arange(60, dtype=np.int32) % n,
+            np.asarray(list(heads), np.int32),
+            np.arange(61, 120, dtype=np.int32) % 160,
+            [heads[0]],
+        ]
+    ).astype(np.int32)
+    out = sched.query(srcs, policy="ntkms")
+    assert out.policy == "ntkms"
+    assert out.redispatched == 2  # both lane morsels hold a path head
+    assert out.resumed_ganged == 2 and out.gang_width == 2
+    static = run_recursive_query(
+        mesh11(), csr, srcs, policy_ntkms(), "msbfs_lengths"
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out.result.state.levels)[:, :n, :],
+        np.asarray(static.state.levels)[:, :n, :],
+    )
+
+
+def test_gang_engine_direct_bellman_ford():
+    """The gang engine is edge-compute generic: weighted relax (merge=min,
+    no lane formulation => vmap batching) resumed from freshly-initialized
+    states must match the BFS oracle on a unit-weight graph, with correct
+    per-morsel trip counts and an inert pad slot."""
+    from repro.core import build_gang_resume_engine
+    from repro.core.edge_compute import EDGE_COMPUTES
+    from repro.core.policies import hybrid_phases
+
+    csr, heads = skew_graph("powerlaw")
+    n = csr.n_nodes
+    _, p2 = hybrid_phases()
+    g2, n_pad = prepare_graph(csr, mesh11(), p2, pad_shards=1)
+    ec = EDGE_COMPUTES["bellman_ford"]
+    ks = [int(heads[0]), 3, int(heads[1])]
+    state0 = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[ec.init(n_pad, jnp.asarray([s], jnp.int32)) for s in ks],
+    )
+    state0 = jax.tree.map(  # pow2 pad slot: all-zero state, must stay inert
+        lambda x: jnp.concatenate(
+            [x, jnp.zeros((1,) + x.shape[1:], x.dtype)]
+        ),
+        state0,
+    )
+    eng = build_gang_resume_engine(
+        mesh11(), p2, "bellman_ford", n_pad, 64, operands=g2
+    )
+    res = eng(g2, state0, jnp.zeros((4,), jnp.int32))
+    dist = np.asarray(res.state.dist)
+    for i, s in enumerate(ks):
+        lv = bfs_levels(csr, [s]).astype(np.float64)
+        lv[lv < 0] = np.inf
+        np.testing.assert_allclose(dist[i, :n], lv, err_msg=str(s))
+    iters = np.asarray(res.iterations)
+    assert iters[3] == 0  # pad slot never iterated
+    assert iters[0] > iters[1]  # path head runs ~path-length iterations
