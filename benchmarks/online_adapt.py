@@ -1,0 +1,345 @@
+"""Online policy learning under workload drift — per-bucket budget model
+vs the static global-p90 baseline, plus in-flight threshold-refit parity.
+
+The adversarial workload for a GLOBAL phase-1 budget (ROADMAP "Budget
+policy learning"): one graph whose source-degree buckets predict wildly
+different convergence depths — a powerlaw main component (sources of
+degree >= 3 converge in a few hops) sharing the CSR with long path
+components (degree-1 path heads need ~path-length iterations) — served as
+a DRIFTING stream: a shallow warm-up phase, then alternating deep/shallow
+batches. The static learner (one pow2-quantized p90 deque over recent
+batches, ``online_adapt=False``) is structurally unable to satisfy both
+phases at once: its median lags the drift, so deep batches run under a
+shallow budget (every morsel survives to phase 2 — ``too_low``) and/or
+shallow batches run under a deep budget (``too_high`` + inert budget
+slack). The per-(family, source-degree-bucket) ``BudgetModel``
+(``online_adapt=True``) keys the budget on exactly the feature that
+predicts depth here, so after one observation per bucket it serves both
+phases correctly.
+
+Measured (and asserted, here and by ``scripts/ci.sh --bench-smoke``):
+
+- **mispredict-rate floor**: after warm-up, the online learner's phase-1
+  budget mispredict rate (too_low + too_high per observed real morsel)
+  is strictly below the static global-p90 baseline's on the same stream;
+- **threshold-refit parity**: the thresholds the scheduler refit
+  in-flight from its live sample tap equal ``fit_direction_thresholds``
+  run offline on the same accumulated trace (``online_trace()``), with at
+  least one fitted (non-default) table entry;
+- **results invariance**: final levels of the last deep batch are
+  bit-identical between online and baseline schedulers and match the
+  numpy BFS oracle (learning moves iteration slots, never results).
+
+Writes machine-readable ``BENCH_online_adapt.json`` (schema validated
+in-process and re-validated by the CI lane).
+
+    PYTHONPATH=src python benchmarks/online_adapt.py [--smoke] \
+        [--out BENCH_online_adapt.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).parent))
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+SCHEMA = 1
+
+REQUIRED = {
+    "schema": int,
+    "smoke": bool,
+    "workload": dict,
+    "stream": dict,
+    "online": dict,
+    "baseline": dict,
+    "thresholds": dict,
+    "summary": dict,
+}
+SIDE_FIELDS = (
+    "too_low", "too_high", "inert_slots", "observed", "rate",
+    "budgets_by_batch",
+)
+
+
+def validate(doc: dict) -> None:
+    """Schema + acceptance guards for BENCH_online_adapt.json: both
+    mispredict blocks complete, the post-warm-up online rate strictly
+    below the static baseline's, and the in-flight refit bit-equal to the
+    offline fit of the same trace with a non-trivial table."""
+    for key, ty in REQUIRED.items():
+        assert key in doc, f"missing top-level field: {key}"
+        assert isinstance(doc[key], ty), (key, type(doc[key]))
+    assert doc["schema"] == SCHEMA, doc["schema"]
+    for side in ("online", "baseline"):
+        for f in SIDE_FIELDS:
+            assert f in doc[side], f"missing {side} field: {f}"
+        assert doc[side]["observed"] > 0, (side, doc[side])
+    th = doc["thresholds"]
+    for f in ("refits", "n_samples", "fitted_table", "matches_offline_fit",
+              "n_fitted_entries"):
+        assert f in th, f"missing thresholds field: {f}"
+    assert th["matches_offline_fit"] is True, th
+    assert th["refits"] >= 1 and th["n_fitted_entries"] >= 1, th
+    s = doc["summary"]
+    for f in ("mispredict_rate_online", "mispredict_rate_baseline",
+              "passes_rate_floor", "passes_threshold_parity",
+              "results_bit_identical"):
+        assert f in s, f
+    assert s["results_bit_identical"] is True, s
+    assert s["passes_threshold_parity"] is True, s
+    assert s["passes_rate_floor"] is True, (
+        "online mispredict rate must be strictly below the static "
+        f"global-p90 baseline: {s['mispredict_rate_online']} vs "
+        f"{s['mispredict_rate_baseline']}"
+    )
+    assert s["mispredict_rate_online"] < s["mispredict_rate_baseline"], s
+
+
+def drift_graph(n_pl: int, n_paths: int, path_len: int, seed: int = 0):
+    """Powerlaw main component + ``n_paths`` path components in one CSR.
+    Returns (csr, shallow_sources, deep_sources): shallow sources are
+    main-component nodes of out-degree >= 3 (high degree buckets, small
+    eccentricity), deep sources are the degree-1 path heads (bucket 0,
+    ~path_len convergence depth) — source degree predicts depth, which is
+    exactly the signal the per-bucket model keys on."""
+    from repro.graph.csr import csr_from_edges
+    from repro.graph.generators import powerlaw
+
+    pl = powerlaw(n_pl, 6.0, seed=seed)
+    src_pl, dst_pl = pl.edge_list()
+    srcs, dsts, base, heads = [src_pl], [dst_pl], n_pl, []
+    for _ in range(n_paths):
+        p = np.arange(path_len - 1, dtype=np.int64) + base
+        srcs += [p, p + 1]
+        dsts += [p + 1, p]
+        heads.append(base)
+        base += path_len
+    csr = csr_from_edges(base, np.concatenate(srcs), np.concatenate(dsts))
+    shallow = np.nonzero(csr.degrees[:n_pl] >= 3)[0].astype(np.int32)
+    return csr, shallow, np.asarray(heads, np.int32)
+
+
+def drift_stream(shallow, deep, n_warm: int, n_drift: int,
+                 batch: int, seed: int = 0):
+    """The seeded batch stream: ``n_warm`` shallow batches, then
+    ``n_drift`` alternating deep/shallow batches. Returns a list of
+    (kind, sources) with kind in {"shallow", "deep"}."""
+    rng = np.random.default_rng(seed)
+    stream = []
+    for _ in range(n_warm):
+        stream.append(
+            ("shallow", rng.choice(shallow, size=batch, replace=False))
+        )
+    for b in range(n_drift):
+        if b % 2 == 0:
+            k = min(batch, len(deep))
+            stream.append(("deep", rng.choice(deep, size=k, replace=False)))
+        else:
+            stream.append(
+                ("shallow", rng.choice(shallow, size=batch, replace=False))
+            )
+    return stream
+
+
+def serve_stream(sched, stream, warmup_batches: int):
+    """Run the stream; returns (per-batch counter rows, post-warm-up
+    mispredict tallies, last deep outcome, wall seconds)."""
+    import jax
+
+    rows, last_deep = [], None
+    tl = th = inert = obs = 0
+    t0 = time.perf_counter()
+    for b, (kind, srcs) in enumerate(stream):
+        out = sched.query(np.asarray(srcs, np.int32))
+        jax.block_until_ready(out.result.state)
+        rows.append({
+            "batch": b,
+            "kind": kind,
+            "phase1_budget": int(out.phase1_budget),
+            "too_low": int(out.budget_too_low),
+            "too_high": int(out.budget_too_high),
+            "inert_slots": int(out.budget_inert_slots),
+            "observed": int(out.budget_observed),
+            "redispatched": int(out.redispatched),
+        })
+        if b >= warmup_batches:
+            tl += out.budget_too_low
+            th += out.budget_too_high
+            inert += out.budget_inert_slots
+            obs += out.budget_observed
+        if kind == "deep":
+            last_deep = (b, out)
+    wall = time.perf_counter() - t0
+    return rows, (tl, th, inert, obs), last_deep, wall
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small graph / short stream (CI bench-smoke lane)")
+    ap.add_argument("--out", default=str(
+        Path(__file__).resolve().parent.parent / "BENCH_online_adapt.json"
+    ))
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from common import bfs_levels_np
+    from repro.core import fit_direction_thresholds
+    from repro.launch.mesh import make_mesh
+    from repro.runtime.scheduler import AdaptiveScheduler
+
+    if args.smoke:
+        n_pl, n_paths, path_len = 192, 3, 36
+        n_warm, n_drift, batch, refit_every = 4, 10, 4, 4
+    else:
+        n_pl, n_paths, path_len = 384, 5, 44
+        n_warm, n_drift, batch, refit_every = 6, 20, 5, 4
+    max_iters = 64
+    csr, shallow, deep = drift_graph(n_pl, n_paths, path_len)
+    stream = drift_stream(shallow, deep, n_warm, n_drift, batch)
+    # warm-up for rate accounting: the shallow phase plus the first
+    # deep/shallow alternation (both learners get one look at each regime
+    # before being scored)
+    warmup = n_warm + 2
+
+    mesh = make_mesh((1, jax.device_count()), ("data", "model"))
+    print(
+        f"drift workload: {csr.n_nodes} nodes ({len(shallow)} shallow "
+        f"deg>=3 sources, {n_paths} path heads depth ~{path_len - 1}); "
+        f"stream {n_warm} warm + {n_drift} alternating batches of {batch} "
+        f"(scored after batch {warmup})"
+    )
+
+    online = AdaptiveScheduler(
+        mesh, csr, max_iters=max_iters, family="powerlaw",
+        online_adapt=True, refit_every=refit_every,
+    )
+    baseline = AdaptiveScheduler(
+        mesh, csr, max_iters=max_iters, family="powerlaw",
+        online_adapt=False,
+    )
+    on_rows, (on_tl, on_th, on_in, on_obs), on_deep, on_wall = serve_stream(
+        online, stream, warmup
+    )
+    bl_rows, (bl_tl, bl_th, bl_in, bl_obs), bl_deep, bl_wall = serve_stream(
+        baseline, stream, warmup
+    )
+    rate_on = (on_tl + on_th) / max(on_obs, 1)
+    rate_bl = (bl_tl + bl_th) / max(bl_obs, 1)
+
+    # --- threshold-refit parity: in-flight refit == offline fit of the
+    # accumulated live trace -------------------------------------------------
+    online.refit_thresholds()
+    offline = fit_direction_thresholds(online.online_trace())
+    fitted = online.direction_thresholds
+    matches = fitted is not None and dict(fitted.table) == dict(offline.table)
+    from repro.core.policies import BEAMER_ALPHA, BEAMER_BETA
+
+    n_fitted = sum(
+        1 for v in (fitted.table.values() if fitted else [])
+        if tuple(v) != (BEAMER_ALPHA, BEAMER_BETA)
+    )
+    n_samples = sum(len(r) for r in online._dir_samples.values())
+
+    # --- results invariance: learning never moves results -------------------
+    (b_on, out_on), (b_bl, out_bl) = on_deep, bl_deep
+    assert b_on == b_bl
+    n = csr.n_nodes
+    kdeep = len(stream[b_on][1])
+    lv_on = np.asarray(out_on.result.state.levels)[:kdeep, :n]
+    lv_bl = np.asarray(out_bl.result.state.levels)[:kdeep, :n]
+    bit_identical = bool((lv_on == lv_bl).all())
+    assert bit_identical, "online-vs-baseline result divergence"
+    for j, s in enumerate(stream[b_on][1]):
+        ref = bfs_levels_np(csr, int(s))
+        assert (lv_on[j] == ref).all(), f"oracle mismatch on source {s}"
+
+    budgets = {
+        f"{fam}/2^{b}": int(v)
+        for (fam, b), v in online.budget_model.budgets(max_iters).items()
+    }
+    print(
+        f"post-warm-up mispredicts: online {on_tl} too-low / {on_th} "
+        f"too-high over {on_obs} morsels (rate {rate_on:.3f}, {on_in} "
+        f"inert slots) vs baseline {bl_tl}/{bl_th} over {bl_obs} "
+        f"(rate {rate_bl:.3f}, {bl_in} inert slots)"
+    )
+    print(
+        f"learned budgets {budgets}; {online.stats.refits} refit(s) from "
+        f"{n_samples} live samples, offline-fit parity: {matches} "
+        f"({n_fitted} fitted table entries)"
+    )
+
+    doc = {
+        "schema": SCHEMA,
+        "smoke": bool(args.smoke),
+        "workload": {
+            "n_nodes": int(csr.n_nodes),
+            "n_edges": int(csr.n_edges),
+            "avg_degree": float(csr.avg_degree),
+            "n_shallow_sources": int(len(shallow)),
+            "n_path_heads": int(n_paths),
+            "path_depth": int(path_len - 1),
+        },
+        "stream": {
+            "n_warm": n_warm,
+            "n_drift": n_drift,
+            "batch": batch,
+            "warmup_batches_excluded": warmup,
+            "refit_every": refit_every,
+        },
+        "online": {
+            "too_low": on_tl, "too_high": on_th, "inert_slots": on_in,
+            "observed": on_obs, "rate": rate_on, "wall_s": on_wall,
+            "learned_budgets": budgets,
+            "budgets_by_batch": [r["phase1_budget"] for r in on_rows],
+            "batches": on_rows,
+        },
+        "baseline": {
+            "too_low": bl_tl, "too_high": bl_th, "inert_slots": bl_in,
+            "observed": bl_obs, "rate": rate_bl, "wall_s": bl_wall,
+            "budgets_by_batch": [r["phase1_budget"] for r in bl_rows],
+            "batches": bl_rows,
+        },
+        "thresholds": {
+            "refits": int(online.stats.refits),
+            "n_samples": int(n_samples),
+            "fitted_table": {
+                f"{fam}/2^{b}": list(v)
+                for (fam, b), v in sorted(
+                    (fitted.table if fitted else {}).items()
+                )
+            },
+            "n_fitted_entries": int(n_fitted),
+            "matches_offline_fit": bool(matches),
+        },
+        "summary": {
+            "mispredict_rate_online": rate_on,
+            "mispredict_rate_baseline": rate_bl,
+            "inert_slots_online": on_in,
+            "inert_slots_baseline": bl_in,
+            "passes_rate_floor": bool(rate_on < rate_bl),
+            "passes_threshold_parity": bool(matches and n_fitted >= 1),
+            "results_bit_identical": bit_identical,
+        },
+    }
+    validate(doc)
+    Path(args.out).write_text(json.dumps(doc, indent=1, sort_keys=True))
+    print(
+        f"summary: mispredict rate {rate_on:.3f} online vs {rate_bl:.3f} "
+        f"static global-p90 "
+        f"(passes_rate_floor={doc['summary']['passes_rate_floor']})"
+    )
+    print(f"wrote {args.out} (schema v{SCHEMA} validated)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -19,7 +19,14 @@
 #                               # ganged-vs-serial phase-2 iteration-slot
 #                               # floor (gang slots = max survivor trips <=
 #                               # serial slots = sum, with >=2 survivors
-#                               # actually ganged)
+#                               # actually ganged); then run the online-adapt
+#                               # drift benchmark in --smoke mode and validate
+#                               # BENCH_online_adapt.json (schema + the
+#                               # mispredict-rate floor: the per-bucket budget
+#                               # learner strictly below the static global-p90
+#                               # baseline, and in-flight threshold refits
+#                               # bit-equal to the offline fit of the same
+#                               # accumulated trace)
 #
 # CI_BUDGET_SECONDS caps any lane via timeout (default 1800); a hung XLA
 # compile or subprocess fails the lane instead of wedging the pipeline.
@@ -72,6 +79,24 @@ print(f"bench-smoke OK: {sys.argv[1]} schema valid, "
       f"phase-2 slots {g['phase2_slots_ganged']} ganged vs "
       f"{g['phase2_slots_serial']} serial, wall ratio serial/ganged "
       f"{g['phase2_wall_ratio_serial_over_ganged']:.2f}x")
+EOF
+  AOUT="${BENCH_ONLINE_OUT:-/tmp/BENCH_online_adapt.smoke.json}"
+  # the benchmark validates before writing; re-validate the artifact here
+  # so a stale/hand-edited file also fails the lane
+  timeout --signal=INT "$BUDGET" \
+    python benchmarks/online_adapt.py --smoke --out "$AOUT"
+  python - "$AOUT" <<'EOF'
+import json, sys
+sys.path.insert(0, "benchmarks")
+from online_adapt import validate
+doc = json.loads(open(sys.argv[1]).read())
+validate(doc)  # schema + mispredict-rate floor + threshold-refit parity
+s = doc["summary"]
+print(f"bench-smoke OK: {sys.argv[1]} schema valid, mispredict rate "
+      f"{s['mispredict_rate_online']:.3f} online vs "
+      f"{s['mispredict_rate_baseline']:.3f} static global-p90, "
+      f"threshold refit parity {s['passes_threshold_parity']}, "
+      f"results bit-identical {s['results_bit_identical']}")
 EOF
 else
   FAST_BUDGET="${FAST_LANE_BUDGET_SECONDS:-900}"

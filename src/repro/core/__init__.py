@@ -12,9 +12,13 @@ from .ife import (
 from .policies import (
     MorselPolicy,
     POLICIES,
+    BudgetMispredicts,
+    BudgetModel,
     DirectionThresholds,
+    count_budget_mispredicts,
     degree_bucket,
     fit_direction_thresholds,
+    pow2ceil,
     policy_1t1s,
     policy_nt1s,
     policy_ntks,
@@ -31,6 +35,7 @@ from .extend import (
     as_spec,
     build_operands,
     effective_csr,
+    frontier_stats,
     make_backend,
 )
 from .dispatcher import (

@@ -50,6 +50,7 @@ from .extend import (
     as_operands,
     as_spec,
     build_operands,
+    frontier_stats,
     make_backend,
 )
 from .ife import IFEResult
@@ -186,11 +187,23 @@ def build_engine(
     sync: str = "global",
     extend="ell_push",
     operands=None,
+    collect_stats: bool = False,
 ) -> QueryEngine:
     """``operands``: the graph's GraphOperands bundle (or any graph whose
     stripped structure matches what the engine will be called with). Needed
     to derive shard_map specs for graph-dependent operand treedefs (binned
     pull slabs); optional for the other backends.
+
+    ``collect_stats``: the online-policy sample tap. The engine's fn
+    returns ``(IFEResult, stats)`` where ``stats[m, cap, 4]`` holds each
+    morsel's per-iteration ``extend.frontier_stats`` record — the Beamer
+    predicate's inputs (n_f, m_f, m_u) plus the binned-pull scan cost
+    (-1 when the operand bundle carries no binned slabs) — written into
+    the while_loop carry at the state about to extend (row ``it`` is the
+    it-th iteration's sample; rows at/after the morsel's trip count stay
+    zero). A pure readout: result state is bit-identical to the
+    untapped engine. The adaptive scheduler drains these samples into
+    its in-flight ``DirectionThresholds`` refit.
 
     ``state_layout``:
 
@@ -248,6 +261,18 @@ def build_engine(
             or_impl=policy.or_impl,
             sharded=sharded,
         )
+        # per-local-row binned slab widths for the stats tap's pull-cost
+        # column, derived from the CALL-TIME operands (inv is data, not
+        # shape: a same-structure graph may bin rows differently); the
+        # tap records -1 when the engine scans no binned slabs
+        bw = None
+        if collect_stats and ops.rev_binned is not None:
+            bn = ops.rev_binned
+            wvec = jnp.concatenate([
+                jnp.full((s.shape[-2],), s.shape[-1], jnp.float32)
+                for s in bn.slabs
+            ])  # slab width per binned position (this shard's slice)
+            bw = wvec[bn.inv[0]]
 
         def one_morsel(srcs):
             if sharded:
@@ -263,7 +288,7 @@ def build_engine(
                 state0 = ec.init(n, srcs)
 
             def cond(carry):
-                state, it = carry
+                state, it = carry[0], carry[1]
                 active = jnp.any(state.frontier != 0)
                 if sync_axes:
                     active = (
@@ -272,7 +297,12 @@ def build_engine(
                 return active & (it < cap)
 
             def body(carry):
-                state, it = carry
+                state, it = carry[0], carry[1]
+                if collect_stats:
+                    rec = frontier_stats(ops, state, ctx, bin_widths=bw)
+                    stats = lax.dynamic_update_slice_in_dim(
+                        carry[2], rec[None, :], it, axis=0
+                    )
                 contribution = ec.extend(be, ops, state, ctx)
                 if sharded:
                     merged = merge_scatter(
@@ -282,10 +312,15 @@ def build_engine(
                     merged = merge_contribution(
                         ec.MERGE, contribution, ga, policy.or_impl
                     )
-                return ec.apply(state, merged, it), it + 1
+                out = (ec.apply(state, merged, it), it + 1)
+                return out + ((stats,) if collect_stats else ())
 
-            state, iters = lax.while_loop(cond, body, (state0, jnp.int32(0)))
-            return IFEResult(state=state, iterations=iters)
+            init = (state0, jnp.int32(0))
+            if collect_stats:
+                init = init + (jnp.zeros((cap, 4), jnp.float32),)
+            carry = lax.while_loop(cond, body, init)
+            res = IFEResult(state=carry[0], iterations=carry[1])
+            return (res, carry[2]) if collect_stats else res
 
         return lax.map(one_morsel, sources_local)
 
@@ -305,6 +340,9 @@ def build_engine(
         )
     else:
         out_spec = P(sa if sa else None)
+    if collect_stats:
+        # stats stack over morsels like iterations: [m, cap, 4]
+        out_spec = (out_spec, P(sa if sa else None))
     fn = jax.jit(
         shard_map(
             worker,

@@ -783,6 +783,65 @@ class BlockBackend:
 # ---------------------------------------------------------------------------
 
 
+def _predicate_locals(ops, frontier, visited, ctx: ExtendCtx):
+    """This shard's contributions to the Beamer predicate's inputs:
+    ``(n_f, m_f, m_u, unvis)`` — active-row count, frontier out-edge
+    mass, unexplored out-edge mass (all pre-psum local partials, float32)
+    plus the local unvisited-row mask (None when the edge compute keeps
+    no visited set — nothing is ever suppressed, so m_u degrades to
+    total minus frontier mass)."""
+    g = ops.fwd
+    rows = g.indices.shape[0]
+    floc = _local_state(frontier, rows, ctx)
+    act = (floc != 0) if floc.ndim == 1 else (floc != 0).any(axis=-1)
+    deg = g.degrees.astype(jnp.float32)
+    n_f = act.sum(dtype=jnp.float32)
+    m_f = jnp.sum(deg * act)
+    if visited is not None:
+        vloc = _local_state(visited, rows, ctx)
+        vis = (vloc != 0) if vloc.ndim == 1 else (vloc != 0).any(-1)
+        unvis = ~vis
+        m_u = jnp.sum(deg * unvis)
+    else:
+        unvis = None
+        m_u = deg.sum() - m_f
+    return n_f, m_f, m_u, unvis
+
+
+def frontier_stats(ops, state, ctx: ExtendCtx, bin_widths=None):
+    """One per-iteration sample for the online direction-threshold
+    learner: ``[n_f, m_f, m_u, pull_slots_binned]`` (float32, reduced
+    over ``ctx.axes``) of the state ABOUT to extend — the inputs of the
+    Beamer predicate plus the slots a degree-binned pull would scan at
+    this state (the widths of the still-unvisited rows; full capacity
+    when the edge compute keeps no visited set). ``bin_widths`` is this
+    shard's per-local-row slab width vector; when the engine's operands
+    carry no binned slabs the cost column is the sentinel ``-1`` and the
+    record is skipped by ``fit_direction_thresholds``.
+
+    This is the sample tap ``build_engine(collect_stats=True)`` writes
+    into the phase-1 while_loop carry: a pure readout of (frontier,
+    visited), so instrumented engines stay bit-identical in result
+    state. Semantics match benchmarks/direction_opt.py's host-side
+    accounting record-for-record.
+    """
+    frontier = state.frontier
+    visited = getattr(state, "visited", None)
+    n_f, m_f, m_u, unvis = _predicate_locals(ops, frontier, visited, ctx)
+    if bin_widths is None:
+        pull = jnp.float32(0.0)
+    elif unvis is None:
+        pull = bin_widths.sum()
+    else:
+        pull = jnp.sum(bin_widths * unvis)
+    stats = jnp.stack([n_f, m_f, m_u, pull])
+    if ctx.axes:
+        stats = lax.psum(stats, ctx.axes)
+    if bin_widths is None:
+        stats = stats.at[3].set(-1.0)
+    return stats
+
+
 class AutoBackend:
     """Per-iteration push/pull choice under fixed shapes.
 
@@ -804,19 +863,7 @@ class AutoBackend:
         )
 
     def _use_pull(self, ops, frontier, visited, ctx):
-        g = ops.fwd
-        rows = g.indices.shape[0]
-        floc = _local_state(frontier, rows, ctx)
-        act = (floc != 0) if floc.ndim == 1 else (floc != 0).any(axis=-1)
-        deg = g.degrees.astype(jnp.float32)
-        n_f = act.sum(dtype=jnp.float32)
-        m_f = jnp.sum(deg * act)
-        if visited is not None:
-            vloc = _local_state(visited, rows, ctx)
-            vis = (vloc != 0) if vloc.ndim == 1 else (vloc != 0).any(-1)
-            m_u = jnp.sum(deg * ~vis)
-        else:
-            m_u = deg.sum() - m_f
+        n_f, m_f, m_u, _ = _predicate_locals(ops, frontier, visited, ctx)
         stats = jnp.stack([n_f, m_f, m_u])
         if ctx.axes:
             stats = lax.psum(stats, ctx.axes)

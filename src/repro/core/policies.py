@@ -28,19 +28,34 @@ default recommendation is the Beamer direction switch over degree-binned
 pull slabs, and its alpha/beta constants — Beamer's hand-tuned CPU values —
 can be replaced by thresholds fitted per (dataset-family, degree-bucket)
 from the per-iteration scan traces ``benchmarks/direction_opt.py``
-accumulates in ``BENCH_direction_opt.json`` (same shape as the adaptive
-scheduler's phase-1 budget learner: measure, quantize, serve).
+accumulates in ``BENCH_direction_opt.json`` — or, online, from the
+scheduler's own live sample tap (``AdaptiveScheduler.online_trace``).
+
+``BudgetModel`` is the same measure/quantize/serve loop for the hybrid's
+*phase-1 iteration budget*: per-(dataset-family, source-degree-bucket)
+windows of observed convergence depths, pow2-quantized quantile serving
+with DirectionThresholds-style bucket fallback, and mispredict counters
+(budget too low => morsels pay a re-dispatch; too high => inert budget
+slack) that make the learner's accuracy observable in SchedulerStats.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import json
 import math
 from pathlib import Path
 from typing import Mapping, Sequence
 
+import numpy as np
+
 from .collectives import REDISPATCH_OR_IMPL
 from .extend import ExtendSpec
+
+
+def pow2ceil(x: int) -> int:
+    """Smallest power of two >= x (1 for x <= 1)."""
+    return 1 if x <= 1 else 1 << (int(x) - 1).bit_length()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,6 +179,182 @@ def degree_bucket(avg_degree: float) -> int:
     return int(math.ceil(math.log2(avg_degree) - 1e-12))
 
 
+# ---------------------------------------------------------------------------
+# Phase-1 budget learning: per-(dataset-family, source-degree-bucket) model.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BudgetMispredicts:
+    """Cumulative phase-1 budget mispredict counters.
+
+    ``too_low`` counts real morsels that survived phase 1 (the budget sat
+    below their convergence depth, so they paid a re-dispatch); ``too_high``
+    counts converged real morsels whose depth sat strictly under half the
+    budget — a smaller pow2 budget would have covered them with room to
+    spare. The right-sized band is ``[budget/2, budget]``: serving
+    ``pow2ceil(depth + 1)`` for a steady depth never mispredicts (depth
+    exactly a pow2 quantizes to ``2·depth``, the band's lower edge).
+    ``inert_slots`` is the budget slack
+    ``budget - trips`` summed over converged morsels — the iteration slots a
+    lockstep phase-1 schedule would have burned inert, and the latency a
+    straggler waits under few-device nTkS before its all-device phase 2.
+    """
+
+    too_low: int = 0
+    too_high: int = 0
+    inert_slots: int = 0
+    observed: int = 0  # real morsels the counters classified
+
+    @property
+    def rate(self) -> float:
+        """Mispredicted real morsels per observed real morsel."""
+        if not self.observed:
+            return 0.0
+        return (self.too_low + self.too_high) / self.observed
+
+    def count(self, too_low: int, too_high: int, inert_slots: int,
+              observed: int) -> None:
+        self.too_low += int(too_low)
+        self.too_high += int(too_high)
+        self.inert_slots += int(inert_slots)
+        self.observed += int(observed)
+
+    def reset(self) -> None:
+        self.too_low = self.too_high = self.inert_slots = self.observed = 0
+
+
+def count_budget_mispredicts(
+    budget: int, trips, survived, floor: int = 4
+) -> tuple[int, int, int]:
+    """Classify one batch's REAL morsels against its phase-1 budget.
+
+    ``trips`` are the morsels' phase-1 iteration counts, ``survived`` the
+    phase-1 survivor mask (frontier still live at the budget). Returns
+    ``(too_low, too_high, inert_slots)`` per the BudgetMispredicts
+    semantics; a budget at the quantization floor never counts too_high
+    (no smaller budget was available to pick).
+    """
+    trips = np.asarray(trips)
+    survived = np.asarray(survived, bool)
+    conv = trips[~survived]
+    too_low = int(survived.sum())
+    inert_slots = int(np.maximum(int(budget) - conv, 0).sum())
+    too_high = (
+        int((conv * 2 < int(budget)).sum()) if int(budget) > floor else 0
+    )
+    return too_low, too_high, inert_slots
+
+
+class BudgetModel:
+    """Per-(dataset-family, source-degree-bucket) phase-1 budget learner.
+
+    Each key holds a bounded window of observed per-morsel convergence
+    depths (final IFE trip counts); ``predict`` serves the window's
+    ``quantile`` pow2-quantized (so the budget only compiles O(log
+    max_iters) distinct phase-1 engines), with the same fallback chain as
+    ``DirectionThresholds.lookup``: exact (family, bucket) -> nearest
+    bucket within the family -> nearest bucket across all families ->
+    ``None`` (the caller's global-p90 cold path; ``cold_budget`` is what
+    the scheduler serves when that path holds no data either). The scheduler feeds it
+    only *real* morsels — pad/inert morsels exit at 0 iterations and
+    would drag every bucket's budget below its true convergence depth —
+    and skips it entirely when ``phase1_iters`` is pinned.
+
+    ``mispredicts`` accumulates the outcome counters for the batches this
+    model budgeted (see BudgetMispredicts / count_budget_mispredicts).
+    """
+
+    def __init__(self, window: int = 64, quantile: float = 90.0,
+                 floor: int = 4, cold_budget: int = 8):
+        self.window = int(window)
+        self.quantile = float(quantile)
+        self.floor = int(floor)
+        self.cold_budget = int(cold_budget)
+        self._windows: dict[tuple, collections.deque] = {}
+        self.mispredicts = BudgetMispredicts()
+
+    def __len__(self) -> int:
+        """Number of non-empty (family, bucket) windows."""
+        return sum(1 for w in self._windows.values() if w)
+
+    @property
+    def n_samples(self) -> int:
+        return sum(len(w) for w in self._windows.values())
+
+    def observe(self, family, bucket: int, trips) -> None:
+        """Append real-morsel convergence depths to one bucket's window."""
+        trips = np.asarray(trips).reshape(-1)
+        if trips.size == 0:
+            return
+        w = self._windows.setdefault(
+            (family, int(bucket)), collections.deque(maxlen=self.window)
+        )
+        w.extend(int(t) for t in trips)
+
+    def observe_batch(self, family, buckets, trips) -> None:
+        """Per-morsel (bucket, trip) pairs of one served batch."""
+        for b, t in zip(buckets, np.asarray(trips).reshape(-1)):
+            self.observe(family, int(b), [int(t)])
+
+    def _window_for(self, family, bucket: int):
+        w = self._windows.get((family, int(bucket)))
+        if w:
+            return w
+        # nearest bucket within the family, then across all families —
+        # ties break toward the smaller bucket id then the family repr,
+        # mirroring DirectionThresholds.lookup determinism
+        near = [
+            (abs(kb - bucket), kb, str(kf), kf)
+            for (kf, kb), win in self._windows.items()
+            if win and kf == family
+        ]
+        if not near:
+            near = [
+                (abs(kb - bucket), kb, str(kf), kf)
+                for (kf, kb), win in self._windows.items()
+                if win
+            ]
+        if not near:
+            return None
+        _, kb, _, kf = min(near, key=lambda t: t[:3])
+        return self._windows[(kf, kb)]
+
+    def predict(self, family, bucket: int, max_iters: int) -> int | None:
+        """pow2-quantized ``quantile`` of the bucket's window (with the
+        lookup fallback chain), clamped to [floor, max_iters]; None when
+        the model holds no samples at all."""
+        w = self._window_for(family, bucket)
+        if w is None:
+            return None
+        b = pow2ceil(
+            int(np.percentile(np.asarray(w, np.float64), self.quantile)) + 1
+        )
+        return max(self.floor, min(b, int(max_iters)))
+
+    def budget_for(self, family, buckets, max_iters: int) -> int | None:
+        """One covering budget for a batch spanning ``buckets``: the max
+        of the per-bucket predictions (most morsels should converge
+        inside phase 1). None when the model is empty or no bucket is
+        given."""
+        preds = [
+            self.predict(family, b, max_iters) for b in sorted(set(
+                int(b) for b in buckets
+            ))
+        ]
+        preds = [p for p in preds if p is not None]
+        return max(preds) if preds else None
+
+    def budgets(self, max_iters: int) -> dict:
+        """Snapshot of every learned bucket's served budget (reporting)."""
+        return {
+            k: self.predict(k[0], k[1], max_iters)
+            for k, w in sorted(self._windows.items(),
+                               key=lambda kv: (str(kv[0][0]), kv[0][1]))
+            if w
+        }
+
+
 @dataclasses.dataclass(frozen=True)
 class DirectionThresholds:
     """Fitted (alpha, beta) per (dataset-family, degree-bucket).
@@ -196,6 +387,23 @@ class DirectionThresholds:
         return self.default
 
 
+#: cap on the per-axis candidate decision boundaries _fit_group searches.
+#: Offline bench traces stay well under it (every boundary is searched);
+#: the scheduler's ONLINE sample store can hold thousands of near-unique
+#: ratios, and an uncapped grid would put an O(|A|·|B|·records) search on
+#: the serving path — over the cap the sorted boundary set is subsampled
+#: at evenly-spaced ranks (deterministic; Beamer anchors always kept).
+MAX_FIT_CANDIDATES = 64
+
+
+def _boundary_candidates(vals, anchor: float) -> list:
+    cands = sorted(set(vals) | {anchor, 0.0})
+    if len(cands) <= MAX_FIT_CANDIDATES:
+        return cands
+    idx = np.linspace(0, len(cands) - 1, MAX_FIT_CANDIDATES).astype(int)
+    return sorted({cands[i] for i in idx} | {anchor, 0.0})
+
+
 def _fit_group(recs: list[tuple], pull_key: str) -> tuple:
     """One (family, bucket) group: pick (alpha, beta) minimizing the total
     scanned slots the Beamer predicate would have chosen over the trace.
@@ -206,7 +414,10 @@ def _fit_group(recs: list[tuple], pull_key: str) -> tuple:
     ``m_u/m_f`` (resp. ``n/n_f``) ratio is the exact alpha (beta) at which
     that iteration's predicate flips — plus the Beamer defaults, so the
     search space is the set of distinct decision boundaries the trace can
-    express. Deterministic: ties break toward the Beamer constants."""
+    express (rank-subsampled past MAX_FIT_CANDIDATES — see above). The
+    per-candidate cost is numpy-vectorized over the records, keeping the
+    in-flight refit cheap enough for the serving path. Deterministic:
+    ties break toward the Beamer constants."""
     pts = []
     for r, n in recs:
         if any(
@@ -225,21 +436,21 @@ def _fit_group(recs: list[tuple], pull_key: str) -> tuple:
     if not pts:
         return (BEAMER_ALPHA, BEAMER_BETA)
     eps = 1e-9
-    alphas = sorted(
-        {m_u / m_f * (1 + eps) for m_f, m_u, *_ in pts if m_f > 0}
-        | {BEAMER_ALPHA, 0.0}
+    alphas = _boundary_candidates(
+        (m_u / m_f * (1 + eps) for m_f, m_u, *_ in pts if m_f > 0),
+        BEAMER_ALPHA,
     )
-    betas = sorted(
-        {n / n_f * (1 + eps) for _, _, n_f, n, _, _ in pts if n_f > 0}
-        | {BEAMER_BETA, 0.0}
+    betas = _boundary_candidates(
+        (n / n_f * (1 + eps) for _, _, n_f, n, _, _ in pts if n_f > 0),
+        BEAMER_BETA,
     )
+    arr = np.asarray(pts, np.float64)  # [P, 6]
+    m_f, m_u, n_f, n = arr[:, 0], arr[:, 1], arr[:, 2], arr[:, 3]
+    push, pull = arr[:, 4], arr[:, 5]
 
     def cost(a: float, b: float) -> float:
-        tot = 0.0
-        for m_f, m_u, n_f, n, push, pull in pts:
-            use_pull = (m_f * a > m_u) and (n_f * b > n)
-            tot += pull if use_pull else push
-        return tot
+        use_pull = (m_f * a > m_u) & (n_f * b > n)
+        return float(np.where(use_pull, pull, push).sum())
 
     def key(ab):
         a, b = ab

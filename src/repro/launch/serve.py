@@ -10,9 +10,13 @@ picked per batch by the paper's robustness rule (``recommend_policy``)
 unless pinned, and the frontier-extension scan layout picked by
 ``recommend_backend`` (the default: direction-optimized degree-binned
 pull; ``--thresholds`` swaps Beamer's alpha/beta for constants fitted
-from ``BENCH_direction_opt.json`` traces). The driver reports per-phase
-latency percentiles so the hybrid's split is observable in serving
-terms.
+from ``BENCH_direction_opt.json`` traces). With ``--online-adapt`` (the
+default) the runtime also learns from the stream it serves: the phase-1
+budget comes from the per-(family, source-degree-bucket) BudgetModel and
+the direction thresholds are refit in-flight from the live sample tap.
+The driver reports per-phase latency percentiles plus the learner's
+refit/mispredict counters so the hybrid's split and the policy loop's
+accuracy are observable in serving terms.
 
     PYTHONPATH=src python -m repro.launch.serve --dataset ldbc \
         --batches 20 --sources-per-batch 8
@@ -44,7 +48,8 @@ class QueryService:
     """
 
     def __init__(self, mesh, csr, max_deg=None, max_iters=64, adaptive=True,
-                 backend="recommend", direction_thresholds=None, family=None):
+                 backend="recommend", direction_thresholds=None, family=None,
+                 online_adapt=True, refit_every=16):
         self.mesh = mesh
         self.csr = csr
         self.max_iters = max_iters
@@ -53,6 +58,7 @@ class QueryService:
             mesh, csr, max_deg=max_deg, max_iters=max_iters,
             adaptive=adaptive, backend=backend,
             direction_thresholds=direction_thresholds, family=family,
+            online_adapt=online_adapt, refit_every=refit_every,
         )
         self.last_outcome = None  # per-phase latency of the last query
 
@@ -96,9 +102,20 @@ def main(argv=None) -> int:
                     help="fit the direction switch's alpha/beta from this "
                          "BENCH_direction_opt.json trace file "
                          "(core.policies.fit_direction_thresholds) instead "
-                         "of Beamer's constants")
+                         "of Beamer's constants; an explicit table is a "
+                         "PIN — online refitting will not replace it")
     ap.add_argument("--static", action="store_true",
                     help="disable the adaptive hybrid (static dispatch)")
+    ap.add_argument("--online-adapt", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="online policy learning: per-(family, "
+                         "source-degree-bucket) phase-1 budget model + "
+                         "in-flight direction-threshold refitting from the "
+                         "live per-iteration sample tap "
+                         "(--no-online-adapt pins the legacy global-p90 "
+                         "budget and static thresholds)")
+    ap.add_argument("--refit-every", type=int, default=16,
+                    help="batches between in-flight threshold refits")
     args = ap.parse_args(argv)
 
     csr = PAPER_DATASETS[args.dataset](args.scale)
@@ -108,7 +125,9 @@ def main(argv=None) -> int:
     family = PAPER_DATASET_FAMILIES.get(args.dataset)
     svc = QueryService(mesh, csr, adaptive=not args.static,
                        backend=args.backend,
-                       direction_thresholds=args.thresholds, family=family)
+                       direction_thresholds=args.thresholds, family=family,
+                       online_adapt=args.online_adapt,
+                       refit_every=args.refit_every)
     print(
         f"serving {args.dataset} proxy: {csr.n_nodes} nodes, "
         f"{csr.n_edges} edges, avg degree {csr.avg_degree:.0f}"
@@ -173,6 +192,23 @@ def main(argv=None) -> int:
         f"(occupancy {stats.gang_occupancy:.2f}), "
         f"{stats.resumed_serial} resumed serially"
     )
+    if args.online_adapt:
+        sched = svc.scheduler
+        model = sched.budget_model
+        budgets = {
+            f"{fam}/2^{b}": v
+            for (fam, b), v in model.budgets(sched.max_iters).items()
+        }
+        mp = model.mispredicts
+        print(
+            f"online adapt: {stats.refits} threshold refit(s) from "
+            f"{sum(len(r) for r in sched._dir_samples.values())} live "
+            f"samples; learned budgets {budgets}; "
+            f"budget mispredicts {mp.too_low} too-low / {mp.too_high} "
+            f"too-high over {mp.observed} morsels "
+            f"(rate {stats.budget_mispredict_rate:.3f}, "
+            f"{stats.budget_inert_slots} inert budget slots)"
+        )
     return 0
 
 

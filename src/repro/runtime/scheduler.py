@@ -16,8 +16,9 @@ serving layer that fixes both:
    at both the source node and frontier levels") as a two-phase schedule:
 
    - *Phase 1* runs nTkS with per-shard convergence (``sync="shard"``) under
-     an adaptive iteration budget learned from recent batches: source-shard
-     groups whose morsels converge exit immediately.
+     an adaptive iteration budget served per batch by the per-(dataset-
+     family, source-degree-bucket) ``BudgetModel`` (see point 5):
+     source-shard groups whose morsels converge exit immediately.
    - *Phase 2* re-dispatches the surviving (unconverged) morsels with their
      saved state under nT1S frontier parallelism over ALL mesh axes (ring
      frontier union — collectives.REDISPATCH_OR_IMPL), so the stragglers
@@ -72,6 +73,31 @@ serving layer that fixes both:
    (``direction_thresholds=``). Every choice is bit-identical in result
    state — the recommendation only moves scan cost.
 
+5. **Online policy learning** (``online_adapt=True``, the default) — the
+   scheduler's two learned knobs close their feedback loops on the live
+   stream instead of offline artifacts:
+
+   - the phase-1 budget is served per batch by ``core.policies.
+     BudgetModel``: per-(dataset-family, source-degree-bucket) windows of
+     observed real-morsel convergence depths, pow2-quantized p90 serving
+     with DirectionThresholds-style bucket fallback. The legacy global
+     p90 deque survives only as the empty-model cold path; a pinned
+     ``phase1_iters`` bypasses the learner outright. Budget mispredicts
+     are counted per batch (too_low = survivors that paid a re-dispatch;
+     too_high = morsels that converged strictly under half the budget;
+     inert_slots = budget slack) into ``SchedulerStats`` and
+     ``BudgetModel.mispredicts``.
+   - phase-1 engines run with the ``build_engine(collect_stats=True)``
+     sample tap; the per-iteration (m_frontier, m_unexplored, scan-cost)
+     records accumulate in a bounded store (``online_trace()`` exports
+     them in BENCH_direction_opt schema) and every ``refit_every``
+     batches ``fit_direction_thresholds`` refits the served alpha/beta
+     in-flight, so ``backend="recommend"`` tracks the live stream.
+
+   Both loops move only iteration slots / scan layouts, never results,
+   and both are deterministic in the served batch stream (bit-identical
+   budgets/thresholds/counters across replays and gang_resume on/off).
+
 Supported jax range: 0.4.35 — 0.8.x (see repro.compat / repro.launch.mesh).
 """
 from __future__ import annotations
@@ -87,6 +113,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import (
+    BudgetModel,
     DirectionThresholds,
     POLICIES,
     ExtendSpec,
@@ -96,11 +123,14 @@ from ..core import (
     build_engine,
     build_gang_resume_engine,
     build_resume_engine,
+    count_budget_mispredicts,
+    degree_bucket,
     fit_direction_thresholds,
     gang_handoff,
     gang_scatter_back,
     hybrid_phases,
     pad_sources,
+    pow2ceil as _pow2ceil,
     prepare_graph,
     recommend_backend,
     recommend_k,
@@ -110,17 +140,16 @@ from ..core.dispatcher import _axes_size
 from ..graph.csr import CSRGraph
 
 
-def _pow2ceil(x: int) -> int:
-    return 1 if x <= 1 else 1 << (int(x) - 1).bit_length()
-
-
 @dataclasses.dataclass(frozen=True)
 class EngineKey:
     """Cache identity of one compiled engine. ``kind`` distinguishes the
     static single-phase program, the per-shard-sync phase-1 program, and
     the state-resuming phase-2 program — same policy tuple, different HLO.
     ``extend`` carries the extension backend + direction mode (an
-    ``ExtendSpec``): each backend is a different scan program."""
+    ``ExtendSpec``): each backend is a different scan program. ``stats``
+    marks the sample-tapped flavor (``build_engine(collect_stats=True)``
+    returns ``(result, per-iteration stats)`` — same result state,
+    different HLO)."""
 
     kind: str  # "static" | "phase1" | "resume"
     policy: MorselPolicy
@@ -129,6 +158,7 @@ class EngineKey:
     max_iters: int
     state_layout: str
     extend: ExtendSpec = ExtendSpec()
+    stats: bool = False
 
 
 class EngineCache:
@@ -169,7 +199,13 @@ class QueryOutcome:
     actually ran (one batched gang dispatch vs the per-morsel engine), so
     ``redispatched == resumed_ganged + resumed_serial`` always holds.
     ``gang_width`` is the pow2-padded width of the gang dispatch (0 when no
-    gang ran; the max across chunks for chunked batches)."""
+    gang ran; the max across chunks for chunked batches).
+
+    The ``budget_*`` counters classify this batch's REAL morsels against
+    the phase-1 budget (``core.policies.count_budget_mispredicts``
+    semantics: too_low = survivors that paid a re-dispatch, too_high =
+    morsels that converged strictly under half the budget, inert_slots =
+    budget slack over converged morsels); zero on static runs."""
 
     result: IFEResult
     policy: str  # base policy name ("ntks", "ntkms", ...)
@@ -180,6 +216,10 @@ class QueryOutcome:
     resumed_ganged: int = 0  # survivors resumed in a gang dispatch
     resumed_serial: int = 0  # survivors resumed one-morsel-at-a-time
     gang_width: int = 0  # padded gang width (0 = no gang dispatch)
+    budget_too_low: int = 0  # real morsels the budget undershot
+    budget_too_high: int = 0  # real morsels a smaller pow2 budget covered
+    budget_inert_slots: int = 0  # budget slack over converged real morsels
+    budget_observed: int = 0  # real morsels the counters classified
 
 
 @dataclasses.dataclass
@@ -199,11 +239,26 @@ class SchedulerStats:
     gang_slots: int = 0  # padded gang widths summed over dispatches
     phase1_ms: float = 0.0
     phase2_ms: float = 0.0
+    budget_too_low: int = 0  # phase-1 budget mispredicts (QueryOutcome)
+    budget_too_high: int = 0
+    budget_inert_slots: int = 0
+    budget_observed: int = 0
+    refits: int = 0  # in-flight direction-threshold refits
 
     @property
     def gang_occupancy(self) -> float:
         """Real survivors per padded gang slot (1.0 = pow2-tight gangs)."""
         return self.resumed_ganged / self.gang_slots if self.gang_slots else 0.0
+
+    @property
+    def budget_mispredict_rate(self) -> float:
+        """Mispredicted real morsels per observed real morsel (too_low +
+        too_high over observed; 0.0 before any hybrid batch)."""
+        if not self.budget_observed:
+            return 0.0
+        return (self.budget_too_low + self.budget_too_high) / (
+            self.budget_observed
+        )
 
     def record(self, outcome: "QueryOutcome") -> None:
         self.queries += 1
@@ -214,6 +269,10 @@ class SchedulerStats:
         self.resumed_serial += outcome.resumed_serial
         self.phase1_ms += outcome.phase_ms.get("phase1", 0.0)
         self.phase2_ms += outcome.phase_ms.get("phase2", 0.0)
+        self.budget_too_low += outcome.budget_too_low
+        self.budget_too_high += outcome.budget_too_high
+        self.budget_inert_slots += outcome.budget_inert_slots
+        self.budget_observed += outcome.budget_observed
 
 
 class AdaptiveScheduler:
@@ -232,6 +291,31 @@ class AdaptiveScheduler:
     ``gang_resume=False`` pins phase 2 to the legacy one-morsel-at-a-time
     resume (kept as the differential baseline the parity corpus compares
     the gang against).
+
+    ``online_adapt=True`` (the default) closes the policy feedback loop
+    on the live stream:
+
+    - the phase-1 iteration budget comes from a per-(dataset-family,
+      source-degree-bucket) ``BudgetModel`` updated with every flushed
+      batch's real-morsel convergence depths (the legacy global pow2 p90
+      deque remains the empty-model cold path, and ``phase1_iters``
+      still pins the budget outright, bypassing the learner);
+    - phase-1 engines run with the ``collect_stats`` sample tap, and the
+      accumulated per-iteration (m_frontier, m_unexplored, scan-cost)
+      records are refit into ``direction_thresholds`` every
+      ``refit_every`` batches (``fit_direction_thresholds`` over
+      ``online_trace()``), so ``backend="recommend"`` serves alpha/beta
+      tracking the live stream instead of a stale bench trace — unless
+      a table was supplied explicitly, which pins it (only a manual
+      ``refit_thresholds()`` call overrides a pin).
+
+    Both loops only move iteration slots / scan layouts — results stay
+    bit-identical with the learner on, off, or mid-refit — and both are
+    deterministic functions of the served batch stream (same seeded
+    stream => bit-identical budgets, thresholds, and mispredict
+    counters, with or without ``gang_resume``).
+    ``online_adapt=False`` pins the legacy static behavior (global-p90
+    budget, fixed thresholds) as the differential baseline.
     """
 
     def __init__(
@@ -247,6 +331,10 @@ class AdaptiveScheduler:
         direction_thresholds: DirectionThresholds | str | Path | None = None,
         family: str | None = None,
         gang_resume: bool = True,
+        online_adapt: bool = True,
+        budget_model: BudgetModel | None = None,
+        refit_every: int = 16,
+        sample_window: int = 2048,
     ):
         self.mesh = mesh
         self.csr = csr
@@ -268,14 +356,34 @@ class AdaptiveScheduler:
                 direction_thresholds
             )
         self.direction_thresholds = direction_thresholds
+        # an explicitly supplied table is a pin: the auto-refit cadence
+        # must not silently replace what the caller asked to serve (an
+        # explicit refit_thresholds() call still overrides)
+        self._thresholds_pinned = direction_thresholds is not None
         self.family = family  # dataset family key for threshold lookup
         self.gang_resume = gang_resume
+        self.online_adapt = online_adapt
+        # per-(family, source-degree-bucket) phase-1 budget learner; the
+        # global deque below remains its empty-model cold path
+        self.budget_model = (
+            budget_model
+            if budget_model is not None
+            else (BudgetModel() if online_adapt else None)
+        )
+        self.refit_every = max(1, int(refit_every))
         self.stats = SchedulerStats()
         self.cache = EngineCache()
         self._graphs: dict[tuple, tuple] = {}  # (axes, operands) -> (ops, n_pad)
-        # p90 per-morsel iteration count of recent batches drives the
-        # phase-1 budget: most morsels should converge inside phase 1.
+        # global pow2-p90 fallback budget (cold start / online_adapt off):
+        # p90 per-morsel iteration count of recent batches — the per-bucket
+        # BudgetModel supersedes it as soon as it holds samples.
         self._iter_p90s: collections.deque = collections.deque(maxlen=32)
+        # per-iteration (n_f, m_f, m_u, pull-cost) samples from the phase-1
+        # stats tap, grouped by the n_pad they were measured against (the
+        # beta predicate compares n_f*beta to the PADDED row count)
+        self._dir_samples: dict[int, collections.deque] = {}
+        self._sample_window = int(sample_window)
+        self._batches_since_refit = 0
         self._pending: list[tuple[str, np.ndarray]] = []
         self._next_qid = 0
         self.admissions = {"ntkms": 0, "per_query": 0}
@@ -311,10 +419,14 @@ class AdaptiveScheduler:
         state_layout: str = "replicated",
         extend: ExtendSpec = ExtendSpec(),
         operands=None,
+        collect_stats: bool = False,
     ):
         cap = int(max_iters if max_iters is not None else self.max_iters)
+        if collect_stats and kind not in ("static", "phase1"):
+            raise ValueError(f"no stats tap for engine kind {kind!r}")
         key = EngineKey(
-            kind, policy, edge_compute, n_pad, cap, state_layout, extend
+            kind, policy, edge_compute, n_pad, cap, state_layout, extend,
+            collect_stats,
         )
         if operands is None and (
             extend.needs_binned or extend.needs_rev or extend.needs_blocks
@@ -324,12 +436,13 @@ class AdaptiveScheduler:
             builder = lambda: build_engine(
                 self.mesh, policy, edge_compute, n_pad, cap,
                 state_layout=state_layout, extend=extend, operands=operands,
+                collect_stats=collect_stats,
             )
         elif kind == "phase1":
             builder = lambda: build_engine(
                 self.mesh, policy, edge_compute, n_pad, cap,
                 state_layout=state_layout, sync="shard", extend=extend,
-                operands=operands,
+                operands=operands, collect_stats=collect_stats,
             )
         elif kind == "resume":
             builder = lambda: build_resume_engine(
@@ -347,23 +460,142 @@ class AdaptiveScheduler:
 
     # ------------------------------------------------------------ dispatch
 
-    def _phase1_budget(self) -> int:
+    def _phase1_budget(self, buckets=()) -> int:
         """Iteration cap for phase 1, pow2-quantized so the budget only
-        compiles O(log max_iters) distinct phase-1 engines."""
+        compiles O(log max_iters) distinct phase-1 engines.
+
+        Priority: a pinned ``phase1_iters`` bypasses learning outright;
+        then the per-(family, source-degree-bucket) ``BudgetModel``
+        serves the covering budget for this batch's ``buckets``; an
+        empty model falls back to the global pow2 p90 of recent batches
+        (the legacy path, and ``online_adapt=False``'s only path)."""
         if self.phase1_iters is not None:
             return max(1, min(self.phase1_iters, self.max_iters))
+        if self.budget_model is not None:
+            b = self.budget_model.budget_for(
+                self.family, buckets, self.max_iters
+            )
+            if b is not None:
+                return b
         if self._iter_p90s:
             b = _pow2ceil(int(np.median(self._iter_p90s)) + 1)
         else:
-            b = 8  # cold start: small-world graphs converge in a few hops
+            # cold start: small-world graphs converge in a few hops
+            b = (
+                self.budget_model.cold_budget
+                if self.budget_model is not None
+                else 8
+            )
         return max(4, min(b, self.max_iters))
 
     def _record_iters(self, iters: np.ndarray):
         if iters.size:
             self._iter_p90s.append(float(np.percentile(iters, 90)))
 
+    def _morsel_buckets(self, sources: np.ndarray, lanes: int) -> np.ndarray:
+        """pow2 source-degree bucket per REAL morsel: the budget model's
+        key, from the mean out-degree of each morsel's (real) sources."""
+        if len(sources) == 0:
+            return np.zeros(0, np.int64)
+        deg = self.csr.degrees[
+            np.clip(sources, 0, self.csr.n_nodes - 1)
+        ].astype(np.float64)
+        n_m = -(-len(sources) // lanes)
+        pad = np.full(n_m * lanes - len(sources), np.nan)
+        mean = np.nanmean(
+            np.concatenate([deg, pad]).reshape(n_m, lanes), axis=1
+        )
+        return np.asarray([degree_bucket(float(m)) for m in mean], np.int64)
+
+    # ---------------------------------------------------- online adaptation
+
+    def _record_samples(self, stats: np.ndarray, trips: np.ndarray,
+                        n_pad: int, push_slots: int) -> None:
+        """Drain one batch's phase-1 stats-tap buffer into the sample
+        store: one fit-consumable record per (real morsel, iteration)."""
+        store = self._dir_samples.setdefault(
+            int(n_pad), collections.deque(maxlen=self._sample_window)
+        )
+        for i in range(stats.shape[0]):
+            for j in range(int(trips[i])):
+                n_f, m_f, m_u, pull = (float(v) for v in stats[i, j])
+                store.append({
+                    "it": j,
+                    "frontier": n_f,
+                    "m_frontier": m_f,
+                    "m_unexplored": m_u,
+                    "push_slots": float(push_slots),
+                    "pull_slots_binned": None if pull < 0 else pull,
+                })
+
+    def online_trace(self) -> dict:
+        """The accumulated live samples as a ``BENCH_direction_opt``-shaped
+        trace document: one workload per observed n_pad (this graph's
+        family/avg-degree), records under the canonical ``ell_push``
+        backend key — exactly what ``fit_direction_thresholds`` consumes,
+        so the offline fit of this trace IS the online refit.
+
+        Scope: samples come from the PHASE-1 tap only — iterations a
+        survivor runs past the budget (in the untapped resume/gang
+        engines) are not observed, so deep-straggler tails are
+        under-represented relative to a full offline bench trace (those
+        tail iterations are tiny-frontier and fail the beta test, i.e.
+        overwhelmingly push-side, but a resume-engine tap is the ROADMAP
+        follow-on that would close the gap)."""
+        return {"workloads": [
+            {
+                "graph": f"online_npad{n_pad}",
+                "kind": self.family or "unknown",
+                "n": int(self.csr.n_nodes),
+                "n_pad": int(n_pad),
+                "n_edges": int(self.csr.n_edges),
+                "avg_degree": float(self.csr.avg_degree),
+                "backends": {"ell_push": {"iterations": list(recs)}},
+            }
+            for n_pad, recs in sorted(self._dir_samples.items())
+        ]}
+
+    def refit_thresholds(self) -> DirectionThresholds | None:
+        """Refit ``direction_thresholds`` from the accumulated live
+        samples (no-op before any sample lands). ``backend="recommend"``
+        serves the refitted alpha/beta on the next batch."""
+        if not any(len(r) for r in self._dir_samples.values()):
+            return None
+        self.direction_thresholds = fit_direction_thresholds(
+            self.online_trace()
+        )
+        self.stats.refits += 1
+        return self.direction_thresholds
+
+    def _learn(self, outcome: "QueryOutcome", buckets: np.ndarray,
+               n_real: int) -> None:
+        """Post-batch learning: feed the budget model (real morsels only
+        — the per-bucket form of the pad-morsel guard; skipped entirely
+        when ``phase1_iters`` pins the budget) and the global-p90
+        fallback, then refit thresholds on the ``refit_every`` cadence."""
+        iters = np.asarray(outcome.result.iterations)[:n_real]
+        self._record_iters(iters)
+        if (
+            self.budget_model is not None
+            and self.phase1_iters is None
+            and n_real > 0
+        ):
+            self.budget_model.observe_batch(
+                self.family, buckets[:n_real], iters
+            )
+            if outcome.hybrid:
+                self.budget_model.mispredicts.count(
+                    outcome.budget_too_low, outcome.budget_too_high,
+                    outcome.budget_inert_slots, outcome.budget_observed,
+                )
+        if self.online_adapt and not self._thresholds_pinned:
+            self._batches_since_refit += 1
+            if self._batches_since_refit >= self.refit_every:
+                self._batches_since_refit = 0
+                self.refit_thresholds()
+
     def _run_hybrid(self, pol, ec, g, n_pad, morsels, state_layout,
-                    extend=ExtendSpec()):
+                    extend=ExtendSpec(), n_real=0, buckets=()):
         """Two-phase hybrid on one morsel batch. Returns a QueryOutcome
         whose result state is bit-identical to the static engine's.
 
@@ -372,20 +604,29 @@ class AdaptiveScheduler:
         module docstring's gang contract); exactly 1 survivor => the serial
         per-morsel engine (no packing win to pay for); ``gang_resume=False``
         pins the serial baseline (replicated layout only — the sharded
-        phase 2 IS the gang engine)."""
+        phase 2 IS the gang engine).
+
+        ``n_real``/``buckets``: this batch's real (non-pad) morsel count
+        and their source-degree buckets — the budget model's prediction
+        key and the mispredict counters' population. Under
+        ``online_adapt`` phase 1 runs the stats-tapped engine and its
+        per-iteration samples land in the threshold-refit store."""
         sharded = state_layout == "sharded"
         p1, p2 = hybrid_phases(
             pol.source_axes, pol.graph_axes, lanes=pol.lanes,
             or_impl=pol.or_impl,
         )
-        budget = self._phase1_budget()
+        budget = self._phase1_budget(buckets)
+        collect = bool(self.online_adapt)
         eng1 = self.engine(
             "phase1", p1, ec, n_pad, max_iters=budget,
             state_layout=state_layout, extend=extend, operands=g,
+            collect_stats=collect,
         )
         t0 = time.perf_counter()
-        res1 = jax.block_until_ready(eng1(g, morsels))
+        out1 = jax.block_until_ready(eng1(g, morsels))
         t1 = time.perf_counter()
+        res1, stats1 = out1 if collect else (out1, None)
 
         # survivor test reads ONLY the frontier leaf — and under the
         # sharded layout only a per-morsel any() reduction (the full state
@@ -401,12 +642,28 @@ class AdaptiveScheduler:
             active = frontier1.reshape(m, -1).any(axis=1)
         idx = np.nonzero(active)[0]
         phase_ms = {"phase1": (t1 - t0) * 1e3, "phase2": 0.0}
+        iters1 = np.asarray(res1.iterations)
+        n_real = int(min(n_real, iters1.shape[0]))
+        too_low, too_high, inert = count_budget_mispredicts(
+            budget, iters1[:n_real], active[:n_real],
+            floor=(
+                self.budget_model.floor
+                if self.budget_model is not None
+                else 4
+            ),
+        )
+        if stats1 is not None and n_real > 0:
+            self._record_samples(
+                np.asarray(stats1)[:n_real], iters1[:n_real], n_pad,
+                push_slots=int(np.prod(g.fwd.indices.shape)),
+            )
         if idx.size == 0:
             return QueryOutcome(
                 result=res1, policy=pol.name, hybrid=True, redispatched=0,
                 phase_ms=phase_ms, phase1_budget=budget,
+                budget_too_low=too_low, budget_too_high=too_high,
+                budget_inert_slots=inert, budget_observed=n_real,
             )
-        iters1 = np.asarray(res1.iterations)
         use_gang = self.gang_resume and (idx.size > 1 or sharded)
 
         # pad survivors to a pow2 morsel count: stable resume-trace shapes
@@ -476,10 +733,12 @@ class AdaptiveScheduler:
             resumed_ganged=int(idx.size) if use_gang else 0,
             resumed_serial=0 if use_gang else int(idx.size),
             gang_width=kp if use_gang else 0,
+            budget_too_low=too_low, budget_too_high=too_high,
+            budget_inert_slots=inert, budget_observed=n_real,
         )
 
     def _run_static(self, pol, ec, g, n_pad, morsels, state_layout,
-                    extend=ExtendSpec()):
+                    extend=ExtendSpec(), n_real=0, buckets=()):
         eng = self.engine(
             "static", pol, ec, n_pad, state_layout=state_layout,
             extend=extend, operands=g,
@@ -545,7 +804,7 @@ class AdaptiveScheduler:
             and (state_layout == "replicated" or self.gang_resume)
         )
         run_fn = self._run_hybrid if use_hybrid else self._run_static
-        run = lambda *args: run_fn(*args, extend=spec)
+        run = lambda *args, **kw: run_fn(*args, extend=spec, **kw)
 
         # paper Fig 13: dense graphs cap concurrent source morsels (k);
         # oversized batches run in fixed-size chunks, stitched on host.
@@ -555,16 +814,26 @@ class AdaptiveScheduler:
             else recommend_k(self.csr.avg_degree)
         )
         chunk = max(src_shards, k * src_shards)
-        # budget learning sees only the real morsels: pad/inert ones exit at
-        # 0 iterations and would drag the learned phase-1 budget below every
-        # true convergence depth (permanent re-dispatch)
+        # budget learning and mispredict accounting see only the real
+        # morsels: pad/inert ones exit at 0 iterations and would drag every
+        # bucket's learned budget below its true convergence depth
+        # (permanent re-dispatch)
         n_real = max(1, -(-len(sources) // pol.lanes))
+        # buckets feed only the model's predict/observe; skip the host
+        # work (degrees gather + per-morsel bucketing) when no model will
+        # consume them (online_adapt off, or the budget pinned)
+        buckets = (
+            self._morsel_buckets(sources, pol.lanes)
+            if self.budget_model is not None and self.phase1_iters is None
+            else np.zeros(0, np.int64)
+        )
         if morsels.shape[0] <= chunk:
-            outcome = run(pol, ec, g, n_pad, jnp.asarray(morsels), state_layout)
-            outcome.policy = name
-            self._record_iters(
-                np.asarray(outcome.result.iterations)[:n_real]
+            outcome = run(
+                pol, ec, g, n_pad, jnp.asarray(morsels), state_layout,
+                n_real=n_real, buckets=buckets,
             )
+            outcome.policy = name
+            self._learn(outcome, buckets, n_real)
             self.stats.record(outcome)
             return outcome
 
@@ -576,8 +845,12 @@ class AdaptiveScheduler:
                     (chunk - part.shape[0], part.shape[1]), n_pad, np.int32
                 )
                 part = np.concatenate([part, pad], axis=0)
+            real_in = max(0, min(chunk, n_real - i))
             outcomes.append(
-                run(pol, ec, g, n_pad, jnp.asarray(part), state_layout)
+                run(
+                    pol, ec, g, n_pad, jnp.asarray(part), state_layout,
+                    n_real=real_in, buckets=buckets[i : i + real_in],
+                )
             )
         result = IFEResult(
             state=jax.tree.map(
@@ -588,7 +861,6 @@ class AdaptiveScheduler:
                 [jnp.asarray(o.result.iterations) for o in outcomes]
             ),
         )
-        self._record_iters(np.asarray(result.iterations)[:n_real])
         outcome = QueryOutcome(
             result=result,
             policy=name,
@@ -602,7 +874,12 @@ class AdaptiveScheduler:
             resumed_ganged=sum(o.resumed_ganged for o in outcomes),
             resumed_serial=sum(o.resumed_serial for o in outcomes),
             gang_width=max(o.gang_width for o in outcomes),
+            budget_too_low=sum(o.budget_too_low for o in outcomes),
+            budget_too_high=sum(o.budget_too_high for o in outcomes),
+            budget_inert_slots=sum(o.budget_inert_slots for o in outcomes),
+            budget_observed=sum(o.budget_observed for o in outcomes),
         )
+        self._learn(outcome, buckets, n_real)
         self.stats.record(outcome)
         return outcome
 

@@ -15,11 +15,14 @@ from proptest import given, st_ints, st_seeds
 
 from repro.graph.generators import erdos_renyi, powerlaw
 from repro.core import (
+    BudgetModel,
     DirectionThresholds,
     as_spec,
     build_operands,
+    count_budget_mispredicts,
     degree_bucket,
     fit_direction_thresholds,
+    pow2ceil,
     run_recursive_query,
     policy_1t1s,
     policy_nt1s,
@@ -279,6 +282,106 @@ def test_recommend_backend_deterministic_and_total():
         "sp_lengths", csr.avg_degree, n_nodes=csr.n_nodes,
         operands=ops_push,
     ) == "ell_push"
+
+
+# ---------------------------------------------------------------------------
+# Phase-1 budget model (ISSUE 5): per-(family, source-degree-bucket) windows,
+# pow2-quantized quantile serving, lookup-style fallback, mispredict counters.
+# ---------------------------------------------------------------------------
+
+
+def test_budget_model_empty_predicts_none():
+    """An empty model must predict None for every key — the scheduler's
+    signal to fall back to the legacy global pow2 p90 path."""
+    m = BudgetModel()
+    assert len(m) == 0 and m.n_samples == 0
+    assert m.predict("powerlaw", 3, 64) is None
+    assert m.budget_for("powerlaw", [0, 1, 2], 64) is None
+    assert m.budget_for("powerlaw", [], 64) is None
+    assert m.budgets(64) == {}
+
+
+def test_budget_model_pow2_quantile_serving():
+    m = BudgetModel(floor=4)
+    m.observe("er", 2, [5, 5, 6])
+    # p90 of [5,5,6] = 5.8 -> int 5 -> +1 -> pow2 8
+    assert m.predict("er", 2, 64) == 8
+    m2 = BudgetModel(floor=4)
+    m2.observe("er", 2, [40] * 8)
+    assert m2.predict("er", 2, 64) == 64  # pow2ceil(41)
+    assert m2.predict("er", 2, 32) == 32  # clamped to max_iters
+    m3 = BudgetModel(floor=4)
+    m3.observe("er", 2, [1, 1])
+    assert m3.predict("er", 2, 64) == 4  # clamped to the floor
+    assert pow2ceil(41) == 64 and pow2ceil(8) == 8 and pow2ceil(0) == 1
+
+
+def test_budget_model_window_is_bounded():
+    """Old observations age out: the window forgets a workload shift."""
+    m = BudgetModel(window=8)
+    m.observe("er", 2, [60] * 8)
+    assert m.predict("er", 2, 64) == 64
+    m.observe("er", 2, [3] * 8)  # window full of the new regime
+    assert m.predict("er", 2, 64) == 4
+    assert m.n_samples == 8
+
+
+def test_budget_model_fallback_mirrors_threshold_lookup():
+    """family -> nearest bucket in family -> nearest bucket globally —
+    the DirectionThresholds.lookup chain, applied to budget windows."""
+    m = BudgetModel()
+    m.observe("er", 1, [3, 3, 3])  # -> 4
+    m.observe("er", 4, [30, 30])  # -> 32
+    m.observe("powerlaw", 6, [10, 10])  # -> 16
+    assert m.predict("er", 1, 64) == 4  # exact
+    assert m.predict("er", 2, 64) == 4  # nearest in family: bucket 1
+    assert m.predict("er", 3, 64) == 32  # nearest in family: bucket 4
+    assert m.predict("powerlaw", 0, 64) == 16  # family first, any distance
+    assert m.predict("rmat", 5, 64) == 32  # global nearest: ("er", 4)
+    assert m.predict(None, 5, 64) == 32  # no-family queries also served
+    # covering budget of a mixed batch = max over its buckets
+    assert m.budget_for("er", [1, 4], 64) == 32
+    assert m.budget_for("er", [1], 64) == 4
+
+
+def test_budget_model_empty_observations_are_ignored():
+    """The all-pad guard's model half: zero-length observations (a batch
+    with no real morsels) must not create windows or samples."""
+    m = BudgetModel()
+    m.observe("er", 2, [])
+    m.observe_batch("er", [], [])
+    assert len(m) == 0 and m.predict("er", 2, 64) is None
+
+
+def test_count_budget_mispredicts_semantics():
+    # survivors are too_low; converged morsels with trips*2 < budget are
+    # too_high; inert_slots is the converged slack
+    tl, th, inert = count_budget_mispredicts(
+        8, trips=[8, 8, 5, 3, 2], survived=[True, True, False, False, False]
+    )
+    assert tl == 2
+    assert th == 2  # trips 3 and 2 (2*t < 8); 5 is right-sized
+    assert inert == (8 - 5) + (8 - 3) + (8 - 2)
+    # the right-sized band is [budget/2, budget]: a steady depth-4 stream
+    # served its own quantized budget pow2ceil(4+1)=8 never mispredicts
+    tl, th, _ = count_budget_mispredicts(
+        8, trips=[4, 4], survived=[False, False]
+    )
+    assert tl == 0 and th == 0
+    # a budget at the quantization floor never counts too_high
+    tl, th, inert = count_budget_mispredicts(
+        4, trips=[1, 1], survived=[False, False]
+    )
+    assert tl == 0 and th == 0 and inert == 6
+    # counters accumulate and reset on the model
+    m = BudgetModel()
+    m.mispredicts.count(2, 1, 9, 5)
+    m.mispredicts.count(1, 0, 3, 5)
+    assert (m.mispredicts.too_low, m.mispredicts.too_high) == (3, 1)
+    assert m.mispredicts.inert_slots == 12 and m.mispredicts.observed == 10
+    assert m.mispredicts.rate == 0.4
+    m.mispredicts.reset()
+    assert m.mispredicts.observed == 0 and m.mispredicts.rate == 0.0
 
 
 def test_block_extend_matches_ell():

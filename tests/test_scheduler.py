@@ -334,17 +334,28 @@ _STATIC_CACHE: dict = {}
 
 
 def _sched(kind: str, backend: str, layout: str = "replicated",
-           gang: bool = True) -> AdaptiveScheduler:
+           gang: bool = True, adapt: bool = False) -> AdaptiveScheduler:
     """One AdaptiveScheduler per corpus configuration — compiled engines
     are reused across fuzz cases, so the corpus pays each (graph, backend,
-    engine-kind) compile exactly once."""
-    key = (kind, backend, layout, gang)
+    engine-kind) compile exactly once. ``adapt=True`` is the
+    online-learning configuration: no pinned budget (the per-bucket
+    BudgetModel serves it), stats-tapped phase-1 engines, and in-flight
+    threshold refits every few batches — the corpus proves none of that
+    can move results."""
+    key = (kind, backend, layout, gang, adapt)
     if key not in _SCHED_CACHE:
         csr, _ = skew_graph(kind)
-        _SCHED_CACHE[key] = AdaptiveScheduler(
-            mesh11(), csr, max_iters=64, phase1_iters=2, backend=backend,
-            gang_resume=gang,
-        )
+        if adapt:
+            _SCHED_CACHE[key] = AdaptiveScheduler(
+                mesh11(), csr, max_iters=64, backend=backend,
+                gang_resume=gang, family=kind, online_adapt=True,
+                refit_every=4,
+            )
+        else:
+            _SCHED_CACHE[key] = AdaptiveScheduler(
+                mesh11(), csr, max_iters=64, phase1_iters=2,
+                backend=backend, gang_resume=gang, online_adapt=False,
+            )
     return _SCHED_CACHE[key]
 
 
@@ -387,8 +398,11 @@ def _gang_case_sources(kind: str, head_picks, rng) -> np.ndarray:
 def test_gang_parity_fuzz_corpus(seed, kind, backend, head_ids):
     """Differential engine-parity corpus (replicated layout): for a seeded
     random (graph family x backend x source set) case, the gang-scheduled
-    hybrid, the serial per-morsel hybrid, the static nTkS engine, and the
-    numpy BFS oracle must agree bit-for-bit."""
+    hybrid, the serial per-morsel hybrid, the ONLINE-ADAPTING scheduler
+    (per-bucket budget model + stats-tapped phase 1 + in-flight threshold
+    refits, backend="recommend"), the static nTkS engine, and the numpy
+    BFS oracle must agree bit-for-bit — online learning may only move
+    iteration slots, never results."""
     rng = np.random.default_rng(seed)
     csr, heads = skew_graph(kind)
     srcs = _gang_case_sources(
@@ -396,21 +410,34 @@ def test_gang_parity_fuzz_corpus(seed, kind, backend, head_ids):
     )
     ganged = _sched(kind, backend).query(srcs)
     serial = _sched(kind, backend, gang=False).query(srcs)
+    online = _sched(kind, "recommend", adapt=True).query(srcs)
     assert ganged.redispatched == serial.redispatched
     assert ganged.resumed_serial == 0 or ganged.gang_width == 0
     assert serial.resumed_ganged == 0
 
     a = jax.tree.map(np.asarray, ganged.result.state)
     b = jax.tree.map(np.asarray, serial.result.state)
+    c = jax.tree.map(np.asarray, online.result.state)
     for field in a._fields:
         np.testing.assert_array_equal(
             getattr(a, field), getattr(b, field),
             err_msg=f"gang-vs-serial/{field}",
         )
+        np.testing.assert_array_equal(
+            getattr(a, field), getattr(c, field),
+            err_msg=f"online-adapt-vs-disabled/{field}",
+        )
     np.testing.assert_array_equal(
         np.asarray(ganged.result.iterations),
         np.asarray(serial.result.iterations),
         err_msg="gang-vs-serial/iterations",
+    )
+    # final iterations are each morsel's true convergence depth — the
+    # learned budget moves the phase-1/phase-2 split, not the total
+    np.testing.assert_array_equal(
+        np.asarray(ganged.result.iterations),
+        np.asarray(online.result.iterations),
+        err_msg="online-adapt-vs-disabled/iterations",
     )
 
     lv = a.levels[: len(srcs), : csr.n_nodes]
@@ -434,7 +461,8 @@ def test_gang_parity_fuzz_corpus(seed, kind, backend, head_ids):
 def test_gang_parity_fuzz_corpus_sharded(seed, kind, backend, head_ids):
     """Sharded-state layer of the corpus: the reduce-scatter/all-gather
     gang resume must match the replicated gang hybrid and the sharded
-    static engine bit-for-bit."""
+    static engine bit-for-bit — with online adaptation (stats-tapped
+    sharded phase 1, learned budgets) enabled as well as disabled."""
     rng = np.random.default_rng(seed)
     csr, heads = skew_graph(kind)
     srcs = _gang_case_sources(kind, [heads[i] for i in head_ids], rng)
@@ -443,12 +471,20 @@ def test_gang_parity_fuzz_corpus_sharded(seed, kind, backend, head_ids):
     )
     assert out.hybrid and out.resumed_ganged == out.redispatched > 0
     ref = _sched(kind, backend).query(srcs)
+    onl = _sched(kind, "recommend", layout="sharded", adapt=True).query(
+        srcs, state_layout="sharded"
+    )
     a = jax.tree.map(np.asarray, out.result.state)
     b = jax.tree.map(np.asarray, ref.result.state)
+    c = jax.tree.map(np.asarray, onl.result.state)
     for field in a._fields:
         np.testing.assert_array_equal(
             getattr(a, field), getattr(b, field),
             err_msg=f"sharded-vs-replicated/{field}",
+        )
+        np.testing.assert_array_equal(
+            getattr(a, field), getattr(c, field),
+            err_msg=f"sharded-online-adapt-vs-disabled/{field}",
         )
     lv = a.levels[: len(srcs), : csr.n_nodes]
     np.testing.assert_array_equal(
@@ -648,3 +684,206 @@ def test_gang_engine_direct_bellman_ford():
     iters = np.asarray(res.iterations)
     assert iters[3] == 0  # pad slot never iterated
     assert iters[0] > iters[1]  # path head runs ~path-length iterations
+
+
+# ---------------------------------------------------------------------------
+# Online policy learning (ISSUE 5): deterministic replay, budget-model
+# integration edge cases, and mispredict-counter invariants.
+# ---------------------------------------------------------------------------
+
+
+def _replay_stream(heads):
+    """A fixed seeded batch stream mixing shallow main-component sources
+    with straggler path heads (stable shapes per batch index)."""
+    rng = np.random.default_rng(7)
+    batches = []
+    for b in range(5):
+        fill = rng.integers(0, 160, 4).astype(np.int32)
+        if b % 2 == 0:
+            fill = np.concatenate(
+                [[heads[b % len(heads)]], fill[:3]]
+            ).astype(np.int32)
+        batches.append(fill)
+    return batches
+
+
+@pytest.mark.slow
+def test_online_learning_deterministic_replay():
+    """The same seeded batch stream must yield bit-identical refitted
+    thresholds, learned budgets, accumulated sample traces, and
+    mispredict counters — across independent runs AND across
+    gang_resume on/off (the learner holds no wall-clock/RNG hidden
+    state, and the gang only changes how phase 2 executes, never what
+    any morsel observes)."""
+    csr, heads = skew_graph("powerlaw")
+
+    def run(gang: bool):
+        sched = AdaptiveScheduler(
+            mesh11(), csr, max_iters=64, backend="dopt",
+            family="powerlaw", online_adapt=True, refit_every=2,
+            gang_resume=gang,
+        )
+        budgets = [
+            int(sched.query(b).phase1_budget) for b in _replay_stream(heads)
+        ]
+        sched.refit_thresholds()
+        return sched, budgets
+
+    a, budgets_a = run(gang=True)
+    b, budgets_b = run(gang=True)
+    c, budgets_c = run(gang=False)
+    assert budgets_a == budgets_b == budgets_c
+    ta = dict(a.direction_thresholds.table)
+    assert ta == dict(b.direction_thresholds.table)
+    assert ta == dict(c.direction_thresholds.table)
+    assert ta, "refit produced an empty table"
+    for other in (b, c):
+        assert a.budget_model.budgets(64) == other.budget_model.budgets(64)
+        assert a.online_trace() == other.online_trace()
+        for f in ("budget_too_low", "budget_too_high",
+                  "budget_inert_slots", "budget_observed", "refits"):
+            assert getattr(a.stats, f) == getattr(other.stats, f), f
+        m, mo = a.budget_model.mispredicts, other.budget_model.mispredicts
+        assert (m.too_low, m.too_high, m.inert_slots, m.observed) == (
+            mo.too_low, mo.too_high, mo.inert_slots, mo.observed
+        )
+
+
+def test_phase1_budget_model_priority_and_fallbacks():
+    """Budget source priority: pinned phase1_iters > warmed BudgetModel
+    (covering max over the batch's buckets) > global pow2 p90 deque
+    (the empty-model path) > cold-start default."""
+    csr, _ = skew_graph("powerlaw", paths=())
+    sched = AdaptiveScheduler(mesh11(), csr, max_iters=64, family="er")
+    assert sched._phase1_budget([2]) == 8  # cold start
+    sched._iter_p90s.extend([11.0, 12.0, 13.0])
+    assert sched._phase1_budget([2]) == 16  # empty model -> pow2 p90 path
+    sched.budget_model.observe("er", 2, [30, 30, 30])
+    assert sched._phase1_budget([2]) == 32  # model supersedes the deque
+    sched.budget_model.observe("er", 0, [3, 3])
+    assert sched._phase1_budget([0]) == 4
+    assert sched._phase1_budget([0, 2]) == 32  # covering max over buckets
+    pinned = AdaptiveScheduler(
+        mesh11(), csr, max_iters=64, phase1_iters=2, family="er"
+    )
+    pinned.budget_model.observe("er", 2, [30] * 4)
+    assert pinned._phase1_budget([2]) == 2  # pin bypasses the learner
+
+
+def test_pinned_budget_bypasses_learning_pads_never_update():
+    """phase1_iters pins the budget AND keeps the model untouched; with
+    learning on, the model sees exactly the real morsels of a chunked
+    batch — chunk-pad morsels (0-iteration inert slots) never land in
+    any bucket's window (the per-bucket form of the pad guard)."""
+    csr, _ = skew_graph("powerlaw", paths=())
+    srcs = np.asarray([3, 9, 17], np.int32)
+    pinned = AdaptiveScheduler(
+        mesh11(), csr, max_iters=64, phase1_iters=2, max_inflight=2
+    )
+    out = pinned.query(srcs)
+    assert out.phase1_budget == 2
+    assert pinned.budget_model.n_samples == 0  # learner bypassed
+    assert pinned.budget_model.mispredicts.observed == 0
+    assert out.budget_observed == 3  # counters still see the real morsels
+
+    learning = AdaptiveScheduler(
+        mesh11(), csr, max_iters=64, max_inflight=2
+    )
+    out2 = learning.query(srcs)  # chunks of 2: last chunk is 1 real + 1 pad
+    assert learning.budget_model.n_samples == 3  # pads excluded
+    assert out2.budget_observed == 3
+    trips = np.asarray(out2.result.iterations)[:3]
+    for (fam, bucket), win in learning.budget_model._windows.items():
+        assert fam is None
+        assert all(t in trips for t in win)
+        assert 0 not in win  # no 0-iteration pad morsels
+
+
+def test_budget_too_low_counts_every_real_morsel():
+    """A budget forced to 1 sits below every real morsel's convergence
+    depth: each one survives phase 1 and counts as a too_low mispredict
+    (and nothing counts too_high / inert)."""
+    csr, heads = skew_graph("powerlaw")
+    srcs = np.asarray([heads[0], heads[1], 3, 9], np.int32)
+    for s in srcs:  # premise: every source needs >= 2 IFE iterations
+        assert bfs_levels(csr, [int(s)]).max() >= 2
+    sched = AdaptiveScheduler(mesh11(), csr, max_iters=64, phase1_iters=1)
+    out = sched.query(srcs)
+    assert out.phase1_budget == 1
+    assert out.budget_too_low == len(srcs) == out.budget_observed
+    assert out.budget_too_high == 0 and out.budget_inert_slots == 0
+    assert out.redispatched == len(srcs)
+    assert sched.stats.budget_too_low == len(srcs)
+    assert sched.stats.budget_mispredict_rate == 1.0
+
+
+def test_budget_too_high_counts_inert_spin_slots():
+    """A budget forced past every morsel's oracle trip count converges
+    everything in phase 1 and books the slack as inert-spin slots; the
+    morsels a strictly smaller pow2 budget would have covered count
+    too_high. Counters accumulate across batches in SchedulerStats."""
+    csr, _ = skew_graph("powerlaw", paths=())
+    sched = AdaptiveScheduler(mesh11(), csr, max_iters=64, phase1_iters=64)
+    srcs = np.asarray([3, 9, 17], np.int32)
+    out = sched.query(srcs)
+    trips = np.asarray(out.result.iterations)[: len(srcs)]
+    assert (trips * 2 < 64).all()  # shallow component: far under budget
+    assert out.redispatched == 0 and out.budget_too_low == 0
+    assert out.budget_too_high == len(srcs)
+    assert out.budget_inert_slots == int((64 - trips).sum())
+    sched.query(srcs)  # accumulate
+    assert sched.stats.budget_too_high == 2 * len(srcs)
+    assert sched.stats.budget_inert_slots == 2 * int((64 - trips).sum())
+    assert sched.stats.budget_observed == 2 * len(srcs)
+    assert sched.stats.budget_mispredict_rate == 1.0
+    fresh = AdaptiveScheduler(mesh11(), csr, max_iters=64)
+    assert fresh.stats.budget_observed == 0  # fresh stats start clean
+    assert fresh.stats.budget_mispredict_rate == 0.0
+
+
+def test_online_refit_matches_offline_fit_and_serves():
+    """The in-flight refit must equal fit_direction_thresholds run on the
+    scheduler's own accumulated trace (same decision boundaries), and the
+    refitted table must be served through backend="recommend" without
+    moving results."""
+    from repro.core import fit_direction_thresholds
+
+    csr, heads = skew_graph("powerlaw")
+    sched = AdaptiveScheduler(
+        mesh11(), csr, max_iters=64, family="powerlaw",
+        online_adapt=True, refit_every=2,
+    )
+    srcs = np.asarray([heads[0], 3, 9, 20], np.int32)
+    before = np.asarray(sched.query(srcs).result.state.levels)
+    sched.query(np.asarray([5, 11, 40], np.int32))  # triggers the refit
+    assert sched.stats.refits >= 1
+    fitted = sched.direction_thresholds
+    assert fitted is not None and fitted.table
+    offline = fit_direction_thresholds(sched.online_trace())
+    assert dict(fitted.table) == dict(offline.table)
+    # next batch serves the fitted alpha/beta (recommend path) — results
+    # must stay bit-identical to the pre-refit run
+    after = np.asarray(sched.query(srcs).result.state.levels)
+    np.testing.assert_array_equal(before, after)
+
+
+def test_explicit_thresholds_are_pinned_against_refit():
+    """A caller-supplied threshold table must survive the auto-refit
+    cadence untouched (serve --thresholds would otherwise be silently
+    replaced by the live fit); a manual refit_thresholds() call still
+    overrides the pin."""
+    from repro.core import DirectionThresholds
+
+    csr, _ = skew_graph("powerlaw", paths=())
+    pinned_table = DirectionThresholds(table={("powerlaw", 2): (3.0, 5.0)})
+    sched = AdaptiveScheduler(
+        mesh11(), csr, max_iters=64, family="powerlaw",
+        direction_thresholds=pinned_table, online_adapt=True, refit_every=1,
+    )
+    for _ in range(3):  # cadence would refit every batch if unpinned
+        sched.query(np.asarray([3, 9], np.int32))
+    assert sched.direction_thresholds is pinned_table
+    assert sched.stats.refits == 0
+    sched.refit_thresholds()  # manual override still works
+    assert sched.direction_thresholds is not pinned_table
+    assert sched.stats.refits == 1
