@@ -1,0 +1,524 @@
+"""Always-on serving under sustained open-loop arrivals — the overlapped
+async loop vs the synchronous-flush baseline, with tenant SLO accounting.
+
+The serving claim of ISSUE 6: when arrivals are OPEN-LOOP (they keep
+coming whether or not the server keeps up), the pre-split serving story
+— a driver that collects a fixed-size round of requests and pushes it
+through a synchronous ``flush()``, so admission happens ONLY at flush
+time — makes every query gate on its round: the round's early members
+wait for its LAST arrival before anything is even admitted, and the
+round cannot start until the previous flush fully completes. The
+always-on ``runtime.service.ServingLoop`` removes both waits: a query
+is admitted the moment it arrives, joins the next capped batch's lane
+packing as soon as the device frees, and batch i's deferred host work
+(result-state transfer, survivor stitch, per-query unpacking) is hidden
+behind batch i+1's device dispatch (begin(i+1) → finalize(i) →
+settle(i+1)).
+
+Measured here, on the same seeded Poisson arrival schedules for both
+sides — the SAME admission/packing/dispatch/learning code serving each
+stream, only the serving architecture differs:
+
+- **async**: ``ServingLoop.run_stream`` (admit-on-arrival, capped
+  batches, ``overlap=True`` pipelined finalize);
+- **sync-flush baseline**: the same loop with ``overlap=False`` driven
+  in legacy rounds (``run_flush_rounds``): wait for the next
+  ``flush_group`` queries to all arrive, submit them, flush to
+  completion, repeat — the pool size per flush matches the async cap,
+  so both sides dispatch identical-size packs.
+
+- **sustained phase** (arrival rate at ~half the warm service rate —
+  see the tuning note in ``main`` — two tenants, batches capped at
+  ``max_batch_sources``), repeated N times with fresh seeded schedules
+  and the two sides INTERLEAVED (async_r then sync_r on the same warmed
+  loops, so ambient machine noise hits both sides of every repeat). Latency is CLIENT-OBSERVED — scheduled arrival to delivered
+  result, measured by the driver via ``on_result`` — because the flush
+  baseline's defining cost is the wait OUTSIDE the server before a
+  mid-round arrival is even admitted; server-side submit-to-delivery
+  stats would not see it. Every compiled shape is pre-warmed and the
+  measured repeats are asserted cold-free, so warm == all here. The
+  reported p99 — and the floor — is the MEDIAN across repeats of each
+  repeat's p99: one backlogged repeat's p99 is a single noisy sample,
+  and a median over interleaved repeats makes the floor a property of
+  the serving architecture rather than of one pool boundary's timing
+  luck;
+- **low-load SLO phase** (arrival rate below service rate, generous
+  per-query deadline): deadline-miss and shed counts — both must be zero;
+- **bit-identity**: every query's levels rows equal between the two modes
+  (admission slicing may batch the stream differently at different wall
+  speeds; results must not care).
+
+Floors (asserted here and by ``scripts/ci.sh --bench-smoke``): overlap
+occupancy > 0, async warm p99 <= synchronous-flush warm p99, results
+bit-identical, zero deadline misses at low load.
+
+Writes machine-readable ``BENCH_serving_slo.json`` (schema validated
+in-process and re-validated by the CI lane).
+
+    PYTHONPATH=src python benchmarks/serving_slo.py [--smoke] \
+        [--out BENCH_serving_slo.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).parent))
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+SCHEMA = 1
+
+REQUIRED = {
+    "schema": int,
+    "smoke": bool,
+    "workload": dict,
+    "stream": dict,
+    "async": dict,
+    "sync": dict,
+    "slo": dict,
+    "summary": dict,
+}
+MODE_FIELDS = (
+    "p50_ms", "p99_ms", "p99_ms_runs", "all_p50_ms", "all_p99_ms",
+    "batches", "cold_batches", "overlap_occupancy", "overlapped_finalizes",
+    "finalizes", "completed", "shed", "deadline_misses", "sustained_wall_s",
+)
+
+
+def validate(doc: dict) -> None:
+    """Schema + acceptance guards for BENCH_serving_slo.json: both mode
+    blocks complete, the async loop actually overlapped (occupancy > 0),
+    its sustained warm p99 (median across interleaved repeats) at or
+    under the synchronous-flush baseline's, results bit-identical, and
+    zero deadline misses/sheds at low load."""
+    for key, ty in REQUIRED.items():
+        assert key in doc, f"missing top-level field: {key}"
+        assert isinstance(doc[key], ty), (key, type(doc[key]))
+    assert doc["schema"] == SCHEMA, doc["schema"]
+    for side in ("async", "sync"):
+        for f in MODE_FIELDS:
+            assert f in doc[side], f"missing {side} field: {f}"
+        assert doc[side]["completed"] > 0, (side, doc[side])
+        runs = doc[side]["p99_ms_runs"]
+        assert isinstance(runs, list) and len(runs) >= 1, (side, runs)
+    assert doc["async"]["overlap_occupancy"] > 0.0, (
+        "async loop never overlapped a finalize", doc["async"]
+    )
+    assert doc["sync"]["overlap_occupancy"] == 0.0, doc["sync"]
+    slo = doc["slo"]
+    for f in ("deadline_ms", "async_deadline_misses", "async_shed",
+              "sync_deadline_misses"):
+        assert f in slo, f"missing slo field: {f}"
+    s = doc["summary"]
+    for f in ("async_p99_ms", "sync_p99_ms", "p99_speedup",
+              "passes_p99_floor", "passes_occupancy_floor",
+              "results_bit_identical", "zero_misses_at_low_load"):
+        assert f in s, f"missing summary field: {f}"
+    assert s["results_bit_identical"] is True, s
+    assert s["passes_occupancy_floor"] is True, s
+    assert s["zero_misses_at_low_load"] is True, (
+        "deadline misses/sheds at LOW load", slo
+    )
+    assert s["passes_p99_floor"] is True, (
+        "async overlapped p99 (median across interleaved sustained "
+        "repeats) must not exceed the synchronous-flush baseline: "
+        f"{s['async_p99_ms']:.1f} vs {s['sync_p99_ms']:.1f} ms "
+        f"(runs: {doc['async']['p99_ms_runs']} vs "
+        f"{doc['sync']['p99_ms_runs']})"
+    )
+    assert s["async_p99_ms"] <= s["sync_p99_ms"], s
+
+
+def serving_graph(n_pl: int, n_paths: int, path_len: int, seed: int = 0):
+    """Erdos-Renyi main component + path straggler components. ER keeps
+    the max degree near the mean, so the padded ELL rows stay narrow and
+    per-batch device time is interactive (a powerlaw hub would widen
+    every row to the hub degree); the deep paths still hand phase 2 real
+    stragglers to gang-resume."""
+    from repro.graph.csr import csr_from_edges
+    from repro.graph.generators import erdos_renyi
+
+    pl = erdos_renyi(n_pl, 6.0, seed=seed)
+    src_pl, dst_pl = pl.edge_list()
+    srcs, dsts, base, heads = [src_pl], [dst_pl], n_pl, []
+    for _ in range(n_paths):
+        p = np.arange(path_len - 1, dtype=np.int64) + base
+        srcs += [p, p + 1]
+        dsts += [p + 1, p]
+        heads.append(base)
+        base += path_len
+    csr = csr_from_edges(base, np.concatenate(srcs), np.concatenate(dsts))
+    return csr, np.asarray(heads, np.int32)
+
+
+def arrival_schedule(csr, heads, n_rand: int, n_arrivals: int,
+                     rate_qps: float, k_sources: int, tenants: int,
+                     tenant_prefix: str, deadline_ms: float | None,
+                     seed: int):
+    """Seeded Poisson schedule (identical for both modes): exponential
+    gaps at ``rate_qps``, round-robin tenants, sources drawn per arrival
+    with one straggler head mixed into every fourth query. Random
+    sources come from the ER main component only (``[0, n_rand)``) so
+    phase-2 survivors are exactly the scheduled straggler heads — the
+    gang shapes the stream can hit stay inside the pre-warmed set."""
+    rng = np.random.default_rng(seed)
+    gaps_ms = rng.exponential(1e3 / rate_qps, size=n_arrivals)
+    t_ms = np.cumsum(gaps_ms)
+    arrivals = []
+    for i in range(n_arrivals):
+        srcs = rng.integers(0, n_rand, k_sources).astype(np.int32)
+        if i % 4 == 0 and len(heads):
+            srcs = np.concatenate(
+                [[heads[i % len(heads)]], srcs[:-1]]
+            ).astype(np.int32)
+        arrivals.append({
+            "t_ms": float(t_ms[i]),
+            "sources": srcs,
+            "tenant": f"{tenant_prefix}{i % tenants}",
+            "deadline_ms": deadline_ms,
+            "qid": f"{tenant_prefix}_{i}",
+        })
+    return arrivals
+
+
+def warm_shapes(loop, csr, heads, n_rand, k_sources, warm_morsels,
+                seed=3):
+    """Pre-compile the engine/shape set the stream can hit. The serving
+    dispatcher pow2-pads morsel counts, so pools of 64*m sources for each
+    pow2 m cover every packed shape a backlogged queue can produce; one
+    solo query warms the per-query path the low-load phase takes.
+    Straggler heads are mixed in (same every-4th cadence as the stream)
+    so phase-2 gang shapes compile too."""
+    rng = np.random.default_rng(seed)
+
+    def srcs(j):
+        s = rng.integers(0, n_rand, k_sources).astype(np.int32)
+        if j % 4 == 0 and len(heads):
+            s = np.concatenate([[heads[j % len(heads)]], s[:-1]])
+        return s.astype(np.int32)
+
+    for m in warm_morsels:
+        for j in range((64 * m) // k_sources):
+            loop.submit(srcs(j), tenant="warm", qid=f"warm_{m}_{j}")
+        loop.drain()  # one pooled pump: exactly m morsels
+    # the per-query path, both flavors: all-shallow (phase 1 converges
+    # everything) and with a straggler (compiles the solo gang engine)
+    loop.submit(srcs(1), tenant="warm", qid="warm_solo")
+    loop.drain()
+    loop.submit(srcs(0), tenant="warm", qid="warm_solo_straggler")
+    loop.drain()
+
+
+def make_warm_loop(overlap: bool, csr, mesh, heads, n_rand, k_sources,
+                   warm_morsels, max_batch_sources):
+    """Build one serving loop and warm it (all compiles happen here).
+    The phase-1 budget is pinned and online refits are off so both modes
+    serve an identical, stable engine set: the measured delta is the
+    serving architecture, not compile luck. ``max_batch_sources`` bounds
+    each batch (both sides get it — the flush baseline's rounds are the
+    same capped batches, just drained to empty before re-admission)."""
+    from repro.runtime.service import ServingLoop
+
+    loop = ServingLoop(
+        mesh, csr, overlap=overlap, family="er", max_iters=64,
+        backend="dopt", phase1_iters=16, online_adapt=False,
+        max_batch_sources=max_batch_sources,
+    )
+    warm_shapes(loop, csr, heads, n_rand, k_sources, warm_morsels)
+    return loop
+
+
+def run_flush_rounds(loop, arrivals, group: int):
+    """The legacy synchronous-flush serving pattern — the pre-split
+    ``serve.py`` driver shape (fixed-size request rounds through
+    ``AdaptiveScheduler.flush()``), replayed against a live stream:
+    wait until the next ``group`` queries have ALL arrived, submit
+    them, and flush the round to completion before looking at the
+    stream again. Admission happens only at flush time: early members
+    of a round gate on its last arrival and on the whole previous
+    flush, which is exactly the dead time an always-on loop exists to
+    remove. ``group`` is set to the same per-batch query budget the
+    async loop's ``max_batch_sources`` cap yields, so both sides flush
+    identically-sized pools — the serving architecture is the only
+    difference. Same loop, same engines, same results."""
+    order = sorted(arrivals, key=lambda a: a["t_ms"])
+    t0 = loop.clock()
+    for g0 in range(0, len(order), group):
+        rnd = order[g0:g0 + group]
+        while True:  # a synchronous driver cannot admit mid-flush
+            now_ms = (loop.clock() - t0) * 1e3
+            if rnd[-1]["t_ms"] <= now_ms:
+                break
+            time.sleep(min(0.005, (rnd[-1]["t_ms"] - now_ms) / 1e3))
+        for a in rnd:
+            loop.submit(
+                a["sources"], tenant=a.get("tenant", "default"),
+                deadline_ms=a.get("deadline_ms"), qid=a.get("qid"),
+            )
+        loop.drain()  # synchronous flush round
+    return loop.results
+
+
+def tenant_pctl(loop, prefix: str, p: float, warm: bool = True) -> float:
+    vals = []
+    for name, ts in loop.stats.tenants.items():
+        if name.startswith(prefix):
+            vals.extend(ts.warm_latencies_ms if warm else ts.latencies_ms)
+    return float(np.percentile(np.asarray(vals), p)) if vals else float("nan")
+
+
+def tenant_counts(loop, prefix: str):
+    shed = misses = completed = 0
+    for name, ts in loop.stats.tenants.items():
+        if name.startswith(prefix):
+            shed += ts.shed
+            misses += ts.deadline_misses
+            completed += ts.completed
+    return completed, shed, misses
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small graph / short stream (CI bench-smoke lane)")
+    ap.add_argument("--out", default=str(
+        Path(__file__).resolve().parent.parent / "BENCH_serving_slo.json"
+    ))
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from repro.launch.mesh import make_mesh
+
+    # the stream sits at ~half the warm service rate (a capped 2-morsel
+    # batch serves 8 pooled queries in ~200-400 ms on the smoke graph).
+    # That regime is chosen deliberately: with headroom, the always-on
+    # loop serves each arrival as soon as the device frees (its tail is
+    # ~one batch), while the flush driver still gates every round on the
+    # round's LAST arrival — a wait of up to group/rate set by the
+    # SCHEDULE, not by machine speed, which is what makes the p99 floor
+    # reproducible. (A heavily backlogged stream would hide the
+    # difference: both servers become work-conserving FIFO drains of the
+    # same capped batches and their tails converge.)
+    if args.smoke:
+        n_pl, n_paths, path_len = 1536, 2, 24
+        n_sustained, k_sources = 64, 16
+        n_slo, rate_slo = 8, 12.0
+        warm_morsels = (1, 2)
+        rate_sustained = 16.0
+        n_repeats = 5
+    else:
+        # the full graph serves ~6 q/s under load, so 3 q/s keeps the
+        # same ~0.5 utilisation the smoke config has
+        n_pl, n_paths, path_len = 6144, 3, 32
+        n_sustained, k_sources = 48, 16
+        n_slo, rate_slo = 12, 6.0
+        warm_morsels = (1, 2)
+        rate_sustained = 3.0
+        n_repeats = 5
+    max_batch_sources = 8 * k_sources  # 8 queries / 2 morsels per batch
+    flush_group = max_batch_sources // k_sources
+    deadline_ms = 5000.0
+    csr, heads = serving_graph(n_pl, n_paths, path_len)
+    mesh = make_mesh((1, jax.device_count()), ("data", "model"))
+    print(
+        f"serving workload: {csr.n_nodes} nodes, {csr.n_edges} edges, "
+        f"avg degree {csr.avg_degree:.1f}; sustained {n_sustained} "
+        f"arrivals at {rate_sustained:.0f} q/s x {k_sources} sources "
+        f"x {n_repeats} interleaved repeats (batches capped at "
+        f"{max_batch_sources} pooled sources), SLO phase {n_slo} "
+        f"arrivals at {rate_slo:.0f} q/s, deadline {deadline_ms:.0f} ms"
+    )
+
+    # fresh seeded schedule per repeat; tenant prefix r{r}t keeps the
+    # qid spaces disjoint and lets each repeat's warm p99 be read back
+    # out of the shared per-tenant stats
+    repeats = [
+        arrival_schedule(
+            csr, heads, n_pl, n_sustained, rate_sustained, k_sources, 2,
+            f"r{r}t", None, seed=4 + r,
+        )
+        for r in range(n_repeats)
+    ]
+    slo = arrival_schedule(
+        csr, heads, n_pl, n_slo, rate_slo, k_sources, 2, "slo",
+        deadline_ms, seed=4 + n_repeats,
+    )
+
+    async_loop = make_warm_loop(
+        True, csr, mesh, heads, n_pl, k_sources, warm_morsels,
+        max_batch_sources,
+    )
+    sync_loop = make_warm_loop(
+        False, csr, mesh, heads, n_pl, k_sources, warm_morsels,
+        max_batch_sources,
+    )
+
+    # interleave the modes repeat-by-repeat so ambient machine noise
+    # lands on both sides of every pair, then take the median across
+    # repeats: one backlogged repeat's p99 is a single noisy sample
+    # (its last pool's completion time)
+    p99_runs = {True: [], False: []}
+    lat_all = {True: [], False: []}
+    walls = {True: 0.0, False: 0.0}
+    colds = {True: 0, False: 0}
+    for r, sched in enumerate(repeats):
+        for overlap, loop, drive in (
+            (True, async_loop, lambda lp, s: lp.run_stream(s)),
+            (False, sync_loop,
+             lambda lp, s: run_flush_rounds(lp, s, flush_group)),
+        ):
+            # client-observed latency: scheduled arrival -> delivery,
+            # clocked by the driver — the flush baseline's gated wait
+            # before admission must count, and the server's submit-based
+            # stats cannot see it
+            done_at = {}
+            loop.on_result = lambda qid, _lv, _d=done_at: _d.__setitem__(
+                qid, time.perf_counter()
+            )
+            cold0 = loop.stats.cold_batches
+            t0 = time.perf_counter()
+            drive(loop, sched)
+            walls[overlap] += time.perf_counter() - t0
+            loop.on_result = None
+            colds[overlap] += loop.stats.cold_batches - cold0
+            lats = np.array([
+                (done_at[a["qid"]] - t0) * 1e3 - a["t_ms"] for a in sched
+            ])
+            lat_all[overlap].append(lats)
+            p99_runs[overlap].append(float(np.percentile(lats, 99)))
+        print(
+            f"repeat {r}: client p99 async {p99_runs[True][-1]:.1f} ms "
+            f"vs sync-flush {p99_runs[False][-1]:.1f} ms"
+        )
+    assert colds[True] == 0 and colds[False] == 0, (
+        "sustained repeats hit an unwarmed engine shape", colds
+    )
+    async_loop.run_stream(slo)
+    run_flush_rounds(sync_loop, slo, flush_group)
+    async_wall, sync_wall = walls[True], walls[False]
+
+    def mode_doc(loop, wall, runs, lats):
+        st = loop.stats
+        completed, shed, misses = tenant_counts(loop, "r")
+        pooled = np.concatenate(lats)
+        return {
+            "p50_ms": float(np.percentile(pooled, 50)),
+            "p99_ms": float(np.median(runs)),
+            "p99_ms_runs": [float(x) for x in runs],
+            "all_p50_ms": float(np.percentile(pooled, 50)),
+            "all_p99_ms": float(np.percentile(pooled, 99)),
+            "batches": int(st.batches),
+            "cold_batches": int(st.cold_batches),
+            "cold_ms": float(st.cold_ms),
+            "overlap_occupancy": float(st.overlap_occupancy),
+            "overlapped_finalizes": int(st.overlapped_finalizes),
+            "finalizes": int(st.finalizes),
+            "completed": int(completed),
+            "shed": int(shed),
+            "deadline_misses": int(misses),
+            "sustained_wall_s": float(wall),
+            "gangs": int(loop.dispatcher.stats.gangs),
+            "hybrid_runs": int(loop.dispatcher.stats.hybrid_runs),
+        }
+
+    # bit-identity across modes: the wall-clock admission slicing may
+    # batch the stream differently, the answers must not move
+    shared = set(async_loop.results) & set(sync_loop.results)
+    assert set(async_loop.results) == set(sync_loop.results), (
+        sorted(set(async_loop.results) ^ set(sync_loop.results))
+    )
+    bit_identical = all(
+        np.array_equal(async_loop.results[q], sync_loop.results[q])
+        for q in shared
+    )
+    assert bit_identical, "async-vs-sync result divergence"
+
+    a_doc = mode_doc(async_loop, async_wall, p99_runs[True], lat_all[True])
+    s_doc = mode_doc(sync_loop, sync_wall, p99_runs[False], lat_all[False])
+    _, a_slo_shed, a_slo_miss = tenant_counts(async_loop, "slo")
+    _, s_slo_shed, s_slo_miss = tenant_counts(sync_loop, "slo")
+    zero_misses = (
+        a_slo_miss == 0 and a_slo_shed == 0 and s_slo_miss == 0
+    )
+    p99_async, p99_sync = a_doc["p99_ms"], s_doc["p99_ms"]
+
+    print(
+        f"sustained client p50/median-p99: async {a_doc['p50_ms']:.1f}/"
+        f"{p99_async:.1f} ms (occupancy {a_doc['overlap_occupancy']:.2f}, "
+        f"{a_doc['batches']} batches, wall {async_wall:.2f} s) vs "
+        f"sync-flush {s_doc['p50_ms']:.1f}/{p99_sync:.1f} ms "
+        f"(wall {sync_wall:.2f} s)"
+    )
+    print(
+        f"low-load SLO phase: async {a_slo_miss} misses / {a_slo_shed} "
+        f"shed, sync {s_slo_miss} misses; results bit-identical: "
+        f"{bit_identical}"
+    )
+
+    doc = {
+        "schema": SCHEMA,
+        "smoke": bool(args.smoke),
+        "workload": {
+            "n_nodes": int(csr.n_nodes),
+            "n_edges": int(csr.n_edges),
+            "avg_degree": float(csr.avg_degree),
+            "n_path_heads": int(n_paths),
+            "path_depth": int(path_len - 1),
+        },
+        "stream": {
+            "n_sustained": n_sustained,
+            "n_repeats": n_repeats,
+            "max_batch_sources": max_batch_sources,
+            "flush_group_queries": flush_group,
+            "rate_sustained_qps": rate_sustained,
+            "n_slo": n_slo,
+            "rate_slo_qps": rate_slo,
+            "sources_per_query": k_sources,
+            "deadline_ms": deadline_ms,
+            "tenants": 2,
+        },
+        "async": a_doc,
+        "sync": s_doc,
+        "slo": {
+            "deadline_ms": deadline_ms,
+            "async_deadline_misses": int(a_slo_miss),
+            "async_shed": int(a_slo_shed),
+            "sync_deadline_misses": int(s_slo_miss),
+            "sync_shed": int(s_slo_shed),
+        },
+        "summary": {
+            "async_p99_ms": p99_async,
+            "sync_p99_ms": p99_sync,
+            "p99_speedup": (
+                float(p99_sync / p99_async) if p99_async > 0 else 1.0
+            ),
+            "sustained_wall_async_s": float(async_wall),
+            "sustained_wall_sync_s": float(sync_wall),
+            "passes_p99_floor": bool(p99_async <= p99_sync),
+            "passes_occupancy_floor": bool(
+                a_doc["overlap_occupancy"] > 0.0
+            ),
+            "results_bit_identical": bool(bit_identical),
+            "zero_misses_at_low_load": bool(zero_misses),
+        },
+    }
+    validate(doc)
+    Path(args.out).write_text(json.dumps(doc, indent=1, sort_keys=True))
+    print(
+        f"summary: median client p99 {p99_async:.1f} ms async vs "
+        f"{p99_sync:.1f} ms sync-flush across {n_repeats} repeats "
+        f"(speedup {doc['summary']['p99_speedup']:.2f}x, "
+        f"passes_p99_floor={doc['summary']['passes_p99_floor']})"
+    )
+    print(f"wrote {args.out} (schema v{SCHEMA} validated)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -26,7 +26,13 @@
 #                               # learner strictly below the static global-p90
 #                               # baseline, and in-flight threshold refits
 #                               # bit-equal to the offline fit of the same
-#                               # accumulated trace)
+#                               # accumulated trace); finally run the serving
+#                               # SLO benchmark in --smoke mode and validate
+#                               # BENCH_serving_slo.json (schema + the serving
+#                               # floors: overlap occupancy > 0, async warm
+#                               # p99 <= synchronous-flush p99 on the same
+#                               # open-loop stream, results bit-identical,
+#                               # zero deadline misses at low load)
 #
 # CI_BUDGET_SECONDS caps any lane via timeout (default 1800); a hung XLA
 # compile or subprocess fails the lane instead of wedging the pipeline.
@@ -97,6 +103,25 @@ print(f"bench-smoke OK: {sys.argv[1]} schema valid, mispredict rate "
       f"{s['mispredict_rate_baseline']:.3f} static global-p90, "
       f"threshold refit parity {s['passes_threshold_parity']}, "
       f"results bit-identical {s['results_bit_identical']}")
+EOF
+  SOUT="${BENCH_SERVING_OUT:-/tmp/BENCH_serving_slo.smoke.json}"
+  # the benchmark validates before writing; re-validate the artifact here
+  # so a stale/hand-edited file also fails the lane
+  timeout --signal=INT "$BUDGET" \
+    python benchmarks/serving_slo.py --smoke --out "$SOUT"
+  python - "$SOUT" <<'EOF'
+import json, sys
+sys.path.insert(0, "benchmarks")
+from serving_slo import validate
+doc = json.loads(open(sys.argv[1]).read())
+validate(doc)  # schema + occupancy/p99/bit-identity/zero-miss floors
+s = doc["summary"]
+print(f"bench-smoke OK: {sys.argv[1]} schema valid, sustained warm p99 "
+      f"{s['async_p99_ms']:.1f} ms async vs {s['sync_p99_ms']:.1f} ms "
+      f"sync-flush ({s['p99_speedup']:.2f}x), occupancy "
+      f"{doc['async']['overlap_occupancy']:.2f}, bit-identical "
+      f"{s['results_bit_identical']}, zero low-load misses "
+      f"{s['zero_misses_at_low_load']}")
 EOF
 else
   FAST_BUDGET="${FAST_LANE_BUDGET_SECONDS:-900}"

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..graph.csr import BlockAdjacency
 
@@ -110,3 +111,79 @@ def scans_saved_factor(adj: BlockAdjacency, lanes: int = 64) -> float:
     once per lane; lane packing reads it once per 64. Reported in fig14
     benchmark alongside measured bytes."""
     return float(lanes)
+
+
+class LanePacker:
+    """Incremental MS-BFS lane packing for the admission layer
+    (repack-on-arrival).
+
+    Queries arrive one at a time (``add``) and may leave before dispatch
+    (``evict`` — the admission layer pulls a query out of the shared pack
+    when the pack's predicted depth would blow that query's deadline, or
+    sheds it outright). ``pack()`` lays the surviving queries' sources
+    end-to-end in ARRIVAL ORDER into the flat source vector that
+    ``pad_sources`` folds into 64-wide lane morsels, and returns each
+    query's half-open span into the lane-major result rows.
+
+    Arrival-order concatenation is a correctness lever, not a convenience:
+    it is exactly the order the synchronous ``flush`` pools sources in, so
+    a packed batch built here is bit-identical — result rows included — to
+    the legacy pooled batch, and eviction (a pure deletion) never reorders
+    the remaining queries. Lane assignment is an artifact of position; the
+    per-query rows come back out by span regardless of which lane column
+    each source landed in."""
+
+    def __init__(self, lanes: int = 64):
+        self.lanes = int(lanes)
+        self._entries: list[tuple[str, np.ndarray]] = []  # arrival order
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, qid: str) -> bool:
+        return any(q == qid for q, _ in self._entries)
+
+    @property
+    def qids(self) -> list[str]:
+        return [q for q, _ in self._entries]
+
+    @property
+    def n_sources(self) -> int:
+        return sum(len(s) for _, s in self._entries)
+
+    @property
+    def n_morsels(self) -> int:
+        """Lane morsels the current pack folds into (ceil over lane width)."""
+        return -(-self.n_sources // self.lanes)
+
+    def add(self, qid: str, sources: np.ndarray) -> None:
+        if qid in self:
+            raise ValueError(f"duplicate qid in pack: {qid!r}")
+        self._entries.append(
+            (qid, np.asarray(sources, np.int32).reshape(-1))
+        )
+
+    def evict(self, qid: str) -> np.ndarray | None:
+        """Remove one query from the pack; remaining queries keep their
+        relative arrival order (the repack is a pure deletion). Returns the
+        evicted sources, or None if the qid is not packed."""
+        for i, (q, s) in enumerate(self._entries):
+            if q == qid:
+                del self._entries[i]
+                return s
+        return None
+
+    def pack(self) -> tuple[np.ndarray, dict[str, tuple[int, int]]]:
+        """(flat sources [arrival order], {qid: (start, stop)} row spans
+        into the lane-major per-source result rows)."""
+        spans: dict[str, tuple[int, int]] = {}
+        parts = []
+        i = 0
+        for qid, s in self._entries:
+            spans[qid] = (i, i + len(s))
+            parts.append(s)
+            i += len(s)
+        flat = (
+            np.concatenate(parts) if parts else np.zeros(0, np.int32)
+        ).astype(np.int32)
+        return flat, spans

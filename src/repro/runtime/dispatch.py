@@ -1,0 +1,1093 @@
+"""Dispatch layer of the serving core: engine cache + two-phase hybrid.
+
+This is the middle layer of the three-layer runtime (see docs/serving.md):
+
+    admission  (runtime/admission.py) — who runs, when, in which morsel pack
+    dispatch   (this module)          — how one admitted batch executes
+    service    (runtime/service.py)   — the always-on loop overlapping batches
+
+``QueryDispatcher`` owns everything about *executing* one batch of source
+nodes: the compiled-engine cache, the paper's two-phase hybrid (nTkS phase 1
+under a learned budget, gang-scheduled phase-2 re-dispatch of survivors),
+backend recommendation, and the online policy learners (per-bucket budget
+model + in-flight direction-threshold refits). Semantics are unchanged from
+the pre-split ``AdaptiveScheduler`` — that class survives in
+``runtime/scheduler.py`` as a thin synchronous façade over this layer plus
+the admission queue, so every existing caller sees the same surface.
+
+What is new here is the **split-phase batch API** the serving loop pipelines
+on:
+
+- ``begin_batch``  — choose policy/backend/budget and *dispatch* phase 1
+  asynchronously (no ``block_until_ready``): jax async dispatch returns
+  immediately with device futures, so the host is free while the device
+  scans.
+- ``settle_batch`` — block on the phase-1 frontier, re-dispatch survivors
+  (phase 2, also async), block only on the tiny per-morsel iteration
+  counters, run post-batch learning, and return a ``SettledBatch`` whose
+  full result state is still on device.
+- ``finalize_batch`` — the deferred host work: materialize the final state,
+  stitch phase-2 survivors back over the phase-1 state, and hand back the
+  completed ``QueryOutcome``. The serving loop runs this *after* dispatching
+  the next batch's phase 1, so host-side stitching overlaps device compute
+  (the double-buffered invocation: at most one settled-but-unfinalized batch
+  rides behind the in-flight one, and the phase-1 buffers it consumed are
+  dropped — donated — as soon as the stitch completes).
+
+``query()`` composes the three steps back-to-back, which is bit-identical
+to the pre-split synchronous path: the split only moves *when* the host
+blocks, never what any morsel computes. Learning stays host-serial —
+``settle_batch(i)`` always precedes ``begin_batch(i+1)`` — so budgets,
+thresholds, traces, and counters are a deterministic function of the batch
+stream regardless of overlap (the seeded-replay lock in
+tests/test_serving.py).
+
+Supported jax range: 0.4.35 — 0.8.x (see repro.compat / repro.launch.mesh).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import (
+    BudgetModel,
+    DirectionThresholds,
+    POLICIES,
+    ExtendSpec,
+    IFEResult,
+    MorselPolicy,
+    as_spec,
+    build_engine,
+    build_gang_resume_engine,
+    build_resume_engine,
+    count_budget_mispredicts,
+    degree_bucket,
+    fit_direction_thresholds,
+    gang_handoff,
+    gang_scatter_back,
+    hybrid_phases,
+    pad_sources,
+    pow2ceil as _pow2ceil,
+    prepare_graph,
+    recommend_backend,
+    recommend_k,
+    recommend_policy,
+)
+from ..core.dispatcher import _axes_size
+from ..graph.csr import CSRGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineKey:
+    """Cache identity of one compiled engine. ``kind`` distinguishes the
+    static single-phase program, the per-shard-sync phase-1 program, and
+    the state-resuming phase-2 program — same policy tuple, different HLO.
+    ``extend`` carries the extension backend + direction mode (an
+    ``ExtendSpec``): each backend is a different scan program. ``stats``
+    marks the sample-tapped flavor (``build_engine(collect_stats=True)``
+    returns ``(result, per-iteration stats)`` — same result state,
+    different HLO)."""
+
+    kind: str  # "static" | "phase1" | "resume"
+    policy: MorselPolicy
+    edge_compute: str
+    n_nodes_padded: int
+    max_iters: int
+    state_layout: str
+    extend: ExtendSpec = ExtendSpec()
+    stats: bool = False
+
+
+class EngineCache:
+    """Compiled-QueryEngine cache with hit/miss accounting and a public
+    mapping surface. Hits and misses are additionally counted per engine
+    kind (static/phase1/resume/gang) so the gang path's compile footprint
+    is observable.
+
+    Iteration/lookup is part of the API — callers that count or inspect
+    compiles use ``len(cache)``, ``iter(cache)`` / ``keys()``, ``key in
+    cache``, ``get(key)`` and ``items()`` instead of reaching into the
+    private store."""
+
+    def __init__(self):
+        self._engines: dict[EngineKey, Any] = {}
+        self.hits = 0
+        self.misses = 0
+        self.hits_by_kind: collections.Counter = collections.Counter()
+        self.misses_by_kind: collections.Counter = collections.Counter()
+        # morsel-count shapes each engine has been called with: a cached
+        # engine hit can still pay a full XLA retrace when the batch's
+        # morsel count is new — invisible to hit/miss, so tracked apart
+        self._shapes: dict[EngineKey, set] = {}
+        self.shape_misses = 0
+
+    @property
+    def compile_events(self) -> int:
+        """Engine builds plus first-time input shapes: everything that
+        stalls a batch on XLA. Serving's warm/cold split keys off the
+        delta of this, not ``misses`` — a hit engine retracing on a new
+        morsel count is just as cold as a fresh build."""
+        return self.misses + self.shape_misses
+
+    def note_shape(self, key: EngineKey, shape) -> bool:
+        """Record that ``key``'s engine is about to run with input
+        ``shape`` (any hashable; callers pass the morsel-axis tuple).
+        Returns True — and counts a ``shape_miss`` — the first time this
+        (engine, shape) pair is seen."""
+        seen = self._shapes.setdefault(key, set())
+        if shape in seen:
+            return False
+        seen.add(shape)
+        self.shape_misses += 1
+        return True
+
+    def __len__(self) -> int:
+        return len(self._engines)
+
+    def __iter__(self):
+        return iter(self._engines)
+
+    def __contains__(self, key: EngineKey) -> bool:
+        return key in self._engines
+
+    def keys(self):
+        """The cached ``EngineKey``s, in compile order."""
+        return self._engines.keys()
+
+    def items(self):
+        """(EngineKey, engine) pairs, in compile order."""
+        return self._engines.items()
+
+    def get(self, key: EngineKey, default=None):
+        """Cached engine for ``key`` (no hit/miss accounting, no build)."""
+        return self._engines.get(key, default)
+
+    def count_by_kind(self, kind: str) -> int:
+        """How many compiled engines of one ``EngineKey.kind`` are cached."""
+        return sum(1 for k in self._engines if k.kind == kind)
+
+    def get_or_build(self, key: EngineKey, builder: Callable[[], Any]):
+        kind = getattr(key, "kind", "?")
+        eng = self._engines.get(key)
+        if eng is not None:
+            self.hits += 1
+            self.hits_by_kind[kind] += 1
+            return eng
+        self.misses += 1
+        self.misses_by_kind[kind] += 1
+        eng = builder()
+        self._engines[key] = eng
+        return eng
+
+
+@dataclasses.dataclass
+class QueryOutcome:
+    """One served batch: result + how the runtime chose to execute it.
+
+    ``redispatched`` counts the morsels *handed* to phase 2 (the phase-1
+    survivors); ``resumed_ganged``/``resumed_serial`` split it by how they
+    actually ran (one batched gang dispatch vs the per-morsel engine), so
+    ``redispatched == resumed_ganged + resumed_serial`` always holds.
+    ``gang_width`` is the pow2-padded width of the gang dispatch (0 when no
+    gang ran; the max across chunks for chunked batches).
+
+    The ``budget_*`` counters classify this batch's REAL morsels against
+    the phase-1 budget (``core.policies.count_budget_mispredicts``
+    semantics: too_low = survivors that paid a re-dispatch, too_high =
+    morsels that converged strictly under half the budget, inert_slots =
+    budget slack over converged morsels); zero on static runs."""
+
+    result: IFEResult
+    policy: str  # base policy name ("ntks", "ntkms", ...)
+    hybrid: bool  # did the two-phase hybrid path run?
+    redispatched: int  # morsels handed to phase 2
+    phase_ms: dict  # {"phase1": ms, "phase2": ms}; static runs use phase1
+    phase1_budget: int  # iteration cap phase 1 ran under (0 = static)
+    resumed_ganged: int = 0  # survivors resumed in a gang dispatch
+    resumed_serial: int = 0  # survivors resumed one-morsel-at-a-time
+    gang_width: int = 0  # padded gang width (0 = no gang dispatch)
+    budget_too_low: int = 0  # real morsels the budget undershot
+    budget_too_high: int = 0  # real morsels a smaller pow2 budget covered
+    budget_inert_slots: int = 0  # budget slack over converged real morsels
+    budget_observed: int = 0  # real morsels the counters classified
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    """Cumulative runtime counters across every served batch.
+
+    The ``redispatched = resumed_ganged + resumed_serial`` split mirrors
+    QueryOutcome; ``gangs``/``gang_slots`` make gang occupancy observable
+    (survivors actually ganged over padded slots dispatched)."""
+
+    queries: int = 0
+    hybrid_runs: int = 0  # batches that took the two-phase path
+    redispatched: int = 0  # survivors handed to phase 2
+    resumed_ganged: int = 0
+    resumed_serial: int = 0
+    gangs: int = 0  # gang dispatches issued
+    gang_slots: int = 0  # padded gang widths summed over dispatches
+    phase1_ms: float = 0.0
+    phase2_ms: float = 0.0
+    budget_too_low: int = 0  # phase-1 budget mispredicts (QueryOutcome)
+    budget_too_high: int = 0
+    budget_inert_slots: int = 0
+    budget_observed: int = 0
+    refits: int = 0  # in-flight direction-threshold refits
+
+    @property
+    def gang_occupancy(self) -> float:
+        """Real survivors per padded gang slot (1.0 = pow2-tight gangs)."""
+        return self.resumed_ganged / self.gang_slots if self.gang_slots else 0.0
+
+    @property
+    def budget_mispredict_rate(self) -> float:
+        """Mispredicted real morsels per observed real morsel (too_low +
+        too_high over observed; 0.0 before any hybrid batch)."""
+        if not self.budget_observed:
+            return 0.0
+        return (self.budget_too_low + self.budget_too_high) / (
+            self.budget_observed
+        )
+
+    def record(self, outcome: "QueryOutcome") -> None:
+        self.queries += 1
+        if outcome.hybrid:
+            self.hybrid_runs += 1
+        self.redispatched += outcome.redispatched
+        self.resumed_ganged += outcome.resumed_ganged
+        self.resumed_serial += outcome.resumed_serial
+        self.phase1_ms += outcome.phase_ms.get("phase1", 0.0)
+        self.phase2_ms += outcome.phase_ms.get("phase2", 0.0)
+        self.budget_too_low += outcome.budget_too_low
+        self.budget_too_high += outcome.budget_too_high
+        self.budget_inert_slots += outcome.budget_inert_slots
+        self.budget_observed += outcome.budget_observed
+
+
+@dataclasses.dataclass
+class InflightBatch:
+    """A batch whose phase 1 (or static engine) has been *dispatched* but
+    not blocked on: the device futures ride in ``payload`` until
+    ``settle_batch``. ``kind`` routes the settle path:
+
+    - "hybrid"  — phase-1 futures from the sync="shard" engine
+    - "static"  — single-engine futures (non-hybrid-eligible batch)
+    - "chunked" — oversized batch that will run the synchronous chunked
+      loop at settle time (the in-flight cap splits it; serving streams
+      rarely hit this — admission packs under the cap)."""
+
+    kind: str
+    name: str  # resolved policy name for QueryOutcome.policy
+    n_real: int
+    buckets: np.ndarray
+    payload: Any
+
+
+@dataclasses.dataclass
+class SettledBatch:
+    """A batch past its device sync points: iterations, counters, and
+    learning are done; the final result *state* may still live on device.
+    ``finalize()`` (idempotent) runs the deferred host stitch and returns
+    the completed ``QueryOutcome``."""
+
+    outcome: QueryOutcome
+    _materialize: Callable[[], IFEResult] | None = None
+
+    @property
+    def finalized(self) -> bool:
+        return self._materialize is None
+
+    def finalize(self) -> QueryOutcome:
+        if self._materialize is not None:
+            self.outcome.result = self._materialize()
+            self._materialize = None
+        return self.outcome
+
+
+class QueryDispatcher:
+    """Compile-once, serve-many execution layer over one graph.
+
+    ``adaptive=True`` enables two-phase hybrid dispatch for any policy
+    with source morsels (nTkS/nTkMS/1T1S) — pinning a policy picks WHICH
+    morsels are issued, not the execution mode, and the hybrid is
+    bit-identical in result state. Replicated state always qualifies; the
+    sharded layout qualifies when ``gang_resume`` is on (its phase 2 is
+    the gang engine + reduce-scatter merge — there is no serial sharded
+    resume). ``adaptive=False`` degrades everything to the static
+    dispatcher (one engine per policy), which is also the fallback for
+    nT1S (no source morsels to re-dispatch).
+
+    ``gang_resume=False`` pins phase 2 to the legacy one-morsel-at-a-time
+    resume (kept as the differential baseline the parity corpus compares
+    the gang against).
+
+    ``online_adapt=True`` (the default) closes the policy feedback loop
+    on the live stream:
+
+    - the phase-1 iteration budget comes from a per-(dataset-family,
+      source-degree-bucket) ``BudgetModel`` updated with every flushed
+      batch's real-morsel convergence depths (the legacy global pow2 p90
+      deque remains the empty-model cold path, and ``phase1_iters``
+      still pins the budget outright, bypassing the learner);
+    - phase-1 engines run with the ``collect_stats`` sample tap, and the
+      accumulated per-iteration (m_frontier, m_unexplored, scan-cost)
+      records are refit into ``direction_thresholds`` every
+      ``refit_every`` batches (``fit_direction_thresholds`` over
+      ``online_trace()``), so ``backend="recommend"`` serves alpha/beta
+      tracking the live stream instead of a stale bench trace — unless
+      a table was supplied explicitly, which pins it (only a manual
+      ``refit_thresholds()`` call overrides a pin).
+
+    Both loops only move iteration slots / scan layouts — results stay
+    bit-identical with the learner on, off, or mid-refit — and both are
+    deterministic functions of the served batch stream (same seeded
+    stream => bit-identical budgets, thresholds, and mispredict
+    counters, with or without ``gang_resume`` and with or without the
+    serving loop's phase overlap — ``settle_batch(i)`` always precedes
+    ``begin_batch(i+1)``, so the learners never see a reordered stream).
+    ``online_adapt=False`` pins the legacy static behavior (global-p90
+    budget, fixed thresholds) as the differential baseline.
+    """
+
+    def __init__(
+        self,
+        mesh,
+        csr: CSRGraph,
+        max_deg: int | None = None,
+        max_iters: int = 64,
+        adaptive: bool = True,
+        phase1_iters: int | None = None,
+        max_inflight: int | None = None,
+        backend="recommend",
+        direction_thresholds: DirectionThresholds | str | Path | None = None,
+        family: str | None = None,
+        gang_resume: bool = True,
+        online_adapt: bool = True,
+        budget_model: BudgetModel | None = None,
+        refit_every: int = 16,
+        sample_window: int = 2048,
+        pad_pow2_morsels: bool = False,
+    ):
+        self.mesh = mesh
+        self.csr = csr
+        self.max_deg = max_deg
+        self.max_iters = max_iters
+        self.adaptive = adaptive
+        self.phase1_iters = phase1_iters  # pin the phase-1 budget (tests)
+        self.max_inflight = max_inflight  # override recommend_k (tests)
+        # default extension backend; per-query override via query(backend=).
+        # The default IS "recommend": recommend_backend picks the scan
+        # layout per batch (direction-optimized binned pull for the
+        # BFS family), bit-identical to any explicit choice.
+        self.backend = backend
+        # fitted per-(family, degree-bucket) alpha/beta for the direction
+        # switch (core.policies.fit_direction_thresholds); a path loads a
+        # BENCH_direction_opt.json trace file. None = Beamer defaults.
+        if isinstance(direction_thresholds, (str, Path)):
+            direction_thresholds = fit_direction_thresholds(
+                direction_thresholds
+            )
+        self.direction_thresholds = direction_thresholds
+        # an explicitly supplied table is a pin: the auto-refit cadence
+        # must not silently replace what the caller asked to serve (an
+        # explicit refit_thresholds() call still overrides)
+        self._thresholds_pinned = direction_thresholds is not None
+        self.family = family  # dataset family key for threshold lookup
+        self.gang_resume = gang_resume
+        self.online_adapt = online_adapt
+        # per-(family, source-degree-bucket) phase-1 budget learner; the
+        # global deque below remains its empty-model cold path
+        self.budget_model = (
+            budget_model
+            if budget_model is not None
+            else (BudgetModel() if online_adapt else None)
+        )
+        self.refit_every = max(1, int(refit_every))
+        # serving knob: round every batch's morsel count up to a pow2 so a
+        # stream of arbitrary pool sizes hits O(log max-pool) compiled
+        # shapes instead of one XLA retrace per distinct queue depth; pad
+        # morsels are inert (0-iteration) and invisible to learning
+        # (n_real) and extraction (spans). Off by default: the one-shot
+        # query paths keep their historical exact shapes.
+        self.pad_pow2_morsels = pad_pow2_morsels
+        self.stats = SchedulerStats()
+        self.cache = EngineCache()
+        self._graphs: dict[tuple, tuple] = {}  # (axes, operands) -> (ops, n_pad)
+        # global pow2-p90 fallback budget (cold start / online_adapt off):
+        # p90 per-morsel iteration count of recent batches — the per-bucket
+        # BudgetModel supersedes it as soon as it holds samples.
+        self._iter_p90s: collections.deque = collections.deque(maxlen=32)
+        # per-iteration (n_f, m_f, m_u, pull-cost) samples from the phase-1
+        # stats tap, grouped by the n_pad they were measured against (the
+        # beta predicate compares n_f*beta to the PADDED row count)
+        self._dir_samples: dict[int, collections.deque] = {}
+        self._sample_window = int(sample_window)
+        self._batches_since_refit = 0
+
+    # ------------------------------------------------------------- engines
+
+    def _graph_for(self, policy: MorselPolicy, spec: ExtendSpec = ExtendSpec()):
+        # operand bundles are shared by every spec needing the same physical
+        # structures (rev/blocks), not per backend string
+        key = (
+            policy.graph_axes,
+            spec.needs_rev,
+            spec.needs_binned,
+            spec.needs_blocks,
+            spec.pad_block,
+        )
+        if key not in self._graphs:
+            # pad for mesh.size so every policy's graph shares one n_pad and
+            # phase-1 state can resume on the phase-2 graph unchanged
+            self._graphs[key] = prepare_graph(
+                self.csr, self.mesh, policy, self.max_deg,
+                pad_shards=self.mesh.size, extend=spec,
+            )
+        return self._graphs[key]
+
+    def engine(
+        self,
+        kind: str,
+        policy: MorselPolicy,
+        edge_compute: str,
+        n_pad: int,
+        max_iters: int | None = None,
+        state_layout: str = "replicated",
+        extend: ExtendSpec = ExtendSpec(),
+        operands=None,
+        collect_stats: bool = False,
+        morsel_shape=None,
+    ):
+        cap = int(max_iters if max_iters is not None else self.max_iters)
+        if collect_stats and kind not in ("static", "phase1"):
+            raise ValueError(f"no stats tap for engine kind {kind!r}")
+        key = EngineKey(
+            kind, policy, edge_compute, n_pad, cap, state_layout, extend,
+            collect_stats,
+        )
+        if operands is None and (
+            extend.needs_binned or extend.needs_rev or extend.needs_blocks
+        ):
+            operands = self._graph_for(policy, extend)[0]
+        if kind == "static":
+            builder = lambda: build_engine(
+                self.mesh, policy, edge_compute, n_pad, cap,
+                state_layout=state_layout, extend=extend, operands=operands,
+                collect_stats=collect_stats,
+            )
+        elif kind == "phase1":
+            builder = lambda: build_engine(
+                self.mesh, policy, edge_compute, n_pad, cap,
+                state_layout=state_layout, sync="shard", extend=extend,
+                operands=operands, collect_stats=collect_stats,
+            )
+        elif kind == "resume":
+            builder = lambda: build_resume_engine(
+                self.mesh, policy, edge_compute, n_pad, cap, extend=extend,
+                operands=operands,
+            )
+        elif kind == "gang":
+            builder = lambda: build_gang_resume_engine(
+                self.mesh, policy, edge_compute, n_pad, cap, extend=extend,
+                operands=operands, state_layout=state_layout,
+            )
+        else:
+            raise ValueError(f"unknown engine kind: {kind}")
+        eng = self.cache.get_or_build(key, builder)
+        if morsel_shape is not None:
+            # a hit engine still retraces on a new morsel count; record it
+            # so serving can classify this batch as cold (compile_events)
+            self.cache.note_shape(key, tuple(morsel_shape))
+        return eng
+
+    # ------------------------------------------------------------ dispatch
+
+    def _phase1_budget(self, buckets=()) -> int:
+        """Iteration cap for phase 1, pow2-quantized so the budget only
+        compiles O(log max_iters) distinct phase-1 engines.
+
+        Priority: a pinned ``phase1_iters`` bypasses learning outright;
+        then the per-(family, source-degree-bucket) ``BudgetModel``
+        serves the covering budget for this batch's ``buckets``; an
+        empty model falls back to the global pow2 p90 of recent batches
+        (the legacy path, and ``online_adapt=False``'s only path)."""
+        if self.phase1_iters is not None:
+            return max(1, min(self.phase1_iters, self.max_iters))
+        if self.budget_model is not None:
+            b = self.budget_model.budget_for(
+                self.family, buckets, self.max_iters
+            )
+            if b is not None:
+                return b
+        if self._iter_p90s:
+            b = _pow2ceil(int(np.median(self._iter_p90s)) + 1)
+        else:
+            # cold start: small-world graphs converge in a few hops
+            b = (
+                self.budget_model.cold_budget
+                if self.budget_model is not None
+                else 8
+            )
+        return max(4, min(b, self.max_iters))
+
+    def _record_iters(self, iters: np.ndarray):
+        if iters.size:
+            self._iter_p90s.append(float(np.percentile(iters, 90)))
+
+    def _morsel_buckets(self, sources: np.ndarray, lanes: int) -> np.ndarray:
+        """pow2 source-degree bucket per REAL morsel: the budget model's
+        key, from the mean out-degree of each morsel's (real) sources."""
+        if len(sources) == 0:
+            return np.zeros(0, np.int64)
+        deg = self.csr.degrees[
+            np.clip(sources, 0, self.csr.n_nodes - 1)
+        ].astype(np.float64)
+        n_m = -(-len(sources) // lanes)
+        pad = np.full(n_m * lanes - len(sources), np.nan)
+        mean = np.nanmean(
+            np.concatenate([deg, pad]).reshape(n_m, lanes), axis=1
+        )
+        return np.asarray([degree_bucket(float(m)) for m in mean], np.int64)
+
+    def depth_hint(self, sources, lanes: int = 1) -> int | None:
+        """Predicted convergence depth (iterations) for a prospective
+        batch of sources — the admission layer's deadline-packing signal.
+        Serves the learned per-bucket budget when the model has samples;
+        None when nothing has been learned yet (cold admission must not
+        evict/shed on a guess)."""
+        if self.budget_model is None or len(sources) == 0:
+            return None
+        buckets = self._morsel_buckets(
+            np.asarray(sources, np.int64).reshape(-1), lanes
+        )
+        return self.budget_model.budget_for(
+            self.family, buckets, self.max_iters
+        )
+
+    # ---------------------------------------------------- online adaptation
+
+    def _record_samples(self, stats: np.ndarray, trips: np.ndarray,
+                        n_pad: int, push_slots: int) -> None:
+        """Drain one batch's phase-1 stats-tap buffer into the sample
+        store: one fit-consumable record per (real morsel, iteration)."""
+        store = self._dir_samples.setdefault(
+            int(n_pad), collections.deque(maxlen=self._sample_window)
+        )
+        for i in range(stats.shape[0]):
+            for j in range(int(trips[i])):
+                n_f, m_f, m_u, pull = (float(v) for v in stats[i, j])
+                store.append({
+                    "it": j,
+                    "frontier": n_f,
+                    "m_frontier": m_f,
+                    "m_unexplored": m_u,
+                    "push_slots": float(push_slots),
+                    "pull_slots_binned": None if pull < 0 else pull,
+                })
+
+    def online_trace(self) -> dict:
+        """The accumulated live samples as a ``BENCH_direction_opt``-shaped
+        trace document: one workload per observed n_pad (this graph's
+        family/avg-degree), records under the canonical ``ell_push``
+        backend key — exactly what ``fit_direction_thresholds`` consumes,
+        so the offline fit of this trace IS the online refit.
+
+        Scope: samples come from the PHASE-1 tap only — iterations a
+        survivor runs past the budget (in the untapped resume/gang
+        engines) are not observed, so deep-straggler tails are
+        under-represented relative to a full offline bench trace (those
+        tail iterations are tiny-frontier and fail the beta test, i.e.
+        overwhelmingly push-side, but a resume-engine tap is the ROADMAP
+        follow-on that would close the gap)."""
+        return {"workloads": [
+            {
+                "graph": f"online_npad{n_pad}",
+                "kind": self.family or "unknown",
+                "n": int(self.csr.n_nodes),
+                "n_pad": int(n_pad),
+                "n_edges": int(self.csr.n_edges),
+                "avg_degree": float(self.csr.avg_degree),
+                "backends": {"ell_push": {"iterations": list(recs)}},
+            }
+            for n_pad, recs in sorted(self._dir_samples.items())
+        ]}
+
+    def refit_thresholds(self) -> DirectionThresholds | None:
+        """Refit ``direction_thresholds`` from the accumulated live
+        samples (no-op before any sample lands). ``backend="recommend"``
+        serves the refitted alpha/beta on the next batch."""
+        if not any(len(r) for r in self._dir_samples.values()):
+            return None
+        self.direction_thresholds = fit_direction_thresholds(
+            self.online_trace()
+        )
+        self.stats.refits += 1
+        return self.direction_thresholds
+
+    def _learn(self, outcome: "QueryOutcome", buckets: np.ndarray,
+               n_real: int) -> None:
+        """Post-batch learning: feed the budget model (real morsels only
+        — the per-bucket form of the pad-morsel guard; skipped entirely
+        when ``phase1_iters`` pins the budget) and the global-p90
+        fallback, then refit thresholds on the ``refit_every`` cadence."""
+        iters = np.asarray(outcome.result.iterations)[:n_real]
+        self._record_iters(iters)
+        if (
+            self.budget_model is not None
+            and self.phase1_iters is None
+            and n_real > 0
+        ):
+            self.budget_model.observe_batch(
+                self.family, buckets[:n_real], iters
+            )
+            if outcome.hybrid:
+                self.budget_model.mispredicts.count(
+                    outcome.budget_too_low, outcome.budget_too_high,
+                    outcome.budget_inert_slots, outcome.budget_observed,
+                )
+        if self.online_adapt and not self._thresholds_pinned:
+            self._batches_since_refit += 1
+            if self._batches_since_refit >= self.refit_every:
+                self._batches_since_refit = 0
+                self.refit_thresholds()
+
+    # ------------------------------------------ split-phase hybrid internals
+
+    def _begin_hybrid(self, pol, ec, g, n_pad, morsels, state_layout,
+                      extend=ExtendSpec(), n_real=0, buckets=()):
+        """Choose the budget, then DISPATCH phase 1 without blocking: jax
+        async dispatch returns device futures immediately, so the caller's
+        host thread is free until ``_settle_hybrid`` blocks on them."""
+        p1, p2 = hybrid_phases(
+            pol.source_axes, pol.graph_axes, lanes=pol.lanes,
+            or_impl=pol.or_impl,
+        )
+        budget = self._phase1_budget(buckets)
+        collect = bool(self.online_adapt)
+        eng1 = self.engine(
+            "phase1", p1, ec, n_pad, max_iters=budget,
+            state_layout=state_layout, extend=extend, operands=g,
+            collect_stats=collect, morsel_shape=morsels.shape[:1],
+        )
+        t0 = time.perf_counter()
+        out1 = eng1(g, morsels)  # async: no block_until_ready
+        return {
+            "pol": pol, "p2": p2, "ec": ec, "g": g, "n_pad": n_pad,
+            "state_layout": state_layout, "extend": extend,
+            "n_real": n_real, "budget": budget, "collect": collect,
+            "out1": out1, "t0": t0,
+        }
+
+    def _settle_hybrid(self, inf) -> SettledBatch:
+        """Block on phase 1, re-dispatch survivors (phase 2), block only
+        on the per-morsel iteration counters, and defer the final state
+        stitch into ``SettledBatch.finalize`` — the host work the serving
+        loop overlaps with the next batch's phase 1."""
+        pol, p2, ec = inf["pol"], inf["p2"], inf["ec"]
+        g, n_pad = inf["g"], inf["n_pad"]
+        state_layout, extend = inf["state_layout"], inf["extend"]
+        n_real, budget, collect = inf["n_real"], inf["budget"], inf["collect"]
+        sharded = state_layout == "sharded"
+        out1 = jax.block_until_ready(inf["out1"])
+        t1 = time.perf_counter()
+        res1, stats1 = out1 if collect else (out1, None)
+
+        # survivor test reads ONLY the frontier leaf — and under the
+        # sharded layout only a per-morsel any() reduction (the full state
+        # never gathers to host; the handoff below stays on device)
+        f1 = res1.state.frontier
+        if sharded:
+            active = np.asarray(
+                jnp.any(f1 != 0, axis=tuple(range(1, f1.ndim)))
+            )
+        else:
+            frontier1 = np.asarray(f1)
+            m = frontier1.shape[0]
+            active = frontier1.reshape(m, -1).any(axis=1)
+        idx = np.nonzero(active)[0]
+        phase_ms = {"phase1": (t1 - inf["t0"]) * 1e3, "phase2": 0.0}
+        iters1 = np.asarray(res1.iterations)
+        n_real = int(min(n_real, iters1.shape[0]))
+        too_low, too_high, inert = count_budget_mispredicts(
+            budget, iters1[:n_real], active[:n_real],
+            floor=(
+                self.budget_model.floor
+                if self.budget_model is not None
+                else 4
+            ),
+        )
+        if stats1 is not None and n_real > 0:
+            self._record_samples(
+                np.asarray(stats1)[:n_real], iters1[:n_real], n_pad,
+                push_slots=int(np.prod(g.fwd.indices.shape)),
+            )
+        if idx.size == 0:
+            return SettledBatch(QueryOutcome(
+                result=res1, policy=pol.name, hybrid=True, redispatched=0,
+                phase_ms=phase_ms, phase1_budget=budget,
+                budget_too_low=too_low, budget_too_high=too_high,
+                budget_inert_slots=inert, budget_observed=n_real,
+            ))
+        use_gang = self.gang_resume and (idx.size > 1 or sharded)
+
+        # pad survivors to a pow2 morsel count: stable resume-trace shapes
+        # (pad morsels are all-zero state => inert / zero-trip loops)
+        kp = _pow2ceil(idx.size)
+        sub_it = np.zeros((kp,), iters1.dtype)
+        sub_it[: idx.size] = iters1[idx]
+
+        g2, n_pad2 = self._graph_for(p2, extend)
+        assert n_pad2 == n_pad, (n_pad2, n_pad)
+
+        state1 = None
+        if not sharded:
+            state1 = jax.tree.map(np.asarray, res1.state)
+
+            def pick(x):
+                out = np.zeros((kp,) + x.shape[1:], np.asarray(x).dtype)
+                out[: idx.size] = np.asarray(x)[idx]
+                return out
+
+            sub_state = jax.tree.map(pick, state1)
+        else:
+            # all-gather/slice handoff: phase-1 rows (policy graph axes)
+            # -> phase-2 rows (every mesh axis), survivors gathered and
+            # pow2-padded on device
+            sub_state = gang_handoff(
+                res1.state, idx, kp, self.mesh, p2.graph_axes
+            )
+
+        if use_gang:
+            eng2 = self.engine(
+                "gang", p2, ec, n_pad, state_layout=state_layout,
+                extend=extend, operands=g2, morsel_shape=(kp,),
+            )
+            self.stats.gangs += 1
+            self.stats.gang_slots += kp
+        else:
+            eng2 = self.engine(
+                "resume", p2, ec, n_pad, extend=extend, operands=g2
+            )
+        res2 = eng2(g2, sub_state, jnp.asarray(sub_it))  # async dispatch
+        # block only the tiny per-morsel counters: phase 2 has then fully
+        # executed on device, but the state leaves stay there — the stitch
+        # below is deferred host work
+        iters2 = np.asarray(res2.iterations)
+        t2 = time.perf_counter()
+        phase_ms["phase2"] = (t2 - t1) * 1e3
+
+        final_iters = iters1.copy()
+        final_iters[idx] = iters2[: idx.size]
+
+        def materialize() -> IFEResult:
+            if sharded:
+                final_state = gang_scatter_back(res1.state, res2.state, idx)
+            else:
+                state2 = jax.tree.map(np.asarray, res2.state)
+
+                def put(full, sub):
+                    out = np.asarray(full).copy()
+                    out[idx] = sub[: idx.size]
+                    return out
+
+                final_state = jax.tree.map(
+                    jnp.asarray, jax.tree.map(put, state1, state2)
+                )
+            return IFEResult(
+                state=final_state, iterations=jnp.asarray(final_iters)
+            )
+
+        outcome = QueryOutcome(
+            result=IFEResult(state=None, iterations=jnp.asarray(final_iters)),
+            policy=pol.name, hybrid=True, redispatched=int(idx.size),
+            phase_ms=phase_ms, phase1_budget=budget,
+            resumed_ganged=int(idx.size) if use_gang else 0,
+            resumed_serial=0 if use_gang else int(idx.size),
+            gang_width=kp if use_gang else 0,
+            budget_too_low=too_low, budget_too_high=too_high,
+            budget_inert_slots=inert, budget_observed=n_real,
+        )
+        return SettledBatch(outcome, materialize)
+
+    def _run_hybrid(self, pol, ec, g, n_pad, morsels, state_layout,
+                    extend=ExtendSpec(), n_real=0, buckets=()):
+        """Two-phase hybrid on one morsel batch, synchronously: begin +
+        settle + finalize back-to-back. Returns a QueryOutcome whose
+        result state is bit-identical to the static engine's.
+
+        Phase-2 dispatch: >1 survivor => one gang-scheduled multi-frontier
+        resume (pow2-padded batch, per-survivor convergence masks — see the
+        module docstring's gang contract); exactly 1 survivor => the serial
+        per-morsel engine (no packing win to pay for); ``gang_resume=False``
+        pins the serial baseline (replicated layout only — the sharded
+        phase 2 IS the gang engine).
+
+        ``n_real``/``buckets``: this batch's real (non-pad) morsel count
+        and their source-degree buckets — the budget model's prediction
+        key and the mispredict counters' population. Under
+        ``online_adapt`` phase 1 runs the stats-tapped engine and its
+        per-iteration samples land in the threshold-refit store."""
+        inf = self._begin_hybrid(
+            pol, ec, g, n_pad, morsels, state_layout, extend=extend,
+            n_real=n_real, buckets=buckets,
+        )
+        return self._settle_hybrid(inf).finalize()
+
+    def _begin_static(self, pol, ec, g, n_pad, morsels, state_layout,
+                      extend=ExtendSpec()):
+        eng = self.engine(
+            "static", pol, ec, n_pad, state_layout=state_layout,
+            extend=extend, operands=g, morsel_shape=morsels.shape[:1],
+        )
+        t0 = time.perf_counter()
+        res = eng(g, morsels)  # async: no block_until_ready
+        return {"pol": pol, "res": res, "t0": t0}
+
+    def _settle_static(self, inf) -> SettledBatch:
+        res = jax.block_until_ready(inf["res"])
+        t1 = time.perf_counter()
+        return SettledBatch(QueryOutcome(
+            result=res, policy=inf["pol"].name, hybrid=False, redispatched=0,
+            phase_ms={"phase1": (t1 - inf["t0"]) * 1e3, "phase2": 0.0},
+            phase1_budget=0,
+        ))
+
+    def _run_static(self, pol, ec, g, n_pad, morsels, state_layout,
+                    extend=ExtendSpec(), n_real=0, buckets=()):
+        inf = self._begin_static(
+            pol, ec, g, n_pad, morsels, state_layout, extend=extend
+        )
+        return self._settle_static(inf).finalize()
+
+    # ------------------------------------------------------ batch planning
+
+    def _plan_query(self, sources, returns_paths, policy, backend):
+        """Shared preamble of query/begin_batch: resolve policy, edge
+        compute, extension spec, operands, morsels, chunking, and the
+        budget model's bucket keys for one source batch."""
+        sources = np.asarray(sources, np.int32).reshape(-1)
+        name = policy or recommend_policy(
+            len(sources),
+            self.mesh.size,
+            self.csr.avg_degree,
+            returns_paths=returns_paths,
+            n_nodes=self.csr.n_nodes,
+        )
+        pol = POLICIES[name]()
+        if pol.is_multi_source:
+            ec = "msbfs_parents" if returns_paths else "msbfs_lengths"
+        else:
+            ec = "sp_parents" if returns_paths else "sp_lengths"
+        backend = backend if backend is not None else self.backend
+        if backend == "recommend":
+            backend = recommend_backend(
+                ec, self.csr.avg_degree, n_nodes=self.csr.n_nodes,
+                lanes=pol.lanes, family=self.family,
+                thresholds=self.direction_thresholds,
+            )
+        spec = as_spec(backend)
+        g, n_pad = self._graph_for(pol, spec)
+        src_shards = _axes_size(self.mesh, pol.source_axes)
+        morsels = pad_sources(sources, src_shards, pol.lanes, n_pad)
+        # paper Fig 13: dense graphs cap concurrent source morsels (k);
+        # oversized batches run in fixed-size chunks, stitched on host.
+        k = (
+            self.max_inflight
+            if self.max_inflight is not None
+            else recommend_k(self.csr.avg_degree)
+        )
+        chunk = max(src_shards, k * src_shards)
+        if self.pad_pow2_morsels and 0 < morsels.shape[0] <= chunk:
+            # serving: quantize the morsel count so a stream of arbitrary
+            # pool sizes hits a bounded, pre-warmable set of XLA shapes
+            # ({1, 2, 4, ..., chunk}) instead of retracing per queue
+            # depth. Only below the chunk threshold: the chunked path
+            # already normalizes its shapes (every chunk, including the
+            # last, is padded to the chunk size), and pow2-rounding a big
+            # pool would waste up to 2x device work. Capped at ``chunk``
+            # so padding never flips a batch into the chunked path.
+            m2 = min(_pow2ceil(morsels.shape[0]), chunk)
+            if m2 > morsels.shape[0]:
+                inert = np.full(
+                    (m2 - morsels.shape[0], pol.lanes), n_pad, np.int32
+                )
+                morsels = np.concatenate([morsels, inert], axis=0)
+        # budget learning and mispredict accounting see only the real
+        # morsels: pad/inert ones exit at 0 iterations and would drag every
+        # bucket's learned budget below its true convergence depth
+        # (permanent re-dispatch)
+        n_real = max(1, -(-len(sources) // pol.lanes))
+        # buckets feed only the model's predict/observe; skip the host
+        # work (degrees gather + per-morsel bucketing) when no model will
+        # consume them (online_adapt off, or the budget pinned)
+        buckets = (
+            self._morsel_buckets(sources, pol.lanes)
+            if self.budget_model is not None and self.phase1_iters is None
+            else np.zeros(0, np.int64)
+        )
+        return sources, name, pol, ec, spec, g, n_pad, morsels, chunk, \
+            n_real, buckets
+
+    def _hybrid_eligible(self, pol, state_layout: str) -> bool:
+        return (
+            self.adaptive
+            and bool(pol.source_axes)  # nT1S has no source morsels to split
+            # sharded phase 2 is the gang engine; without it, fall back to
+            # the static sharded dispatch (there is no serial sharded resume)
+            and (state_layout == "replicated" or self.gang_resume)
+        )
+
+    # -------------------------------------------------- split-phase surface
+
+    def begin_batch(
+        self,
+        sources,
+        returns_paths: bool = False,
+        policy: str | None = None,
+        state_layout: str = "replicated",
+        backend=None,
+    ) -> InflightBatch:
+        """Plan one batch and dispatch its phase 1 (or static engine)
+        asynchronously. The returned ``InflightBatch`` MUST be settled via
+        ``settle_batch`` before the next ``begin_batch`` — learning is
+        host-serial, and the budget/threshold state a later batch reads is
+        only current once the earlier batch has settled."""
+        (sources, name, pol, ec, spec, g, n_pad, morsels, chunk, n_real,
+         buckets) = self._plan_query(sources, returns_paths, policy, backend)
+        if morsels.shape[0] > chunk:
+            # oversized batch: the in-flight cap splits it into a host-
+            # stitched chunk loop — run synchronously at settle time
+            # (admission keeps serving batches under the cap)
+            payload = {
+                "sources": sources, "name": name, "pol": pol, "ec": ec,
+                "spec": spec, "g": g, "n_pad": n_pad, "morsels": morsels,
+                "chunk": chunk, "state_layout": state_layout,
+            }
+            return InflightBatch("chunked", name, n_real, buckets, payload)
+        if self._hybrid_eligible(pol, state_layout):
+            inf = self._begin_hybrid(
+                pol, ec, g, n_pad, jnp.asarray(morsels), state_layout,
+                extend=spec, n_real=n_real, buckets=buckets,
+            )
+            return InflightBatch("hybrid", name, n_real, buckets, inf)
+        inf = self._begin_static(
+            pol, ec, g, n_pad, jnp.asarray(morsels), state_layout,
+            extend=spec,
+        )
+        return InflightBatch("static", name, n_real, buckets, inf)
+
+    def settle_batch(self, inflight: InflightBatch) -> SettledBatch:
+        """Drive one in-flight batch through its device sync points and
+        post-batch learning. The result state may still be deferred —
+        ``finalize_batch`` (or ``SettledBatch.finalize``) materializes it;
+        the serving loop calls that *after* dispatching the next phase 1
+        so the host stitch overlaps device compute."""
+        if inflight.kind == "chunked":
+            p = inflight.payload
+            outcome = self._run_chunked(
+                p["pol"], p["ec"], p["g"], p["n_pad"], p["morsels"],
+                p["chunk"], p["state_layout"], p["spec"],
+                inflight.n_real, inflight.buckets,
+            )
+            settled = SettledBatch(outcome)
+        elif inflight.kind == "hybrid":
+            settled = self._settle_hybrid(inflight.payload)
+        else:
+            settled = self._settle_static(inflight.payload)
+        settled.outcome.policy = inflight.name
+        self._learn(settled.outcome, inflight.buckets, inflight.n_real)
+        self.stats.record(settled.outcome)
+        return settled
+
+    def finalize_batch(self, settled: SettledBatch) -> QueryOutcome:
+        """Run the deferred host materialization (idempotent)."""
+        return settled.finalize()
+
+    def _run_chunked(self, pol, ec, g, n_pad, morsels, chunk, state_layout,
+                     spec, n_real, buckets) -> QueryOutcome:
+        """The in-flight-cap chunk loop: fixed-size chunks, host-stitched
+        into one outcome (learning/stats are applied once by the caller)."""
+        run_fn = (
+            self._run_hybrid
+            if self._hybrid_eligible(pol, state_layout)
+            else self._run_static
+        )
+        outcomes = []
+        for i in range(0, morsels.shape[0], chunk):
+            part = morsels[i : i + chunk]
+            if part.shape[0] < chunk:  # keep one trace shape per chunk size
+                pad = np.full(
+                    (chunk - part.shape[0], part.shape[1]), n_pad, np.int32
+                )
+                part = np.concatenate([part, pad], axis=0)
+            real_in = max(0, min(chunk, n_real - i))
+            outcomes.append(
+                run_fn(
+                    pol, ec, g, n_pad, jnp.asarray(part), state_layout,
+                    extend=spec, n_real=real_in,
+                    buckets=buckets[i : i + real_in],
+                )
+            )
+        result = IFEResult(
+            state=jax.tree.map(
+                lambda *xs: jnp.concatenate([jnp.asarray(x) for x in xs]),
+                *[o.result.state for o in outcomes],
+            ),
+            iterations=jnp.concatenate(
+                [jnp.asarray(o.result.iterations) for o in outcomes]
+            ),
+        )
+        return QueryOutcome(
+            result=result,
+            policy=pol.name,
+            hybrid=any(o.hybrid for o in outcomes),
+            redispatched=sum(o.redispatched for o in outcomes),
+            phase_ms={
+                "phase1": sum(o.phase_ms["phase1"] for o in outcomes),
+                "phase2": sum(o.phase_ms["phase2"] for o in outcomes),
+            },
+            phase1_budget=max(o.phase1_budget for o in outcomes),
+            resumed_ganged=sum(o.resumed_ganged for o in outcomes),
+            resumed_serial=sum(o.resumed_serial for o in outcomes),
+            gang_width=max(o.gang_width for o in outcomes),
+            budget_too_low=sum(o.budget_too_low for o in outcomes),
+            budget_too_high=sum(o.budget_too_high for o in outcomes),
+            budget_inert_slots=sum(o.budget_inert_slots for o in outcomes),
+            budget_observed=sum(o.budget_observed for o in outcomes),
+        )
+
+    def query(
+        self,
+        sources,
+        returns_paths: bool = False,
+        policy: str | None = None,
+        state_layout: str = "replicated",
+        backend=None,
+    ) -> QueryOutcome:
+        """Serve one request batch of source nodes, synchronously.
+
+        Policy is chosen per batch via ``recommend_policy`` unless pinned;
+        execution is two-phase hybrid whenever eligible (adaptive mode,
+        replicated state, source-level morsels to re-dispatch). This is
+        ``begin_batch`` + ``settle_batch`` + ``finalize_batch`` run
+        back-to-back — bit-identical to the serving loop's overlapped
+        pipeline on the same batch stream.
+
+        ``backend`` selects the frontier-extension backend for this batch
+        ("ell_push" | "ell_pull" | "block_mxu" | "dopt" | an ExtendSpec;
+        "recommend" applies ``recommend_backend``); None uses the
+        scheduler's default. All choices are bit-identical in result.
+        """
+        inflight = self.begin_batch(
+            sources, returns_paths=returns_paths, policy=policy,
+            state_layout=state_layout, backend=backend,
+        )
+        return self.settle_batch(inflight).finalize()

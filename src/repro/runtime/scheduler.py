@@ -1,899 +1,69 @@
-"""Adaptive morsel runtime: compiled-engine cache + dynamic hybrid dispatch
-+ multi-tenant admission (paper §5.4/§5.6, realized at runtime).
+"""Synchronous façade over the layered serving core (paper §5.4/§5.6).
 
-The static dispatcher (core/dispatcher.py) encodes one morsel policy as one
-mesh-axis assignment: robust, but a converged source shard burns inert
-iterations until the globally slowest morsel finishes, and every caller pays
-a fresh trace for every (policy, shape) combination. This module is the
-serving layer that fixes both:
+The adaptive morsel runtime that used to live in this one module is now
+three layers (docs/serving.md maps them to the paper's concepts):
 
-1. **Engine cache** — compiled ``QueryEngine``s keyed by (engine kind,
-   policy, edge compute, padded graph shape, iteration cap, state layout).
-   Serving never re-traces a combination it has seen; hit/miss counters make
-   the warm/cold split observable.
+- **admission** (``runtime/admission.py``) — multi-tenant queue, quotas,
+  the Fig 14 pack-vs-solo rule, deadline-aware lane packing with eviction,
+  load shedding;
+- **dispatch** (``runtime/dispatch.py``) — the engine cache and the
+  two-phase hybrid (learned phase-1 budgets, gang-scheduled phase-2
+  resume, online threshold refits), plus the split-phase batch API
+  (``begin_batch`` / ``settle_batch`` / ``finalize_batch``);
+- **service** (``runtime/service.py``) — the always-on ``ServingLoop``
+  overlapping batch i's deferred host work with batch i+1's device work,
+  with per-tenant SLO telemetry.
 
-2. **Dynamic hybrid dispatch** — the paper's hybrid policy ("issue morsels
-   at both the source node and frontier levels") as a two-phase schedule:
-
-   - *Phase 1* runs nTkS with per-shard convergence (``sync="shard"``) under
-     an adaptive iteration budget served per batch by the per-(dataset-
-     family, source-degree-bucket) ``BudgetModel`` (see point 5):
-     source-shard groups whose morsels converge exit immediately.
-   - *Phase 2* re-dispatches the surviving (unconverged) morsels with their
-     saved state under nT1S frontier parallelism over ALL mesh axes (ring
-     frontier union — collectives.REDISPATCH_OR_IMPL), so the stragglers
-     get every device instead of idling most of them.
-
-   Both graphs are padded to one shared row count (``prepare_graph
-   pad_shards=mesh.size``) so state flows between phases unchanged, making
-   the hybrid bit-identical in final state to a single-phase nTkS run.
-
-   **Gang packing + convergence-mask contract (phase 2).** When more than
-   one morsel survives phase 1 the survivors are NOT drained serially
-   (``lax.map`` is a sequential scan — exactly the frontier-level
-   serialization the hybrid exists to avoid). Instead they are ganged into
-   one batched multi-frontier re-dispatch (``build_gang_resume_engine``):
-
-   - survivor state pytrees are stacked and zero-padded to a pow2 gang
-     width ``S_pad`` (stable trace shapes; all-zero pad morsels are inert
-     because their frontier is empty and the convergence mask never fires);
-   - dense survivor frontiers are repacked as MS-BFS lanes
-     (``core.msbfs.gang_pack_lanes`` — morsel s owns lane column s) so ONE
-     shared adjacency scan per iteration serves the whole gang; 64-lane
-     morsels fold into one ``[rows, S*64]`` lane tensor;
-   - a per-survivor convergence mask (own frontier globally non-empty AND
-     own iteration counter under the cap) gates every state update and
-     counter increment, so an early finisher goes *inert* — its state
-     freezes mid-gang — instead of blocking the batch or overrunning its
-     cap. This makes the gang bit-identical per morsel to the serial
-     resume: each morsel sees exactly the same (state, iteration) update
-     sequence, and OR/MIN merges are per-lane.
-
-   A single survivor takes the serial fast path (no packing win to pay
-   for). The sharded state layout gets the same treatment: survivor rows
-   are handed from the phase-1 layout (rows over the policy's graph axes)
-   to the phase-2 layout (rows over ALL axes) by
-   ``collectives.gang_handoff``, and the per-iteration merge is the OR/MIN
-   reduce-scatter (``collectives.gang_merge_scatter``) — so DESIGN §6
-   billion-node graphs get a phase 2 at all. ``SchedulerStats`` exposes
-   gang occupancy and the redispatched/ganged/serial counter split.
-
-3. **Multi-tenant admission** — ``submit``/``flush`` pack queries from many
-   callers into 64-wide MS-BFS lane morsels only when ``recommend_policy``
-   says packing wins (enough sources to saturate lanes); otherwise each
-   query runs under the hybrid. ``recommend_k`` caps in-flight source
-   morsels per shard on dense graphs (paper Fig 13's locality cliff).
-
-4. **Recommended scan layout by default** — ``backend="recommend"`` is the
-   default: ``recommend_backend`` picks the physical frontier-extension
-   layout per batch (Beamer direction switch over degree-binned pull slabs
-   for the BFS family, block-MXU for saturated lane morsels on block-dense
-   graphs, forward push for weighted relax), optionally with alpha/beta
-   fitted per (dataset-family, degree-bucket) from bench traces
-   (``direction_thresholds=``). Every choice is bit-identical in result
-   state — the recommendation only moves scan cost.
-
-5. **Online policy learning** (``online_adapt=True``, the default) — the
-   scheduler's two learned knobs close their feedback loops on the live
-   stream instead of offline artifacts:
-
-   - the phase-1 budget is served per batch by ``core.policies.
-     BudgetModel``: per-(dataset-family, source-degree-bucket) windows of
-     observed real-morsel convergence depths, pow2-quantized p90 serving
-     with DirectionThresholds-style bucket fallback. The legacy global
-     p90 deque survives only as the empty-model cold path; a pinned
-     ``phase1_iters`` bypasses the learner outright. Budget mispredicts
-     are counted per batch (too_low = survivors that paid a re-dispatch;
-     too_high = morsels that converged strictly under half the budget;
-     inert_slots = budget slack) into ``SchedulerStats`` and
-     ``BudgetModel.mispredicts``.
-   - phase-1 engines run with the ``build_engine(collect_stats=True)``
-     sample tap; the per-iteration (m_frontier, m_unexplored, scan-cost)
-     records accumulate in a bounded store (``online_trace()`` exports
-     them in BENCH_direction_opt schema) and every ``refit_every``
-     batches ``fit_direction_thresholds`` refits the served alpha/beta
-     in-flight, so ``backend="recommend"`` tracks the live stream.
-
-   Both loops move only iteration slots / scan layouts, never results,
-   and both are deterministic in the served batch stream (bit-identical
-   budgets/thresholds/counters across replays and gang_resume on/off).
+``AdaptiveScheduler`` survives here as the thin synchronous façade every
+pre-split caller (tests, benchmarks, the closed-loop driver) keeps using
+unmodified: it IS the dispatch layer (subclass — ``query``, the engine
+cache, stats, and the learners are inherited, semantics unchanged), and
+its ``submit``/``flush`` run the admission layer's planner with no quotas
+and no deadlines, which reproduces the legacy pooled batching bit-for-bit
+(same qid naming, same arrival-order packing, same per-query result rows
+— the replay corpus in tests/test_serving.py pins façade == ServingLoop).
 
 Supported jax range: 0.4.35 — 0.8.x (see repro.compat / repro.launch.mesh).
 """
 from __future__ import annotations
 
-import collections
-import dataclasses
-import time
-from pathlib import Path
-from typing import Any, Callable
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..core import (
-    BudgetModel,
-    DirectionThresholds,
-    POLICIES,
-    ExtendSpec,
-    IFEResult,
-    MorselPolicy,
-    as_spec,
-    build_engine,
-    build_gang_resume_engine,
-    build_resume_engine,
-    count_budget_mispredicts,
-    degree_bucket,
-    fit_direction_thresholds,
-    gang_handoff,
-    gang_scatter_back,
-    hybrid_phases,
-    pad_sources,
-    pow2ceil as _pow2ceil,
-    prepare_graph,
-    recommend_backend,
-    recommend_k,
-    recommend_policy,
+from .admission import AdmissionQueue
+from .dispatch import (  # noqa: F401  (re-exported: pre-split import site)
+    EngineCache,
+    EngineKey,
+    QueryDispatcher,
+    QueryOutcome,
+    SchedulerStats,
+    _pow2ceil,
 )
-from ..core.dispatcher import _axes_size
-from ..graph.csr import CSRGraph
+from .service import unpack_levels
 
 
-@dataclasses.dataclass(frozen=True)
-class EngineKey:
-    """Cache identity of one compiled engine. ``kind`` distinguishes the
-    static single-phase program, the per-shard-sync phase-1 program, and
-    the state-resuming phase-2 program — same policy tuple, different HLO.
-    ``extend`` carries the extension backend + direction mode (an
-    ``ExtendSpec``): each backend is a different scan program. ``stats``
-    marks the sample-tapped flavor (``build_engine(collect_stats=True)``
-    returns ``(result, per-iteration stats)`` — same result state,
-    different HLO)."""
+class AdaptiveScheduler(QueryDispatcher):
+    """Compile-once, serve-many recursive-query runtime over one graph —
+    the dispatch layer (see ``QueryDispatcher`` for the execution/learning
+    contract) plus the legacy synchronous ``submit``/``flush`` admission
+    surface. For the always-on overlapped loop with tenant SLOs, drive the
+    same dispatcher through ``runtime.service.ServingLoop`` instead."""
 
-    kind: str  # "static" | "phase1" | "resume"
-    policy: MorselPolicy
-    edge_compute: str
-    n_nodes_padded: int
-    max_iters: int
-    state_layout: str
-    extend: ExtendSpec = ExtendSpec()
-    stats: bool = False
-
-
-class EngineCache:
-    """Compiled-QueryEngine cache with hit/miss accounting. Hits and misses
-    are additionally counted per engine kind (static/phase1/resume/gang) so
-    the gang path's compile footprint is observable."""
-
-    def __init__(self):
-        self._engines: dict[EngineKey, Any] = {}
-        self.hits = 0
-        self.misses = 0
-        self.hits_by_kind: collections.Counter = collections.Counter()
-        self.misses_by_kind: collections.Counter = collections.Counter()
-
-    def __len__(self) -> int:
-        return len(self._engines)
-
-    def get_or_build(self, key: EngineKey, builder: Callable[[], Any]):
-        kind = getattr(key, "kind", "?")
-        eng = self._engines.get(key)
-        if eng is not None:
-            self.hits += 1
-            self.hits_by_kind[kind] += 1
-            return eng
-        self.misses += 1
-        self.misses_by_kind[kind] += 1
-        eng = builder()
-        self._engines[key] = eng
-        return eng
-
-
-@dataclasses.dataclass
-class QueryOutcome:
-    """One served batch: result + how the runtime chose to execute it.
-
-    ``redispatched`` counts the morsels *handed* to phase 2 (the phase-1
-    survivors); ``resumed_ganged``/``resumed_serial`` split it by how they
-    actually ran (one batched gang dispatch vs the per-morsel engine), so
-    ``redispatched == resumed_ganged + resumed_serial`` always holds.
-    ``gang_width`` is the pow2-padded width of the gang dispatch (0 when no
-    gang ran; the max across chunks for chunked batches).
-
-    The ``budget_*`` counters classify this batch's REAL morsels against
-    the phase-1 budget (``core.policies.count_budget_mispredicts``
-    semantics: too_low = survivors that paid a re-dispatch, too_high =
-    morsels that converged strictly under half the budget, inert_slots =
-    budget slack over converged morsels); zero on static runs."""
-
-    result: IFEResult
-    policy: str  # base policy name ("ntks", "ntkms", ...)
-    hybrid: bool  # did the two-phase hybrid path run?
-    redispatched: int  # morsels handed to phase 2
-    phase_ms: dict  # {"phase1": ms, "phase2": ms}; static runs use phase1
-    phase1_budget: int  # iteration cap phase 1 ran under (0 = static)
-    resumed_ganged: int = 0  # survivors resumed in a gang dispatch
-    resumed_serial: int = 0  # survivors resumed one-morsel-at-a-time
-    gang_width: int = 0  # padded gang width (0 = no gang dispatch)
-    budget_too_low: int = 0  # real morsels the budget undershot
-    budget_too_high: int = 0  # real morsels a smaller pow2 budget covered
-    budget_inert_slots: int = 0  # budget slack over converged real morsels
-    budget_observed: int = 0  # real morsels the counters classified
-
-
-@dataclasses.dataclass
-class SchedulerStats:
-    """Cumulative runtime counters across every served batch.
-
-    The ``redispatched = resumed_ganged + resumed_serial`` split mirrors
-    QueryOutcome; ``gangs``/``gang_slots`` make gang occupancy observable
-    (survivors actually ganged over padded slots dispatched)."""
-
-    queries: int = 0
-    hybrid_runs: int = 0  # batches that took the two-phase path
-    redispatched: int = 0  # survivors handed to phase 2
-    resumed_ganged: int = 0
-    resumed_serial: int = 0
-    gangs: int = 0  # gang dispatches issued
-    gang_slots: int = 0  # padded gang widths summed over dispatches
-    phase1_ms: float = 0.0
-    phase2_ms: float = 0.0
-    budget_too_low: int = 0  # phase-1 budget mispredicts (QueryOutcome)
-    budget_too_high: int = 0
-    budget_inert_slots: int = 0
-    budget_observed: int = 0
-    refits: int = 0  # in-flight direction-threshold refits
-
-    @property
-    def gang_occupancy(self) -> float:
-        """Real survivors per padded gang slot (1.0 = pow2-tight gangs)."""
-        return self.resumed_ganged / self.gang_slots if self.gang_slots else 0.0
-
-    @property
-    def budget_mispredict_rate(self) -> float:
-        """Mispredicted real morsels per observed real morsel (too_low +
-        too_high over observed; 0.0 before any hybrid batch)."""
-        if not self.budget_observed:
-            return 0.0
-        return (self.budget_too_low + self.budget_too_high) / (
-            self.budget_observed
-        )
-
-    def record(self, outcome: "QueryOutcome") -> None:
-        self.queries += 1
-        if outcome.hybrid:
-            self.hybrid_runs += 1
-        self.redispatched += outcome.redispatched
-        self.resumed_ganged += outcome.resumed_ganged
-        self.resumed_serial += outcome.resumed_serial
-        self.phase1_ms += outcome.phase_ms.get("phase1", 0.0)
-        self.phase2_ms += outcome.phase_ms.get("phase2", 0.0)
-        self.budget_too_low += outcome.budget_too_low
-        self.budget_too_high += outcome.budget_too_high
-        self.budget_inert_slots += outcome.budget_inert_slots
-        self.budget_observed += outcome.budget_observed
-
-
-class AdaptiveScheduler:
-    """Compile-once, serve-many recursive-query runtime over one graph.
-
-    ``adaptive=True`` enables two-phase hybrid dispatch for any policy
-    with source morsels (nTkS/nTkMS/1T1S) — pinning a policy picks WHICH
-    morsels are issued, not the execution mode, and the hybrid is
-    bit-identical in result state. Replicated state always qualifies; the
-    sharded layout qualifies when ``gang_resume`` is on (its phase 2 is
-    the gang engine + reduce-scatter merge — there is no serial sharded
-    resume). ``adaptive=False`` degrades everything to the static
-    dispatcher (one engine per policy), which is also the fallback for
-    nT1S (no source morsels to re-dispatch).
-
-    ``gang_resume=False`` pins phase 2 to the legacy one-morsel-at-a-time
-    resume (kept as the differential baseline the parity corpus compares
-    the gang against).
-
-    ``online_adapt=True`` (the default) closes the policy feedback loop
-    on the live stream:
-
-    - the phase-1 iteration budget comes from a per-(dataset-family,
-      source-degree-bucket) ``BudgetModel`` updated with every flushed
-      batch's real-morsel convergence depths (the legacy global pow2 p90
-      deque remains the empty-model cold path, and ``phase1_iters``
-      still pins the budget outright, bypassing the learner);
-    - phase-1 engines run with the ``collect_stats`` sample tap, and the
-      accumulated per-iteration (m_frontier, m_unexplored, scan-cost)
-      records are refit into ``direction_thresholds`` every
-      ``refit_every`` batches (``fit_direction_thresholds`` over
-      ``online_trace()``), so ``backend="recommend"`` serves alpha/beta
-      tracking the live stream instead of a stale bench trace — unless
-      a table was supplied explicitly, which pins it (only a manual
-      ``refit_thresholds()`` call overrides a pin).
-
-    Both loops only move iteration slots / scan layouts — results stay
-    bit-identical with the learner on, off, or mid-refit — and both are
-    deterministic functions of the served batch stream (same seeded
-    stream => bit-identical budgets, thresholds, and mispredict
-    counters, with or without ``gang_resume``).
-    ``online_adapt=False`` pins the legacy static behavior (global-p90
-    budget, fixed thresholds) as the differential baseline.
-    """
-
-    def __init__(
-        self,
-        mesh,
-        csr: CSRGraph,
-        max_deg: int | None = None,
-        max_iters: int = 64,
-        adaptive: bool = True,
-        phase1_iters: int | None = None,
-        max_inflight: int | None = None,
-        backend="recommend",
-        direction_thresholds: DirectionThresholds | str | Path | None = None,
-        family: str | None = None,
-        gang_resume: bool = True,
-        online_adapt: bool = True,
-        budget_model: BudgetModel | None = None,
-        refit_every: int = 16,
-        sample_window: int = 2048,
-    ):
-        self.mesh = mesh
-        self.csr = csr
-        self.max_deg = max_deg
-        self.max_iters = max_iters
-        self.adaptive = adaptive
-        self.phase1_iters = phase1_iters  # pin the phase-1 budget (tests)
-        self.max_inflight = max_inflight  # override recommend_k (tests)
-        # default extension backend; per-query override via query(backend=).
-        # The default IS "recommend": recommend_backend picks the scan
-        # layout per batch (direction-optimized binned pull for the
-        # BFS family), bit-identical to any explicit choice.
-        self.backend = backend
-        # fitted per-(family, degree-bucket) alpha/beta for the direction
-        # switch (core.policies.fit_direction_thresholds); a path loads a
-        # BENCH_direction_opt.json trace file. None = Beamer defaults.
-        if isinstance(direction_thresholds, (str, Path)):
-            direction_thresholds = fit_direction_thresholds(
-                direction_thresholds
-            )
-        self.direction_thresholds = direction_thresholds
-        # an explicitly supplied table is a pin: the auto-refit cadence
-        # must not silently replace what the caller asked to serve (an
-        # explicit refit_thresholds() call still overrides)
-        self._thresholds_pinned = direction_thresholds is not None
-        self.family = family  # dataset family key for threshold lookup
-        self.gang_resume = gang_resume
-        self.online_adapt = online_adapt
-        # per-(family, source-degree-bucket) phase-1 budget learner; the
-        # global deque below remains its empty-model cold path
-        self.budget_model = (
-            budget_model
-            if budget_model is not None
-            else (BudgetModel() if online_adapt else None)
-        )
-        self.refit_every = max(1, int(refit_every))
-        self.stats = SchedulerStats()
-        self.cache = EngineCache()
-        self._graphs: dict[tuple, tuple] = {}  # (axes, operands) -> (ops, n_pad)
-        # global pow2-p90 fallback budget (cold start / online_adapt off):
-        # p90 per-morsel iteration count of recent batches — the per-bucket
-        # BudgetModel supersedes it as soon as it holds samples.
-        self._iter_p90s: collections.deque = collections.deque(maxlen=32)
-        # per-iteration (n_f, m_f, m_u, pull-cost) samples from the phase-1
-        # stats tap, grouped by the n_pad they were measured against (the
-        # beta predicate compares n_f*beta to the PADDED row count)
-        self._dir_samples: dict[int, collections.deque] = {}
-        self._sample_window = int(sample_window)
-        self._batches_since_refit = 0
-        self._pending: list[tuple[str, np.ndarray]] = []
-        self._next_qid = 0
-        self.admissions = {"ntkms": 0, "per_query": 0}
-
-    # ------------------------------------------------------------- engines
-
-    def _graph_for(self, policy: MorselPolicy, spec: ExtendSpec = ExtendSpec()):
-        # operand bundles are shared by every spec needing the same physical
-        # structures (rev/blocks), not per backend string
-        key = (
-            policy.graph_axes,
-            spec.needs_rev,
-            spec.needs_binned,
-            spec.needs_blocks,
-            spec.pad_block,
-        )
-        if key not in self._graphs:
-            # pad for mesh.size so every policy's graph shares one n_pad and
-            # phase-1 state can resume on the phase-2 graph unchanged
-            self._graphs[key] = prepare_graph(
-                self.csr, self.mesh, policy, self.max_deg,
-                pad_shards=self.mesh.size, extend=spec,
-            )
-        return self._graphs[key]
-
-    def engine(
-        self,
-        kind: str,
-        policy: MorselPolicy,
-        edge_compute: str,
-        n_pad: int,
-        max_iters: int | None = None,
-        state_layout: str = "replicated",
-        extend: ExtendSpec = ExtendSpec(),
-        operands=None,
-        collect_stats: bool = False,
-    ):
-        cap = int(max_iters if max_iters is not None else self.max_iters)
-        if collect_stats and kind not in ("static", "phase1"):
-            raise ValueError(f"no stats tap for engine kind {kind!r}")
-        key = EngineKey(
-            kind, policy, edge_compute, n_pad, cap, state_layout, extend,
-            collect_stats,
-        )
-        if operands is None and (
-            extend.needs_binned or extend.needs_rev or extend.needs_blocks
-        ):
-            operands = self._graph_for(policy, extend)[0]
-        if kind == "static":
-            builder = lambda: build_engine(
-                self.mesh, policy, edge_compute, n_pad, cap,
-                state_layout=state_layout, extend=extend, operands=operands,
-                collect_stats=collect_stats,
-            )
-        elif kind == "phase1":
-            builder = lambda: build_engine(
-                self.mesh, policy, edge_compute, n_pad, cap,
-                state_layout=state_layout, sync="shard", extend=extend,
-                operands=operands, collect_stats=collect_stats,
-            )
-        elif kind == "resume":
-            builder = lambda: build_resume_engine(
-                self.mesh, policy, edge_compute, n_pad, cap, extend=extend,
-                operands=operands,
-            )
-        elif kind == "gang":
-            builder = lambda: build_gang_resume_engine(
-                self.mesh, policy, edge_compute, n_pad, cap, extend=extend,
-                operands=operands, state_layout=state_layout,
-            )
-        else:
-            raise ValueError(f"unknown engine kind: {kind}")
-        return self.cache.get_or_build(key, builder)
-
-    # ------------------------------------------------------------ dispatch
-
-    def _phase1_budget(self, buckets=()) -> int:
-        """Iteration cap for phase 1, pow2-quantized so the budget only
-        compiles O(log max_iters) distinct phase-1 engines.
-
-        Priority: a pinned ``phase1_iters`` bypasses learning outright;
-        then the per-(family, source-degree-bucket) ``BudgetModel``
-        serves the covering budget for this batch's ``buckets``; an
-        empty model falls back to the global pow2 p90 of recent batches
-        (the legacy path, and ``online_adapt=False``'s only path)."""
-        if self.phase1_iters is not None:
-            return max(1, min(self.phase1_iters, self.max_iters))
-        if self.budget_model is not None:
-            b = self.budget_model.budget_for(
-                self.family, buckets, self.max_iters
-            )
-            if b is not None:
-                return b
-        if self._iter_p90s:
-            b = _pow2ceil(int(np.median(self._iter_p90s)) + 1)
-        else:
-            # cold start: small-world graphs converge in a few hops
-            b = (
-                self.budget_model.cold_budget
-                if self.budget_model is not None
-                else 8
-            )
-        return max(4, min(b, self.max_iters))
-
-    def _record_iters(self, iters: np.ndarray):
-        if iters.size:
-            self._iter_p90s.append(float(np.percentile(iters, 90)))
-
-    def _morsel_buckets(self, sources: np.ndarray, lanes: int) -> np.ndarray:
-        """pow2 source-degree bucket per REAL morsel: the budget model's
-        key, from the mean out-degree of each morsel's (real) sources."""
-        if len(sources) == 0:
-            return np.zeros(0, np.int64)
-        deg = self.csr.degrees[
-            np.clip(sources, 0, self.csr.n_nodes - 1)
-        ].astype(np.float64)
-        n_m = -(-len(sources) // lanes)
-        pad = np.full(n_m * lanes - len(sources), np.nan)
-        mean = np.nanmean(
-            np.concatenate([deg, pad]).reshape(n_m, lanes), axis=1
-        )
-        return np.asarray([degree_bucket(float(m)) for m in mean], np.int64)
-
-    # ---------------------------------------------------- online adaptation
-
-    def _record_samples(self, stats: np.ndarray, trips: np.ndarray,
-                        n_pad: int, push_slots: int) -> None:
-        """Drain one batch's phase-1 stats-tap buffer into the sample
-        store: one fit-consumable record per (real morsel, iteration)."""
-        store = self._dir_samples.setdefault(
-            int(n_pad), collections.deque(maxlen=self._sample_window)
-        )
-        for i in range(stats.shape[0]):
-            for j in range(int(trips[i])):
-                n_f, m_f, m_u, pull = (float(v) for v in stats[i, j])
-                store.append({
-                    "it": j,
-                    "frontier": n_f,
-                    "m_frontier": m_f,
-                    "m_unexplored": m_u,
-                    "push_slots": float(push_slots),
-                    "pull_slots_binned": None if pull < 0 else pull,
-                })
-
-    def online_trace(self) -> dict:
-        """The accumulated live samples as a ``BENCH_direction_opt``-shaped
-        trace document: one workload per observed n_pad (this graph's
-        family/avg-degree), records under the canonical ``ell_push``
-        backend key — exactly what ``fit_direction_thresholds`` consumes,
-        so the offline fit of this trace IS the online refit.
-
-        Scope: samples come from the PHASE-1 tap only — iterations a
-        survivor runs past the budget (in the untapped resume/gang
-        engines) are not observed, so deep-straggler tails are
-        under-represented relative to a full offline bench trace (those
-        tail iterations are tiny-frontier and fail the beta test, i.e.
-        overwhelmingly push-side, but a resume-engine tap is the ROADMAP
-        follow-on that would close the gap)."""
-        return {"workloads": [
-            {
-                "graph": f"online_npad{n_pad}",
-                "kind": self.family or "unknown",
-                "n": int(self.csr.n_nodes),
-                "n_pad": int(n_pad),
-                "n_edges": int(self.csr.n_edges),
-                "avg_degree": float(self.csr.avg_degree),
-                "backends": {"ell_push": {"iterations": list(recs)}},
-            }
-            for n_pad, recs in sorted(self._dir_samples.items())
-        ]}
-
-    def refit_thresholds(self) -> DirectionThresholds | None:
-        """Refit ``direction_thresholds`` from the accumulated live
-        samples (no-op before any sample lands). ``backend="recommend"``
-        serves the refitted alpha/beta on the next batch."""
-        if not any(len(r) for r in self._dir_samples.values()):
-            return None
-        self.direction_thresholds = fit_direction_thresholds(
-            self.online_trace()
-        )
-        self.stats.refits += 1
-        return self.direction_thresholds
-
-    def _learn(self, outcome: "QueryOutcome", buckets: np.ndarray,
-               n_real: int) -> None:
-        """Post-batch learning: feed the budget model (real morsels only
-        — the per-bucket form of the pad-morsel guard; skipped entirely
-        when ``phase1_iters`` pins the budget) and the global-p90
-        fallback, then refit thresholds on the ``refit_every`` cadence."""
-        iters = np.asarray(outcome.result.iterations)[:n_real]
-        self._record_iters(iters)
-        if (
-            self.budget_model is not None
-            and self.phase1_iters is None
-            and n_real > 0
-        ):
-            self.budget_model.observe_batch(
-                self.family, buckets[:n_real], iters
-            )
-            if outcome.hybrid:
-                self.budget_model.mispredicts.count(
-                    outcome.budget_too_low, outcome.budget_too_high,
-                    outcome.budget_inert_slots, outcome.budget_observed,
-                )
-        if self.online_adapt and not self._thresholds_pinned:
-            self._batches_since_refit += 1
-            if self._batches_since_refit >= self.refit_every:
-                self._batches_since_refit = 0
-                self.refit_thresholds()
-
-    def _run_hybrid(self, pol, ec, g, n_pad, morsels, state_layout,
-                    extend=ExtendSpec(), n_real=0, buckets=()):
-        """Two-phase hybrid on one morsel batch. Returns a QueryOutcome
-        whose result state is bit-identical to the static engine's.
-
-        Phase-2 dispatch: >1 survivor => one gang-scheduled multi-frontier
-        resume (pow2-padded batch, per-survivor convergence masks — see the
-        module docstring's gang contract); exactly 1 survivor => the serial
-        per-morsel engine (no packing win to pay for); ``gang_resume=False``
-        pins the serial baseline (replicated layout only — the sharded
-        phase 2 IS the gang engine).
-
-        ``n_real``/``buckets``: this batch's real (non-pad) morsel count
-        and their source-degree buckets — the budget model's prediction
-        key and the mispredict counters' population. Under
-        ``online_adapt`` phase 1 runs the stats-tapped engine and its
-        per-iteration samples land in the threshold-refit store."""
-        sharded = state_layout == "sharded"
-        p1, p2 = hybrid_phases(
-            pol.source_axes, pol.graph_axes, lanes=pol.lanes,
-            or_impl=pol.or_impl,
-        )
-        budget = self._phase1_budget(buckets)
-        collect = bool(self.online_adapt)
-        eng1 = self.engine(
-            "phase1", p1, ec, n_pad, max_iters=budget,
-            state_layout=state_layout, extend=extend, operands=g,
-            collect_stats=collect,
-        )
-        t0 = time.perf_counter()
-        out1 = jax.block_until_ready(eng1(g, morsels))
-        t1 = time.perf_counter()
-        res1, stats1 = out1 if collect else (out1, None)
-
-        # survivor test reads ONLY the frontier leaf — and under the
-        # sharded layout only a per-morsel any() reduction (the full state
-        # never gathers to host; the handoff below stays on device)
-        f1 = res1.state.frontier
-        if sharded:
-            active = np.asarray(
-                jnp.any(f1 != 0, axis=tuple(range(1, f1.ndim)))
-            )
-        else:
-            frontier1 = np.asarray(f1)
-            m = frontier1.shape[0]
-            active = frontier1.reshape(m, -1).any(axis=1)
-        idx = np.nonzero(active)[0]
-        phase_ms = {"phase1": (t1 - t0) * 1e3, "phase2": 0.0}
-        iters1 = np.asarray(res1.iterations)
-        n_real = int(min(n_real, iters1.shape[0]))
-        too_low, too_high, inert = count_budget_mispredicts(
-            budget, iters1[:n_real], active[:n_real],
-            floor=(
-                self.budget_model.floor
-                if self.budget_model is not None
-                else 4
-            ),
-        )
-        if stats1 is not None and n_real > 0:
-            self._record_samples(
-                np.asarray(stats1)[:n_real], iters1[:n_real], n_pad,
-                push_slots=int(np.prod(g.fwd.indices.shape)),
-            )
-        if idx.size == 0:
-            return QueryOutcome(
-                result=res1, policy=pol.name, hybrid=True, redispatched=0,
-                phase_ms=phase_ms, phase1_budget=budget,
-                budget_too_low=too_low, budget_too_high=too_high,
-                budget_inert_slots=inert, budget_observed=n_real,
-            )
-        use_gang = self.gang_resume and (idx.size > 1 or sharded)
-
-        # pad survivors to a pow2 morsel count: stable resume-trace shapes
-        # (pad morsels are all-zero state => inert / zero-trip loops)
-        kp = _pow2ceil(idx.size)
-        sub_it = np.zeros((kp,), iters1.dtype)
-        sub_it[: idx.size] = iters1[idx]
-
-        g2, n_pad2 = self._graph_for(p2, extend)
-        assert n_pad2 == n_pad, (n_pad2, n_pad)
-
-        state1 = None
-        if not sharded:
-            state1 = jax.tree.map(np.asarray, res1.state)
-
-            def pick(x):
-                out = np.zeros((kp,) + x.shape[1:], np.asarray(x).dtype)
-                out[: idx.size] = np.asarray(x)[idx]
-                return out
-
-            sub_state = jax.tree.map(pick, state1)
-        else:
-            # all-gather/slice handoff: phase-1 rows (policy graph axes)
-            # -> phase-2 rows (every mesh axis), survivors gathered and
-            # pow2-padded on device
-            sub_state = gang_handoff(
-                res1.state, idx, kp, self.mesh, p2.graph_axes
-            )
-
-        if use_gang:
-            eng2 = self.engine(
-                "gang", p2, ec, n_pad, state_layout=state_layout,
-                extend=extend, operands=g2,
-            )
-            self.stats.gangs += 1
-            self.stats.gang_slots += kp
-        else:
-            eng2 = self.engine(
-                "resume", p2, ec, n_pad, extend=extend, operands=g2
-            )
-        res2 = jax.block_until_ready(eng2(g2, sub_state, jnp.asarray(sub_it)))
-        t2 = time.perf_counter()
-        phase_ms["phase2"] = (t2 - t1) * 1e3
-
-        iters2 = np.asarray(res2.iterations)
-        if sharded:
-            final_state = gang_scatter_back(res1.state, res2.state, idx)
-        else:
-            state2 = jax.tree.map(np.asarray, res2.state)
-
-            def put(full, sub):
-                out = np.asarray(full).copy()
-                out[idx] = sub[: idx.size]
-                return out
-
-            final_state = jax.tree.map(
-                jnp.asarray, jax.tree.map(put, state1, state2)
-            )
-        final_iters = iters1.copy()
-        final_iters[idx] = iters2[: idx.size]
-        return QueryOutcome(
-            result=IFEResult(
-                state=final_state, iterations=jnp.asarray(final_iters)
-            ),
-            policy=pol.name, hybrid=True, redispatched=int(idx.size),
-            phase_ms=phase_ms, phase1_budget=budget,
-            resumed_ganged=int(idx.size) if use_gang else 0,
-            resumed_serial=0 if use_gang else int(idx.size),
-            gang_width=kp if use_gang else 0,
-            budget_too_low=too_low, budget_too_high=too_high,
-            budget_inert_slots=inert, budget_observed=n_real,
-        )
-
-    def _run_static(self, pol, ec, g, n_pad, morsels, state_layout,
-                    extend=ExtendSpec(), n_real=0, buckets=()):
-        eng = self.engine(
-            "static", pol, ec, n_pad, state_layout=state_layout,
-            extend=extend, operands=g,
-        )
-        t0 = time.perf_counter()
-        res = jax.block_until_ready(eng(g, morsels))
-        t1 = time.perf_counter()
-        return QueryOutcome(
-            result=res, policy=pol.name, hybrid=False, redispatched=0,
-            phase_ms={"phase1": (t1 - t0) * 1e3, "phase2": 0.0},
-            phase1_budget=0,
-        )
-
-    def query(
-        self,
-        sources,
-        returns_paths: bool = False,
-        policy: str | None = None,
-        state_layout: str = "replicated",
-        backend=None,
-    ) -> QueryOutcome:
-        """Serve one request batch of source nodes.
-
-        Policy is chosen per batch via ``recommend_policy`` unless pinned;
-        execution is two-phase hybrid whenever eligible (adaptive mode,
-        replicated state, source-level morsels to re-dispatch).
-
-        ``backend`` selects the frontier-extension backend for this batch
-        ("ell_push" | "ell_pull" | "block_mxu" | "dopt" | an ExtendSpec;
-        "recommend" applies ``recommend_backend``); None uses the
-        scheduler's default. All choices are bit-identical in result.
-        """
-        sources = np.asarray(sources, np.int32).reshape(-1)
-        name = policy or recommend_policy(
-            len(sources),
-            self.mesh.size,
-            self.csr.avg_degree,
-            returns_paths=returns_paths,
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        # no quotas, no deadlines, no estimators: the admission planner in
+        # this configuration is exactly the legacy flush batching
+        self._admission = AdmissionQueue(
             n_nodes=self.csr.n_nodes,
+            n_devices=self.mesh.size,
+            avg_degree=self.csr.avg_degree,
         )
-        pol = POLICIES[name]()
-        if pol.is_multi_source:
-            ec = "msbfs_parents" if returns_paths else "msbfs_lengths"
-        else:
-            ec = "sp_parents" if returns_paths else "sp_lengths"
-        backend = backend if backend is not None else self.backend
-        if backend == "recommend":
-            backend = recommend_backend(
-                ec, self.csr.avg_degree, n_nodes=self.csr.n_nodes,
-                lanes=pol.lanes, family=self.family,
-                thresholds=self.direction_thresholds,
-            )
-        spec = as_spec(backend)
-        g, n_pad = self._graph_for(pol, spec)
-        src_shards = _axes_size(self.mesh, pol.source_axes)
-        morsels = pad_sources(sources, src_shards, pol.lanes, n_pad)
-
-        use_hybrid = (
-            self.adaptive
-            and bool(pol.source_axes)  # nT1S has no source morsels to split
-            # sharded phase 2 is the gang engine; without it, fall back to
-            # the static sharded dispatch (there is no serial sharded resume)
-            and (state_layout == "replicated" or self.gang_resume)
-        )
-        run_fn = self._run_hybrid if use_hybrid else self._run_static
-        run = lambda *args, **kw: run_fn(*args, extend=spec, **kw)
-
-        # paper Fig 13: dense graphs cap concurrent source morsels (k);
-        # oversized batches run in fixed-size chunks, stitched on host.
-        k = (
-            self.max_inflight
-            if self.max_inflight is not None
-            else recommend_k(self.csr.avg_degree)
-        )
-        chunk = max(src_shards, k * src_shards)
-        # budget learning and mispredict accounting see only the real
-        # morsels: pad/inert ones exit at 0 iterations and would drag every
-        # bucket's learned budget below its true convergence depth
-        # (permanent re-dispatch)
-        n_real = max(1, -(-len(sources) // pol.lanes))
-        # buckets feed only the model's predict/observe; skip the host
-        # work (degrees gather + per-morsel bucketing) when no model will
-        # consume them (online_adapt off, or the budget pinned)
-        buckets = (
-            self._morsel_buckets(sources, pol.lanes)
-            if self.budget_model is not None and self.phase1_iters is None
-            else np.zeros(0, np.int64)
-        )
-        if morsels.shape[0] <= chunk:
-            outcome = run(
-                pol, ec, g, n_pad, jnp.asarray(morsels), state_layout,
-                n_real=n_real, buckets=buckets,
-            )
-            outcome.policy = name
-            self._learn(outcome, buckets, n_real)
-            self.stats.record(outcome)
-            return outcome
-
-        outcomes = []
-        for i in range(0, morsels.shape[0], chunk):
-            part = morsels[i : i + chunk]
-            if part.shape[0] < chunk:  # keep one trace shape per chunk size
-                pad = np.full(
-                    (chunk - part.shape[0], part.shape[1]), n_pad, np.int32
-                )
-                part = np.concatenate([part, pad], axis=0)
-            real_in = max(0, min(chunk, n_real - i))
-            outcomes.append(
-                run(
-                    pol, ec, g, n_pad, jnp.asarray(part), state_layout,
-                    n_real=real_in, buckets=buckets[i : i + real_in],
-                )
-            )
-        result = IFEResult(
-            state=jax.tree.map(
-                lambda *xs: jnp.concatenate([jnp.asarray(x) for x in xs]),
-                *[o.result.state for o in outcomes],
-            ),
-            iterations=jnp.concatenate(
-                [jnp.asarray(o.result.iterations) for o in outcomes]
-            ),
-        )
-        outcome = QueryOutcome(
-            result=result,
-            policy=name,
-            hybrid=any(o.hybrid for o in outcomes),
-            redispatched=sum(o.redispatched for o in outcomes),
-            phase_ms={
-                "phase1": sum(o.phase_ms["phase1"] for o in outcomes),
-                "phase2": sum(o.phase_ms["phase2"] for o in outcomes),
-            },
-            phase1_budget=max(o.phase1_budget for o in outcomes),
-            resumed_ganged=sum(o.resumed_ganged for o in outcomes),
-            resumed_serial=sum(o.resumed_serial for o in outcomes),
-            gang_width=max(o.gang_width for o in outcomes),
-            budget_too_low=sum(o.budget_too_low for o in outcomes),
-            budget_too_high=sum(o.budget_too_high for o in outcomes),
-            budget_inert_slots=sum(o.budget_inert_slots for o in outcomes),
-            budget_observed=sum(o.budget_observed for o in outcomes),
-        )
-        self._learn(outcome, buckets, n_real)
-        self.stats.record(outcome)
-        return outcome
+        self.admissions = {"ntkms": 0, "per_query": 0}
 
     # ----------------------------------------------------------- admission
 
     def submit(self, sources, qid: str | None = None) -> str:
         """Queue one tenant's query for the next ``flush``."""
-        if qid is None:
-            qid = f"q{self._next_qid}"
-            self._next_qid += 1
-        self._pending.append(
-            (qid, np.asarray(sources, np.int32).reshape(-1))
-        )
-        return qid
+        return self._admission.submit(sources, qid=qid).qid
 
     def flush(self) -> dict[str, np.ndarray]:
         """Run all queued queries; returns {qid: levels [k, n_nodes] int32}
@@ -905,36 +75,21 @@ class AdaptiveScheduler:
         runs by itself under the hybrid (packing with too few sources
         would scan the graph for mostly-empty lanes).
         """
-        if not self._pending:
+        if not self._admission.pending():
             return {}
-        pending, self._pending = self._pending, []
-        qids = [q for q, _ in pending]
-        srcs = [s for _, s in pending]
-        all_src = np.concatenate(srcs) if srcs else np.zeros(0, np.int32)
-        n = self.csr.n_nodes
-        name = recommend_policy(
-            len(all_src), self.mesh.size, self.csr.avg_degree,
-            n_nodes=n,
-        )
-        out: dict[str, np.ndarray] = {}
-        if name == "ntkms":
-            self.admissions["ntkms"] += 1
-            outcome = self.query(all_src, policy="ntkms")
-            lanes = np.asarray(outcome.result.state.levels)  # [m, n_pad, L]
-            L = lanes.shape[-1]
-            per_src = (
-                lanes[:, :n, :].transpose(0, 2, 1).reshape(-1, n)
-            ).astype(np.int32)
-            per_src[per_src == 255] = -1
-            i = 0
-            for qid, s in zip(qids, srcs):
-                out[qid] = per_src[i : i + len(s)]
-                i += len(s)
-        else:
-            self.admissions["per_query"] += 1
-            for qid, s in zip(qids, srcs):
-                outcome = self.query(s)
-                out[qid] = np.asarray(outcome.result.state.levels)[
-                    : len(s), :n
-                ].astype(np.int32)
+        plan = self._admission.plan()
+        out: dict[str, np.ndarray] = dict(plan.instant)
+        packed = any(pb.packed for pb in plan.batches)
+        if plan.batches:
+            self.admissions["ntkms" if packed else "per_query"] += 1
+        for pb in plan.batches:
+            outcome = self.query(pb.sources, policy=pb.policy)
+            out.update(unpack_levels(
+                np.asarray(outcome.result.state.levels), pb.spans,
+                self.csr.n_nodes, pb.packed,
+            ))
+            for q in pb.queries:
+                self._admission.complete(q.qid)
+        for qid in plan.instant:
+            self._admission.complete(qid)
         return out

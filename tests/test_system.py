@@ -138,10 +138,15 @@ def test_query_service_end_to_end():
     for i, s in enumerate(srcs):
         np.testing.assert_array_equal(got[i], _bfs(csr, int(s)))
 
-    # engine reuse: same (policy, ec) key must not recompile
-    n_engines = len(svc._engines)
+    # engine reuse: same (policy, ec) key must not recompile — counted
+    # through the EngineCache's public mapping surface
+    cache = svc.scheduler.cache
+    n_engines = len(cache)
+    keys = set(cache.keys())
     svc.query(pick_sources(csr, 4, seed=2), returns_paths=False)
-    assert len(svc._engines) == n_engines
+    assert len(cache) == n_engines
+    assert set(cache.keys()) == keys
+    assert all(k in cache and cache.get(k) is not None for k in keys)
 
     # >= 64 sources -> lane-packed multi-source morsels
     srcs64 = pick_sources(csr, 64, seed=3)
