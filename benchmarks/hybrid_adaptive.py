@@ -95,6 +95,18 @@ def validate(doc: dict) -> None:
     assert doc["summary"]["passes_slot_floor"] is True, doc["summary"]
 
 
+def smoke_line(doc: dict) -> str:
+    """One-line artifact summary for the CI bench-smoke lane."""
+    g = doc["gang"]
+    return (
+        f"{g['survivors']} survivors ganged "
+        f"(occupancy {g['occupancy']:.2f}), phase-2 slots "
+        f"{g['phase2_slots_ganged']} ganged vs "
+        f"{g['phase2_slots_serial']} serial, wall ratio serial/ganged "
+        f"{g['phase2_wall_ratio_serial_over_ganged']:.2f}x"
+    )
+
+
 def skewed_graph(n_pl: int = 400, paths: tuple = (96, 80, 64), seed: int = 0):
     """Powerlaw component (small diameter) + ``len(paths)`` path components
     of staggered diameters in one CSR. Returns (csr, powerlaw_sources,

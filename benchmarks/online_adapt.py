@@ -101,6 +101,17 @@ def validate(doc: dict) -> None:
     assert s["mispredict_rate_online"] < s["mispredict_rate_baseline"], s
 
 
+def smoke_line(doc: dict) -> str:
+    """One-line artifact summary for the CI bench-smoke lane."""
+    s = doc["summary"]
+    return (
+        f"mispredict rate {s['mispredict_rate_online']:.3f} online vs "
+        f"{s['mispredict_rate_baseline']:.3f} static global-p90, "
+        f"threshold refit parity {s['passes_threshold_parity']}, "
+        f"results bit-identical {s['results_bit_identical']}"
+    )
+
+
 def drift_graph(n_pl: int, n_paths: int, path_len: int, seed: int = 0):
     """Powerlaw main component + ``n_paths`` path components in one CSR.
     Returns (csr, shallow_sources, deep_sources): shallow sources are

@@ -7,9 +7,49 @@ non-zero if any paper-claim assertion fails.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
+
+
+def _direction_opt_report(quick: bool) -> None:
+    """Fold the direction-opt artifact into the CSV stream via its
+    versioned v2/v3 loader.
+
+    ``BENCH_DIRECTION_OPT_ARTIFACT`` names an existing artifact to
+    aggregate (v2 slots-only traces still load — the wall fields read as
+    None and the fused rows are simply absent); otherwise the benchmark
+    runs fresh (``--smoke`` under --quick) and its floors gate the suite.
+    """
+    from . import direction_opt
+    from .common import emit
+
+    path = os.environ.get("BENCH_DIRECTION_OPT_ARTIFACT")
+    if path is None:
+        path = "/tmp/BENCH_direction_opt.run.json"
+        argv = ["--out", path] + (["--smoke"] if quick else [])
+        assert direction_opt.main(argv) == 0, "direction_opt floors failed"
+    doc = direction_opt.load(path)
+    v = doc["meta"]["schema_version"]
+    s = doc["summary"]["dense_er"]
+    emit(f"direction_opt_v{v}.dense_er.scan_reduction", 0.0,
+         f"dopt {s['scan_reduction_dopt_vs_push']}x vs push "
+         f"(passes_2x={s['passes_2x']})")
+    pl = doc["summary"].get("powerlaw_binned")
+    if pl is not None:
+        emit(f"direction_opt_v{v}.powerlaw.binned_overhead", 0.0,
+             f"{pl['binned_overhead_vs_ideal']}x ideal "
+             f"(passes={pl['passes_overhead_floor']})")
+    fk = doc["summary"].get("fused_kernel")  # absent from v2 artifacts
+    if fk is not None:
+        emit(f"direction_opt_v{v}.powerlaw.fused_wall",
+             fk["wall_ms_fused"] * 1e3,
+             f"{fk['wall_ratio_fused_over_jnp']}x jnp binned "
+             f"(tol {fk['wall_tolerance']}, "
+             f"passes={fk['passes_fused_wall_floor']})")
+        assert fk["passes_fused_wall_floor"], fk
+    assert s["passes_2x"], s
 
 
 def main() -> int:
@@ -37,6 +77,7 @@ def main() -> int:
         "fig13": lambda: fig13_er_density.main(args.quick),
         "fig14": lambda: fig14_msbfs.main(args.quick),
         "roofline": lambda: roofline.main([]),
+        "direction_opt": lambda: _direction_opt_report(args.quick),
     }
     failures = []
     print("name,us_per_call,derived")

@@ -134,6 +134,19 @@ def validate(doc: dict) -> None:
     assert s["async_p99_ms"] <= s["sync_p99_ms"], s
 
 
+def smoke_line(doc: dict) -> str:
+    """One-line artifact summary for the CI bench-smoke lane."""
+    s = doc["summary"]
+    return (
+        f"sustained warm p99 {s['async_p99_ms']:.1f} ms async vs "
+        f"{s['sync_p99_ms']:.1f} ms sync-flush "
+        f"({s['p99_speedup']:.2f}x), occupancy "
+        f"{doc['async']['overlap_occupancy']:.2f}, bit-identical "
+        f"{s['results_bit_identical']}, zero low-load misses "
+        f"{s['zero_misses_at_low_load']}"
+    )
+
+
 def serving_graph(n_pl: int, n_paths: int, path_len: int, seed: int = 0):
     """Erdos-Renyi main component + path straggler components. ER keeps
     the max degree near the mean, so the padded ELL rows stay narrow and

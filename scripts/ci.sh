@@ -10,9 +10,14 @@
 #   scripts/ci.sh --bench-smoke # perf-trajectory lane: run the direction-opt
 #                               # benchmark on tiny ER + power-law graphs,
 #                               # validate the emitted BENCH_direction_opt.json
-#                               # schema v2 (per-bucket binned-slab fields),
-#                               # the >=2x large-frontier scan reduction AND
-#                               # the <=1.1x binned-pull scan-overhead floor;
+#                               # schema v3 (per-bucket binned-slab fields +
+#                               # per-backend measured-wall joins on the push
+#                               # records), the >=2x large-frontier scan
+#                               # reduction, the <=1.1x binned-pull
+#                               # scan-overhead floor AND the fused-kernel
+#                               # wall floor (fused Pallas binned pull <=
+#                               # jnp binned pull x the documented interpret
+#                               # tolerance; 1.0x on real TPU lowering);
 #                               # then run the hybrid-adaptive benchmark in
 #                               # --smoke mode and validate the emitted
 #                               # BENCH_hybrid_adaptive.json schema plus the
@@ -45,84 +50,46 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 BUDGET="${CI_BUDGET_SECONDS:-1800}"
 
+# Each benchmark validates its own schema before writing and exits nonzero
+# on a missed floor; re-validate the artifact here so a stale/hand-edited
+# file also fails the lane. Modules exposing a versioned `load` (e.g.
+# direction_opt's v2/v3 loader) get it used instead of raw json so schema
+# drift is caught at read time; every module supplies `validate(doc)` and
+# `smoke_line(doc)` (the one-line summary printed below).
+validate_bench() {  # validate_bench <benchmarks-module> <artifact-path>
+  python - "$1" "$2" <<'EOF'
+import importlib, json, sys
+sys.path.insert(0, "benchmarks")
+mod = importlib.import_module(sys.argv[1])
+path = sys.argv[2]
+if hasattr(mod, "load"):
+    doc = mod.load(path)
+else:
+    doc = json.loads(open(path).read())
+mod.validate(doc)
+print(f"bench-smoke OK: {path} schema valid, {mod.smoke_line(doc)}")
+EOF
+}
+
 if [[ "${1:-}" == "--full" ]]; then
   exec timeout --signal=INT "$BUDGET" python -m pytest -x -q
 elif [[ "${1:-}" == "--bench-smoke" ]]; then
   OUT="${BENCH_OUT:-/tmp/BENCH_direction_opt.smoke.json}"
-  # the benchmark validates its own schema before writing and exits nonzero
-  # if the dense-ER reduction or the binned-pull overhead floor is missed
   timeout --signal=INT "$BUDGET" \
     python benchmarks/direction_opt.py --smoke --out "$OUT"
-  python - "$OUT" <<'EOF'
-import json, sys
-sys.path.insert(0, "benchmarks")
-from direction_opt import validate
-doc = json.loads(open(sys.argv[1]).read())
-validate(doc)  # schema v2: per-bucket slab fields + powerlaw floor
-pl = doc["summary"]["powerlaw_binned"]
-assert pl["passes_overhead_floor"], pl
-print(f"bench-smoke OK: {sys.argv[1]} schema valid, "
-      f"dense-ER reduction "
-      f"{doc['summary']['dense_er']['scan_reduction_dopt_vs_push']}x, "
-      f"binned pull {pl['binned_overhead_vs_ideal']}x ideal / "
-      f"{pl['scan_reduction_binned_vs_ell_pull']}x fewer slots than padded "
-      f"pull")
-EOF
+  validate_bench direction_opt "$OUT"
   HOUT="${BENCH_HYBRID_OUT:-/tmp/BENCH_hybrid_adaptive.smoke.json}"
-  # the benchmark validates before writing; re-validate the artifact here
-  # so a stale/hand-edited file also fails the lane
   timeout --signal=INT "$BUDGET" \
     python benchmarks/hybrid_adaptive.py --smoke --out "$HOUT"
-  python - "$HOUT" <<'EOF'
-import json, sys
-sys.path.insert(0, "benchmarks")
-from hybrid_adaptive import validate
-doc = json.loads(open(sys.argv[1]).read())
-validate(doc)  # schema + the ganged-vs-serial phase-2 iteration-slot floor
-g = doc["gang"]
-print(f"bench-smoke OK: {sys.argv[1]} schema valid, "
-      f"{g['survivors']} survivors ganged (occupancy {g['occupancy']:.2f}), "
-      f"phase-2 slots {g['phase2_slots_ganged']} ganged vs "
-      f"{g['phase2_slots_serial']} serial, wall ratio serial/ganged "
-      f"{g['phase2_wall_ratio_serial_over_ganged']:.2f}x")
-EOF
+  validate_bench hybrid_adaptive "$HOUT"
   AOUT="${BENCH_ONLINE_OUT:-/tmp/BENCH_online_adapt.smoke.json}"
-  # the benchmark validates before writing; re-validate the artifact here
-  # so a stale/hand-edited file also fails the lane
   timeout --signal=INT "$BUDGET" \
     python benchmarks/online_adapt.py --smoke --out "$AOUT"
-  python - "$AOUT" <<'EOF'
-import json, sys
-sys.path.insert(0, "benchmarks")
-from online_adapt import validate
-doc = json.loads(open(sys.argv[1]).read())
-validate(doc)  # schema + mispredict-rate floor + threshold-refit parity
-s = doc["summary"]
-print(f"bench-smoke OK: {sys.argv[1]} schema valid, mispredict rate "
-      f"{s['mispredict_rate_online']:.3f} online vs "
-      f"{s['mispredict_rate_baseline']:.3f} static global-p90, "
-      f"threshold refit parity {s['passes_threshold_parity']}, "
-      f"results bit-identical {s['results_bit_identical']}")
-EOF
+  validate_bench online_adapt "$AOUT"
   SOUT="${BENCH_SERVING_OUT:-/tmp/BENCH_serving_slo.smoke.json}"
-  # the benchmark validates before writing; re-validate the artifact here
-  # so a stale/hand-edited file also fails the lane
   timeout --signal=INT "$BUDGET" \
     python benchmarks/serving_slo.py --smoke --out "$SOUT"
-  python - "$SOUT" <<'EOF'
-import json, sys
-sys.path.insert(0, "benchmarks")
-from serving_slo import validate
-doc = json.loads(open(sys.argv[1]).read())
-validate(doc)  # schema + occupancy/p99/bit-identity/zero-miss floors
-s = doc["summary"]
-print(f"bench-smoke OK: {sys.argv[1]} schema valid, sustained warm p99 "
-      f"{s['async_p99_ms']:.1f} ms async vs {s['sync_p99_ms']:.1f} ms "
-      f"sync-flush ({s['p99_speedup']:.2f}x), occupancy "
-      f"{doc['async']['overlap_occupancy']:.2f}, bit-identical "
-      f"{s['results_bit_identical']}, zero low-load misses "
-      f"{s['zero_misses_at_low_load']}")
-EOF
+  validate_bench serving_slo "$SOUT"
 else
   FAST_BUDGET="${FAST_LANE_BUDGET_SECONDS:-900}"
   START=$(date +%s)

@@ -30,6 +30,8 @@ from .policies import (
 )
 from .extend import (
     BACKENDS,
+    STATS_WIDTH,
+    BackendCostProbe,
     ExtendSpec,
     GraphOperands,
     as_spec,

@@ -44,6 +44,7 @@ from ..graph.csr import CSRGraph, EllGraph, ShardedBlocks
 from .collectives import gang_merge_scatter, merge_contribution, merge_scatter
 from .edge_compute import EDGE_COMPUTES
 from .extend import (
+    STATS_WIDTH,
     ExtendCtx,
     ExtendSpec,
     GraphOperands,
@@ -126,6 +127,12 @@ def strip_operands(spec: ExtendSpec, ops: GraphOperands):
             "degree-binned reverse operands; use "
             "prepare_graph(..., extend=spec)"
         )
+    if spec.needs_binned_pack and ops.rev_binned_pack is None:
+        raise ValueError(
+            f"engine extend={spec.backend}/{spec.direction} needs the "
+            "fused-kernel binned operand pack; use "
+            "prepare_graph(..., extend=spec)"
+        )
     if spec.needs_blocks and ops.blocks is None:
         raise ValueError(
             "engine extend=block_mxu needs block operands; use "
@@ -135,6 +142,9 @@ def strip_operands(spec: ExtendSpec, ops: GraphOperands):
         fwd=ops.fwd,
         rev=ops.rev if spec.needs_rev else None,
         rev_binned=ops.rev_binned if spec.needs_binned else None,
+        rev_binned_pack=(
+            ops.rev_binned_pack if spec.needs_binned_pack else None
+        ),
         blocks=ops.blocks if spec.needs_blocks else None,
     )
 
@@ -177,6 +187,21 @@ def _operand_specs(spec: ExtendSpec, ga: tuple[str, ...], operands=None):
     )
 
 
+def _stats_bin_widths(ops: GraphOperands):
+    """Per-local-row binned slab widths for the stats tap's pull-cost
+    columns, derived from the CALL-TIME operands (inv is data, not shape:
+    a same-structure graph may bin rows differently); ``None`` (the tap
+    records ``-1``) when the engine scans no binned slabs."""
+    if ops.rev_binned is None:
+        return None
+    bn = ops.rev_binned
+    wvec = jnp.concatenate([
+        jnp.full((s.shape[-2],), s.shape[-1], jnp.float32)
+        for s in bn.slabs
+    ])  # slab width per binned position (this shard's slice)
+    return wvec[bn.inv[0]]
+
+
 def build_engine(
     mesh: Mesh,
     policy: MorselPolicy,
@@ -195,15 +220,17 @@ def build_engine(
     pull slabs); optional for the other backends.
 
     ``collect_stats``: the online-policy sample tap. The engine's fn
-    returns ``(IFEResult, stats)`` where ``stats[m, cap, 4]`` holds each
-    morsel's per-iteration ``extend.frontier_stats`` record — the Beamer
-    predicate's inputs (n_f, m_f, m_u) plus the binned-pull scan cost
-    (-1 when the operand bundle carries no binned slabs) — written into
-    the while_loop carry at the state about to extend (row ``it`` is the
-    it-th iteration's sample; rows at/after the morsel's trip count stay
-    zero). A pure readout: result state is bit-identical to the
-    untapped engine. The adaptive scheduler drains these samples into
-    its in-flight ``DirectionThresholds`` refit.
+    returns ``(IFEResult, stats)`` where ``stats[m, cap, STATS_WIDTH]``
+    holds each morsel's per-iteration ``extend.frontier_stats`` record —
+    the Beamer predicate's inputs (n_f, m_f, m_u) plus the binned-pull
+    scan cost and measured-cost columns (-1 when the operand bundle
+    carries no binned slabs) — written into the while_loop carry at the
+    state about to extend (row ``it`` is the it-th iteration's sample;
+    rows at/after the morsel's trip count stay zero). A pure readout:
+    result state is bit-identical to the untapped engine. The adaptive
+    scheduler drains these samples into its in-flight
+    ``DirectionThresholds`` refit. The resume/gang builders take the
+    same flag, so a survivor's post-budget tail feeds the learners too.
 
     ``state_layout``:
 
@@ -261,18 +288,7 @@ def build_engine(
             or_impl=policy.or_impl,
             sharded=sharded,
         )
-        # per-local-row binned slab widths for the stats tap's pull-cost
-        # column, derived from the CALL-TIME operands (inv is data, not
-        # shape: a same-structure graph may bin rows differently); the
-        # tap records -1 when the engine scans no binned slabs
-        bw = None
-        if collect_stats and ops.rev_binned is not None:
-            bn = ops.rev_binned
-            wvec = jnp.concatenate([
-                jnp.full((s.shape[-2],), s.shape[-1], jnp.float32)
-                for s in bn.slabs
-            ])  # slab width per binned position (this shard's slice)
-            bw = wvec[bn.inv[0]]
+        bw = _stats_bin_widths(ops) if collect_stats else None
 
         def one_morsel(srcs):
             if sharded:
@@ -317,7 +333,9 @@ def build_engine(
 
             init = (state0, jnp.int32(0))
             if collect_stats:
-                init = init + (jnp.zeros((cap, 4), jnp.float32),)
+                init = init + (
+                    jnp.zeros((cap, STATS_WIDTH), jnp.float32),
+                )
             carry = lax.while_loop(cond, body, init)
             res = IFEResult(state=carry[0], iterations=carry[1])
             return (res, carry[2]) if collect_stats else res
@@ -341,7 +359,7 @@ def build_engine(
     else:
         out_spec = P(sa if sa else None)
     if collect_stats:
-        # stats stack over morsels like iterations: [m, cap, 4]
+        # stats stack over morsels like iterations: [m, cap, STATS_WIDTH]
         out_spec = (out_spec, P(sa if sa else None))
     fn = jax.jit(
         shard_map(
@@ -370,6 +388,7 @@ def build_resume_engine(
     max_iters: int | None = None,
     extend="ell_push",
     operands=None,
+    collect_stats: bool = False,
 ) -> QueryEngine:
     """Phase-2 (re-dispatch) engine of the adaptive hybrid.
 
@@ -382,6 +401,12 @@ def build_resume_engine(
     the whole query under one engine. Morsels whose frontier is already
     empty are inert (zero-trip while_loop), so callers may pad the morsel
     batch freely to stabilize trace shapes.
+
+    ``collect_stats``: same tap as ``build_engine`` — ``fn`` returns
+    ``(IFEResult, stats)`` with ``stats[m, cap, STATS_WIDTH]``; each
+    resumed iteration's record lands at its ABSOLUTE iteration row
+    (``it``, which starts at ``it0``), so rows below ``it0`` stay zero
+    and phase-1/phase-2 samples for a morsel never collide.
 
     The returned engine's ``fn`` signature is ``fn(graph, state0, it0)``.
     """
@@ -408,12 +433,13 @@ def build_resume_engine(
             axes=tuple(ga),
             or_impl=policy.or_impl,
         )
+        bw = _stats_bin_widths(ops) if collect_stats else None
 
         def one_morsel(args):
             state_m, it_m = args
 
             def cond(carry):
-                state, it = carry
+                state, it = carry[0], carry[1]
                 active = jnp.any(state.frontier != 0)
                 if sync_axes:
                     active = (
@@ -422,27 +448,42 @@ def build_resume_engine(
                 return active & (it < cap)
 
             def body(carry):
-                state, it = carry
+                state, it = carry[0], carry[1]
+                if collect_stats:
+                    rec = frontier_stats(ops, state, ctx, bin_widths=bw)
+                    stats = lax.dynamic_update_slice_in_dim(
+                        carry[2], rec[None, :], it, axis=0
+                    )
                 contribution = ec.extend(be, ops, state, ctx)
                 merged = merge_contribution(
                     ec.MERGE, contribution, ga, policy.or_impl
                 )
-                return ec.apply(state, merged, it), it + 1
+                out = (ec.apply(state, merged, it), it + 1)
+                return out + ((stats,) if collect_stats else ())
 
-            state, iters = lax.while_loop(cond, body, (state_m, it_m))
-            return IFEResult(state=state, iterations=iters)
+            init = (state_m, it_m)
+            if collect_stats:
+                init = init + (
+                    jnp.zeros((cap, STATS_WIDTH), jnp.float32),
+                )
+            carry = lax.while_loop(cond, body, init)
+            res = IFEResult(state=carry[0], iterations=carry[1])
+            return (res, carry[2]) if collect_stats else res
 
         return lax.map(one_morsel, (state0, it0))
 
     g_specs = _operand_specs(spec, ga, operands)
     # state/it0 replicated in, outputs replicated (post-merge state is
     # identical on every device of the graph group)
+    out_spec = IFEResult(state=P(), iterations=P())
+    if collect_stats:
+        out_spec = (out_spec, P())
     fn = jax.jit(
         shard_map(
             worker,
             mesh,
             in_specs=(g_specs, P(), P()),
-            out_specs=IFEResult(state=P(), iterations=P()),
+            out_specs=out_spec,
         )
     )
     return QueryEngine(
@@ -465,6 +506,7 @@ def build_gang_resume_engine(
     extend="ell_push",
     operands=None,
     state_layout: str = "replicated",
+    collect_stats: bool = False,
 ) -> QueryEngine:
     """Gang-scheduled phase-2 (re-dispatch) engine of the adaptive hybrid.
 
@@ -497,6 +539,13 @@ def build_gang_resume_engine(
     billion-node morsels get a phase 2 at all. Callers hand state over via
     ``collectives.gang_handoff``.
 
+    ``collect_stats``: same tap as ``build_engine`` — ``fn`` returns
+    ``(IFEResult, stats)`` with ``stats[S_pad, cap, STATS_WIDTH]``.
+    Records are written per live morsel at its own ABSOLUTE iteration
+    row (counters start at ``it0``); inert/converged morsels' rows are
+    left untouched, so the gang tap is sample-identical to draining the
+    survivors one-at-a-time through the serial resume tap.
+
     The returned engine's ``fn`` signature is ``fn(graph, state0, it0)``.
     """
     ec = EDGE_COMPUTES[edge_compute]
@@ -526,6 +575,7 @@ def build_gang_resume_engine(
             or_impl=policy.or_impl,
             sharded=sharded,
         )
+        bw = _stats_bin_widths(ops) if collect_stats else None
 
         def live(state, it):
             # [S_pad] bool: morsels whose own frontier is still globally
@@ -537,12 +587,24 @@ def build_gang_resume_engine(
             return act & (it < cap)
 
         def cond(carry):
-            state, it = carry
+            state, it = carry[0], carry[1]
             return jnp.any(live(state, it))
 
         def body(carry):
-            state, it = carry
+            state, it = carry[0], carry[1]
             mask = live(state, it)
+            if collect_stats:
+                # one record per live gang member at its OWN absolute
+                # iteration row (frontier_stats psums over the graph
+                # axes internally, so recs are replicated like iters)
+                recs = jax.vmap(
+                    lambda st: frontier_stats(ops, st, ctx, bin_widths=bw)
+                )(state)
+                s_ix = jnp.arange(recs.shape[0])
+                idx = jnp.clip(it, 0, cap - 1)
+                stats = carry[2].at[s_ix, idx].set(
+                    jnp.where(mask[:, None], recs, carry[2][s_ix, idx])
+                )
             contribution = ec.gang_extend(be, ops, state, ctx)
             if sharded:
                 merged = gang_merge_scatter(
@@ -558,10 +620,17 @@ def build_gang_resume_engine(
                 lambda new, old: jnp.where(bmask(new), new, old),
                 applied, state,
             )
-            return new_state, it + mask.astype(it.dtype)
+            out = (new_state, it + mask.astype(it.dtype))
+            return out + ((stats,) if collect_stats else ())
 
-        state, iters = lax.while_loop(cond, body, (state0, it0))
-        return IFEResult(state=state, iterations=iters)
+        init = (state0, it0)
+        if collect_stats:
+            init = init + (
+                jnp.zeros((it0.shape[0], cap, STATS_WIDTH), jnp.float32),
+            )
+        carry = lax.while_loop(cond, body, init)
+        res = IFEResult(state=carry[0], iterations=carry[1])
+        return (res, carry[2]) if collect_stats else res
 
     g_specs = _operand_specs(spec, ga, operands)
     if sharded:
@@ -576,6 +645,8 @@ def build_gang_resume_engine(
         )
     else:
         in_state, out_spec = P(), IFEResult(state=P(), iterations=P())
+    if collect_stats:
+        out_spec = (out_spec, P())
     fn = jax.jit(
         shard_map(
             worker,
@@ -644,14 +715,21 @@ def prepare_graph(
 
     k_shards = k_policy
     rev_binned = None
+    rev_binned_pack = None
+    leaf_sharding = lambda x: NamedSharding(
+        mesh, P(ga if ga else None, *(None,) * (x.ndim - 1))
+    )
     if ops.rev_binned is not None:
         bn = ops.rev_binned
         assert bn.rows_local * k_shards == n_pad, (bn.rows_local, k_shards)
-        leaf_sharding = lambda x: NamedSharding(
-            mesh, P(ga if ga else None, *(None,) * (x.ndim - 1))
-        )
         rev_binned = jax.tree.map(
             lambda x: jax.device_put(x, leaf_sharding(x)), bn
+        )
+    if ops.rev_binned_pack is not None:
+        # same stacked-shard leading-axis layout as the jnp slabs
+        rev_binned_pack = jax.tree.map(
+            lambda x: jax.device_put(x, leaf_sharding(x)),
+            ops.rev_binned_pack,
         )
     blocks = None
     if ops.blocks is not None:
@@ -683,6 +761,7 @@ def prepare_graph(
         fwd=put_ell(ops.fwd),
         rev=None if ops.rev is None else put_ell(ops.rev),
         rev_binned=rev_binned,
+        rev_binned_pack=rev_binned_pack,
         blocks=blocks,
     )
     return ops, n_pad
@@ -712,8 +791,9 @@ def run_recursive_query(
 ) -> IFEResult:
     """End-to-end: the paper Fig 3 IFETask. Returns states stacked over
     morsels: leaves have leading dim n_morsels (global). ``extend`` selects
-    the frontier-extension backend ("ell_push" | "ell_pull" | "block_mxu" |
-    "dopt"/ExtendSpec) — results are bit-identical across all of them."""
+    the frontier-extension backend ("ell_push" | "ell_pull" | "pull_binned"
+    | "pull_binned_fused" | "block_mxu" | "dopt"/ExtendSpec) — results are
+    bit-identical across all of them."""
     spec = as_spec(extend)
     g, n_pad = prepare_graph(csr, mesh, policy, max_deg, extend=spec)
     src_shards = _axes_size(mesh, policy.source_axes)

@@ -25,6 +25,11 @@ direction-optimizing switch:
   the EmptyHeaded lesson (degree-specialized physical layouts) applied to
   the bottom-up direction, which is what makes pull (and therefore the
   Beamer switch) profitable on skewed graphs.
+- ``pull_binned_fused`` — the same contract and the same binned slabs,
+  realized by the fused Pallas kernel (``kernels.binned_pull``): per-slab
+  gathers, reductions, the un-permute, and the visited suppression in one
+  VMEM pass per row tile, with ``pl.when``-gated skipping of fully-visited
+  tiles. Bit-identical to ``pull_binned``; the raw-speed realization.
 - ``block_mxu`` — the saturating-matmul path over the per-shard block-sparse
   adjacency (``ShardedBlocks``), upgraded to skip frontier-empty source
   row-block *stripes* (a per-row-block activity bitmap masks contributions;
@@ -59,12 +64,18 @@ built once host-side by ``core.dispatcher.prepare_graph`` /
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..kernels.binned_pull.ops import (
+    BinnedPullPack,
+    binned_pull as _fused_pull,
+    build_pack as build_binned_pack,
+)
 from ..graph.csr import (
     BinnedRevEll,
     CSRGraph,
@@ -88,7 +99,9 @@ from .edge_compute import (
     ell_reach_lanes,
 )
 
-BACKENDS = ("ell_push", "ell_pull", "pull_binned", "block_mxu")
+BACKENDS = (
+    "ell_push", "ell_pull", "pull_binned", "pull_binned_fused", "block_mxu"
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,19 +109,20 @@ class ExtendSpec:
     """Static configuration of the extension step (hashable: engine-cache
     key material and jit static argument)."""
 
-    backend: str = "ell_push"  # ell_push | ell_pull | pull_binned | block_mxu
+    backend: str = "ell_push"  # one of BACKENDS
     direction: str = "fixed"  # fixed | auto (Beamer push/pull switch)
     alpha: float = 14.0  # pull when m_frontier > m_unexplored / alpha
     beta: float = 24.0  # ... and n_frontier > n / beta
     block: int = 128  # tile size of the block_mxu operand
-    pull: str = "binned"  # auto's bottom-up flavor: binned slabs | padded ell
+    pull: str = "binned"  # auto's bottom-up flavor:
+    #                       binned slabs | fused-kernel slabs | padded ell
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
             raise ValueError(f"unknown extension backend: {self.backend}")
         if self.direction not in ("fixed", "auto"):
             raise ValueError(f"unknown direction mode: {self.direction}")
-        if self.pull not in ("binned", "ell"):
+        if self.pull not in ("binned", "binned_fused", "ell"):
             raise ValueError(f"unknown pull flavor: {self.pull}")
         if self.direction == "auto" and self.backend != "ell_push":
             # the auto switch IS the backend choice (push vs pull); pinning
@@ -128,9 +142,19 @@ class ExtendSpec:
 
     @property
     def needs_binned(self) -> bool:
-        """Scans the degree-binned reverse slabs."""
-        return self.backend == "pull_binned" or (
-            self.direction == "auto" and self.pull == "binned"
+        """Scans the degree-binned reverse slabs (the fused kernel keeps
+        them too: ``frontier_stats``' pull-slot accounting reads the
+        unpadded slab widths)."""
+        return self.backend in ("pull_binned", "pull_binned_fused") or (
+            self.direction == "auto"
+            and self.pull in ("binned", "binned_fused")
+        )
+
+    @property
+    def needs_binned_pack(self) -> bool:
+        """Scans the kernel-ready row-padded repack of the binned slabs."""
+        return self.backend == "pull_binned_fused" or (
+            self.direction == "auto" and self.pull == "binned_fused"
         )
 
     @property
@@ -150,6 +174,7 @@ _ALIASES = {
     "auto": ExtendSpec(direction="auto"),
     "dopt_ell": ExtendSpec(direction="auto", pull="ell"),
     "dopt_binned": ExtendSpec(direction="auto", pull="binned"),
+    "dopt_fused": ExtendSpec(direction="auto", pull="binned_fused"),
 }
 
 
@@ -180,6 +205,7 @@ class GraphOperands:
     fwd: EllGraph
     rev: Optional[EllGraph] = None
     rev_binned: Optional[BinnedRevEll] = None
+    rev_binned_pack: Optional[BinnedPullPack] = None
     blocks: Optional[ShardedBlocks] = None
 
     @property
@@ -221,14 +247,23 @@ def build_operands(
         rev = pad_ell(ell_from_csr(eff.reverse()), shards, block=pad_block)
         assert rev.n_nodes == n_pad, (rev.n_nodes, n_pad)
     rev_binned = None
+    rev_binned_pack = None
     if spec.needs_binned:
         k = shards if binned_shards is None else int(binned_shards)
         rev_binned = binned_rev_csr(eff, n_pad, k)
+        if spec.needs_binned_pack:
+            rev_binned_pack = build_binned_pack(rev_binned, n_pad)
     blocks = None
     if spec.needs_blocks:
         blocks = sharded_blocks_from_csr(eff, n_pad, shards, spec.block)
     return (
-        GraphOperands(fwd=fwd, rev=rev, rev_binned=rev_binned, blocks=blocks),
+        GraphOperands(
+            fwd=fwd,
+            rev=rev,
+            rev_binned=rev_binned,
+            rev_binned_pack=rev_binned_pack,
+            blocks=blocks,
+        ),
         n_pad,
     )
 
@@ -710,6 +745,130 @@ class BinnedPullBackend:
 
 
 # ---------------------------------------------------------------------------
+# pull_binned_fused — the binned pull realized by the fused Pallas kernel.
+# ---------------------------------------------------------------------------
+
+
+class FusedBinnedPullBackend:
+    """``pull_binned`` realized by the fused slab-major Pallas kernel.
+
+    Same binned reverse edge set, same reductions, same suppression —
+    bit-identical final states — but gathers, reductions, un-permute and
+    suppression happen in one VMEM pass per row tile
+    (``kernels.binned_pull``), with fully-visited row tiles skipped via the
+    scalar-prefetched activity bitmap. Scans ``ops.rev_binned_pack``, the
+    row-padded kernel repack of the same ``BinnedRevEll``.
+    """
+
+    name = "pull_binned_fused"
+
+    # -- collective-free cores (global activation tensors precomputed) ------
+
+    @staticmethod
+    def _reach_dense(ops, gf, visited, ctx):
+        pk = ops.rev_binned_pack
+        vloc = (
+            None
+            if visited is None
+            else _local_state(visited, pk.rows_local, ctx)
+        )
+        reached = _fused_pull(
+            pk, gf.astype(jnp.uint8), vloc, op="reach"
+        )
+        return _place_rows(reached != 0, ctx, False)
+
+    @staticmethod
+    def _reach_lanes(ops, gl, visited, ctx):
+        pk = ops.rev_binned_pack
+        vloc = (
+            None
+            if visited is None
+            else _local_state(visited, pk.rows_local, ctx)
+        )
+        reached = _fused_pull(pk, gl, vloc, op="reach_lanes")
+        return _place_rows(reached.astype(gl.dtype), ctx, 0)
+
+    @staticmethod
+    def _min_parent(ops, gf, visited, ctx):
+        pk = ops.rev_binned_pack
+        vloc = (
+            None
+            if visited is None
+            else _local_state(visited, pk.rows_local, ctx)
+        )
+        cand = _fused_pull(
+            pk, gf.astype(jnp.uint8), vloc, op="min_parent"
+        )
+        return _place_rows(cand, ctx, NO_PARENT)
+
+    @staticmethod
+    def _min_parent_lanes(ops, gl, visited, ctx):
+        pk = ops.rev_binned_pack
+        vloc = (
+            None
+            if visited is None
+            else _local_state(visited, pk.rows_local, ctx)
+        )
+        cand = _fused_pull(pk, gl, vloc, op="min_parent_lanes")
+        return _place_rows(cand, ctx, NO_PARENT)
+
+    @staticmethod
+    def _min_dist(ops, gdu, ctx):
+        pk = ops.rev_binned_pack
+        cand = _fused_pull(pk, gdu, None, op="min_dist")
+        return _place_rows(cand, ctx, jnp.float32(jnp.inf))
+
+    # -- public contract ----------------------------------------------------
+
+    @staticmethod
+    def reach_dense(ops, frontier, visited, ctx):
+        return FusedBinnedPullBackend._reach_dense(
+            ops, _global_or(frontier, ctx), visited, ctx
+        )
+
+    @staticmethod
+    def reach_lanes(ops, lanes, visited, ctx):
+        return FusedBinnedPullBackend._reach_lanes(
+            ops, _global_or(lanes, ctx), visited, ctx
+        )
+
+    @staticmethod
+    def min_parent(ops, frontier, visited, ctx):
+        return FusedBinnedPullBackend._min_parent(
+            ops, _global_or(frontier, ctx), visited, ctx
+        )
+
+    @staticmethod
+    def min_parent_lanes(ops, lanes, visited, ctx):
+        return FusedBinnedPullBackend._min_parent_lanes(
+            ops, _global_or(lanes, ctx), visited, ctx
+        )
+
+    @staticmethod
+    def min_dist(ops, dist, frontier, ctx):
+        du = jnp.where(frontier, dist, jnp.inf)
+        return FusedBinnedPullBackend._min_dist(
+            ops, _global_min(du, ctx, jnp.float32(jnp.inf)), ctx
+        )
+
+    @staticmethod
+    def reach_parent_dense(ops, frontier, visited, ctx):
+        gf = _global_or(frontier, ctx)  # one union serves both scans
+        return (
+            FusedBinnedPullBackend._reach_dense(ops, gf, visited, ctx),
+            FusedBinnedPullBackend._min_parent(ops, gf, visited, ctx),
+        )
+
+    @staticmethod
+    def reach_parent_lanes(ops, lanes, visited, ctx):
+        gl = _global_or(lanes, ctx)
+        return (
+            FusedBinnedPullBackend._reach_lanes(ops, gl, visited, ctx),
+            FusedBinnedPullBackend._min_parent_lanes(ops, gl, visited, ctx),
+        )
+
+
+# ---------------------------------------------------------------------------
 # block_mxu — saturating matmul over per-shard blocks with stripe skipping.
 # ---------------------------------------------------------------------------
 
@@ -808,22 +967,40 @@ def _predicate_locals(ops, frontier, visited, ctx: ExtendCtx):
     return n_f, m_f, m_u, unvis
 
 
+#: columns of one ``frontier_stats`` sample (and of the ``collect_stats``
+#: carry rows the engine builders write)
+STATS_WIDTH = 6
+#: bytes one int32 adjacency slot streams through an extension scan
+#: (4 B neighbor id + 1 B activation read/write) — the analytic factor the
+#: measured-cost lane multiplies slot counts by
+BYTES_PER_SLOT = 5.0
+
+
 def frontier_stats(ops, state, ctx: ExtendCtx, bin_widths=None):
     """One per-iteration sample for the online direction-threshold
-    learner: ``[n_f, m_f, m_u, pull_slots_binned]`` (float32, reduced
-    over ``ctx.axes``) of the state ABOUT to extend — the inputs of the
-    Beamer predicate plus the slots a degree-binned pull would scan at
-    this state (the widths of the still-unvisited rows; full capacity
-    when the edge compute keeps no visited set). ``bin_widths`` is this
-    shard's per-local-row slab width vector; when the engine's operands
-    carry no binned slabs the cost column is the sentinel ``-1`` and the
-    record is skipped by ``fit_direction_thresholds``.
+    learner: ``[n_f, m_f, m_u, pull_slots_binned, wall_ms, pull_bytes]``
+    (float32, reduced over ``ctx.axes``) of the state ABOUT to extend —
+    the inputs of the Beamer predicate plus the slots a degree-binned
+    pull would scan at this state (the widths of the still-unvisited
+    rows; full capacity when the edge compute keeps no visited set).
+    ``bin_widths`` is this shard's per-local-row slab width vector; when
+    the engine's operands carry no binned slabs the cost columns are the
+    sentinel ``-1`` and the record is skipped by
+    ``fit_direction_thresholds``.
 
-    This is the sample tap ``build_engine(collect_stats=True)`` writes
-    into the phase-1 while_loop carry: a pure readout of (frontier,
-    visited), so instrumented engines stay bit-identical in result
-    state. Semantics match benchmarks/direction_opt.py's host-side
-    accounting record-for-record.
+    The measured-cost lane: ``pull_bytes`` is the device-computable
+    analytic stream volume (``BYTES_PER_SLOT`` × slots); ``wall_ms`` is a
+    *host-filled* column — it stays at the ``-1`` sentinel on device and
+    the dispatcher's :class:`BackendCostProbe` converts slot columns to
+    per-backend wall estimates when a ``cost="measured"`` consumer asks
+    (device-time via a profiler hook on real TPU, ``time.perf_counter``
+    under interpret/CPU).
+
+    This is the sample tap ``build_engine(collect_stats=True)`` (and the
+    resume/gang builders') writes into the while_loop carry: a pure
+    readout of (frontier, visited), so instrumented engines stay
+    bit-identical in result state. Semantics match
+    benchmarks/direction_opt.py's host-side accounting record-for-record.
     """
     frontier = state.frontier
     visited = getattr(state, "visited", None)
@@ -834,11 +1011,14 @@ def frontier_stats(ops, state, ctx: ExtendCtx, bin_widths=None):
         pull = bin_widths.sum()
     else:
         pull = jnp.sum(bin_widths * unvis)
-    stats = jnp.stack([n_f, m_f, m_u, pull])
+    stats = jnp.stack(
+        [n_f, m_f, m_u, pull, jnp.float32(0.0), pull * BYTES_PER_SLOT]
+    )
     if ctx.axes:
         stats = lax.psum(stats, ctx.axes)
+    stats = stats.at[4].set(-1.0)  # wall: host-filled, never device-summed
     if bin_widths is None:
-        stats = stats.at[3].set(-1.0)
+        stats = stats.at[3].set(-1.0).at[5].set(-1.0)
     return stats
 
 
@@ -856,11 +1036,14 @@ class AutoBackend:
     def __init__(self, spec: ExtendSpec):
         self.alpha = spec.alpha
         self.beta = spec.beta
-        # bottom-up flavor of the switch: degree-binned slabs (default)
-        # or the single padded reverse ELL — same math, different scan
-        self.pull_be = (
-            BinnedPullBackend if spec.pull == "binned" else PullBackend
-        )
+        # bottom-up flavor of the switch: degree-binned slabs (default),
+        # the fused kernel over the same slabs, or the single padded
+        # reverse ELL — same math, different scan
+        self.pull_be = {
+            "binned": BinnedPullBackend,
+            "binned_fused": FusedBinnedPullBackend,
+            "ell": PullBackend,
+        }[spec.pull]
 
     def _use_pull(self, ops, frontier, visited, ctx):
         n_f, m_f, m_u, _ = _predicate_locals(ops, frontier, visited, ctx)
@@ -945,6 +1128,7 @@ _FIXED = {
     "ell_push": PushBackend,
     "ell_pull": PullBackend,
     "pull_binned": BinnedPullBackend,
+    "pull_binned_fused": FusedBinnedPullBackend,
     "block_mxu": BlockBackend,
 }
 
@@ -954,3 +1138,71 @@ def make_backend(spec: ExtendSpec):
     if spec.direction == "auto":
         return AutoBackend(spec)
     return _FIXED[spec.backend]
+
+
+class BackendCostProbe:
+    """Measured per-slot extension cost — the ``cost="measured"`` lane.
+
+    ``rates(ops, n_pad)`` times one jitted ``reach_dense`` step per backend
+    the operand bundle supports (push always; jnp binned pull and the fused
+    kernel when their operands are present) against a half-full frontier,
+    and divides by each backend's full-scan slot count. The resulting
+    ms/slot rates convert the slot columns of ``frontier_stats`` samples
+    into per-iteration wall estimates without perturbing the engines — the
+    probe runs out-of-band on the same device-placed operands.
+
+    Timing source: ``device_timer(fn, *args) -> ms`` when given (on real
+    TPU, a profiler hook reading device time / DMA bytes); otherwise the
+    host fallback — ``block_until_ready`` + ``time.perf_counter`` median of
+    ``reps``, which is what interpret/CPU CI exercises.
+    """
+
+    #: probed backends → the slot count their full scan pays
+    def __init__(self, reps: int = 3, device_timer=None):
+        self.reps = int(reps)
+        self.device_timer = device_timer
+
+    def measure_ms(self, fn, *args) -> float:
+        if self.device_timer is not None:
+            return float(self.device_timer(fn, *args))
+        jax.block_until_ready(fn(*args))  # compile outside the timing
+        walls = []
+        for _ in range(self.reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            walls.append((time.perf_counter() - t0) * 1e3)
+        walls.sort()
+        return walls[len(walls) // 2]
+
+    def rates(self, ops, n_pad: int) -> dict:
+        """``{backend: {"ms_per_slot", "bytes_per_slot", "probe_ms",
+        "slots"}}`` for every backend ``ops`` can run. Bytes are the
+        analytic ``BYTES_PER_SLOT`` stream volume; wall is measured."""
+        ops = as_operands(ops)
+        ctx = ExtendCtx(n_out=n_pad)
+        frontier = (
+            jnp.arange(n_pad) < max(n_pad // 2, 1)
+        )  # half-full: both directions do real work
+        visited = jnp.zeros(n_pad, jnp.bool_)
+        probes = {"ell_push": (PushBackend, int(ops.fwd.indices.size))}
+        if ops.rev_binned is not None:
+            probes["pull_binned"] = (
+                BinnedPullBackend, ops.rev_binned.capacity_slots
+            )
+        if ops.rev_binned_pack is not None:
+            probes["pull_binned_fused"] = (
+                FusedBinnedPullBackend, ops.rev_binned_pack.capacity_slots
+            )
+        out = {}
+        for name, (be, slots) in probes.items():
+            fn = jax.jit(
+                lambda f, v, be=be: be.reach_dense(ops, f, v, ctx)
+            )
+            ms = self.measure_ms(fn, frontier, visited)
+            out[name] = {
+                "ms_per_slot": ms / max(slots, 1),
+                "bytes_per_slot": BYTES_PER_SLOT,
+                "probe_ms": ms,
+                "slots": slots,
+            }
+        return out

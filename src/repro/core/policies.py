@@ -30,6 +30,10 @@ can be replaced by thresholds fitted per (dataset-family, degree-bucket)
 from the per-iteration scan traces ``benchmarks/direction_opt.py``
 accumulates in ``BENCH_direction_opt.json`` — or, online, from the
 scheduler's own live sample tap (``AdaptiveScheduler.online_trace``).
+The fit minimizes either scan-slot counts (``cost="slots"``, the
+deterministic proxy) or probe-measured wall-ms per backend
+(``cost="measured"``, schema-v3 traces / the scheduler's lazy
+``BackendCostProbe`` annotation).
 
 ``BudgetModel`` is the same measure/quantize/serve loop for the hybrid's
 *phase-1 iteration budget*: per-(dataset-family, source-degree-bucket)
@@ -404,11 +408,15 @@ def _boundary_candidates(vals, anchor: float) -> list:
     return sorted({cands[i] for i in idx} | {anchor, 0.0})
 
 
-def _fit_group(recs: list[tuple], pull_key: str) -> tuple:
+def _fit_group(recs: list[tuple], push_key: str, pull_key: str) -> tuple:
     """One (family, bucket) group: pick (alpha, beta) minimizing the total
-    scanned slots the Beamer predicate would have chosen over the trace.
-    ``recs`` are (iteration_record, n) pairs — n travels per record, since
-    one group may aggregate same-family workloads of different sizes.
+    per-iteration scan cost the Beamer predicate would have chosen over the
+    trace — where "cost" is whatever the caller's (``push_key``,
+    ``pull_key``) record fields carry: slot counts under ``cost="slots"``
+    (the deterministic proxy), probe-measured wall-ms under
+    ``cost="measured"``. ``recs`` are (iteration_record, n) pairs — n
+    travels per record, since one group may aggregate same-family
+    workloads of different sizes.
 
     Candidate thresholds come from the trace itself — each iteration's
     ``m_u/m_f`` (resp. ``n/n_f``) ratio is the exact alpha (beta) at which
@@ -423,14 +431,14 @@ def _fit_group(recs: list[tuple], pull_key: str) -> tuple:
         if any(
             r.get(k) is None
             for k in ("m_frontier", "m_unexplored", "frontier",
-                      "push_slots", pull_key)
+                      push_key, pull_key)
         ):
-            continue  # pre-v2 / trimmed record: contributes no sample
+            continue  # pre-v2 / trimmed / unmeasured record: no sample
         m_f = float(r["m_frontier"])
         m_u = float(r["m_unexplored"])
         n_f = float(r["frontier"])
         pts.append(
-            (m_f, m_u, n_f, float(n), float(r["push_slots"]),
+            (m_f, m_u, n_f, float(n), float(r[push_key]),
              float(r[pull_key]))
         )
     if not pts:
@@ -465,24 +473,41 @@ def _fit_group(recs: list[tuple], pull_key: str) -> tuple:
 
 
 def fit_direction_thresholds(
-    traces, pull: str = "binned"
+    traces, pull: str = "binned", cost: str = "slots"
 ) -> DirectionThresholds:
     """Fit per-(dataset-family, degree-bucket) alpha/beta from bench traces.
 
     ``traces``: a parsed ``BENCH_direction_opt.json`` document (or its
-    ``workloads`` list, or a path to the file). Iteration records need the
-    schema-v2 fields ``m_frontier`` / ``m_unexplored`` / ``push_slots`` /
-    ``pull_slots_{binned,ell}`` (older records are skipped — the fit
-    degrades to the Beamer defaults, never fails). ``pull`` selects which
-    pull flavor's measured cost the thresholds optimize for; "binned" is
-    what ``recommend_backend`` serves.
+    ``workloads`` list, or a path to the file). ``pull`` selects which
+    pull flavor's cost the thresholds optimize for; "binned" is what
+    ``recommend_backend`` serves ("fused" targets the Pallas kernel's
+    rates under measured cost).
+
+    ``cost`` picks the per-iteration cost fields the fit minimizes:
+
+    - "slots" (default, deterministic): schema-v2 ``push_slots`` /
+      ``pull_slots_{pull}`` scan-slot counts — the byte-proportional
+      proxy that needs no timing.
+    - "measured": ``push_wall_ms`` / ``pull_wall_ms_{pull}`` — wall
+      costs from the schema-v3 bench (or ``online_trace(cost=
+      "measured")``'s probe-rate annotation), so the fit weighs a slot
+      by what it actually costs on this backend pairing.
+
+    Records missing the selected fields are skipped — the fit degrades
+    to the Beamer defaults (per group), never fails; a measured-cost fit
+    over a slots-only trace is exactly such a degradation.
     """
+    if cost not in ("slots", "measured"):
+        raise ValueError(f"unknown cost mode: {cost!r}")
     if isinstance(traces, (str, Path)):
         traces = json.loads(Path(traces).read_text())
     workloads = traces.get("workloads", traces) if isinstance(
         traces, dict
     ) else traces
-    pull_key = f"pull_slots_{pull}"
+    if cost == "measured":
+        push_key, pull_key = "push_wall_ms", f"pull_wall_ms_{pull}"
+    else:
+        push_key, pull_key = "push_slots", f"pull_slots_{pull}"
     groups: dict[tuple, list] = {}
     for w in workloads:
         # the runtime predicate compares n_f*beta against the PADDED row
@@ -499,7 +524,8 @@ def fit_direction_thresholds(
         be = w.get("backends", {}).get("ell_push", {})
         recs.extend((r, int(n)) for r in be.get("iterations", []))
     table = {
-        k: _fit_group(recs, pull_key) for k, recs in groups.items()
+        k: _fit_group(recs, push_key, pull_key)
+        for k, recs in groups.items()
     }
     return DirectionThresholds(table=table)
 

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the fused binned-pull kernel.
+
+Mirrors the kernel's padded semantics exactly (padded accumulator layout,
+sentinel gathers filling the neutral, suppression after the un-permute) but
+with one XLA gather per slab and no activity skipping — the reference the
+parity corpus pins the kernel against, independent of the Pallas machinery.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .binned_pull import LANE_OPS, NO_PARENT, OPS, TilePlan, op_config
+
+
+def fused_binned_pull_ref(
+    op: str,
+    plan: TilePlan,
+    slabs,
+    wslabs,
+    gsrc,
+    inv_pad,
+    vloc,
+):
+    assert op in OPS, op
+    lanes = op in LANE_OPS
+    acc_dtype, neutral, src_pad, suppress, _ = op_config(op)
+    tail = gsrc.shape[1:]
+    acc = jnp.full((plan.rbp,) + tail, neutral, acc_dtype)
+    for b, s in enumerate(slabs):
+        got = gsrc.at[s].get(mode="fill", fill_value=src_pad)
+        if op in ("reach", "reach_lanes"):
+            part = got.max(axis=1)
+        elif op == "min_parent":
+            part = jnp.where(got != 0, s, NO_PARENT).min(axis=1)
+        elif op == "min_parent_lanes":
+            part = jnp.where(got != 0, s[:, :, None], NO_PARENT).min(axis=1)
+        else:  # min_dist
+            w = wslabs[b] if wslabs is not None else jnp.float32(1.0)
+            part = (got + w).min(axis=1)
+        a0 = plan.astarts[b]
+        acc = acc.at[a0 : a0 + plan.rows_pad[b]].set(part.astype(acc_dtype))
+    res = acc[inv_pad]
+    if vloc is not None:
+        res = jnp.where(vloc != 0, jnp.asarray(suppress, acc_dtype), res)
+    return res

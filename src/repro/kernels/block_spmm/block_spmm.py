@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..common import default_interpret
+
 
 def _kernel(rows_ref, cols_ref, adj_ref, x_ref, out_ref):
     i = pl.program_id(1)
@@ -53,8 +55,7 @@ def block_spmm(
     """Returns [G, B, F] f32: per-destination aggregated features.
 
     ``interpret=None`` auto-detects: compile on TPU, interpret elsewhere."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = default_interpret(interpret)
     nb, B, _ = blocks.shape
     G, _, F = x.shape
     FT = min(F, 128)

@@ -1,0 +1,16 @@
+"""Shared conventions for the Pallas kernel packages.
+
+Every kernel wrapper takes ``interpret: bool | None = None`` and resolves it
+through :func:`default_interpret` — one copy of the auto-detect rule instead
+of one per package.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret(interpret: bool | None) -> bool:
+    """interpret=None ⇒ auto: compile for real on TPU, interpret elsewhere."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..common import default_interpret
+
 NEG_INF = -1e30
 
 
@@ -81,9 +83,7 @@ def flash_attention(
     block_k: int = 128,
     interpret: bool | None = None,
 ) -> jax.Array:
-    if interpret is None:
-        # auto-detect: compile for real on TPU, interpret elsewhere
-        interpret = jax.default_backend() != "tpu"
+    interpret = default_interpret(interpret)
     B, H, S, D = q.shape
     assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
     scale = 1.0 / (D ** 0.5)

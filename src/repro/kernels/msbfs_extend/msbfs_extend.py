@@ -39,12 +39,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-
-def _default_interpret(interpret):
-    """interpret=None ⇒ auto: compile for real on TPU, interpret elsewhere."""
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return interpret
+from ..common import default_interpret as _default_interpret
 
 
 def _kernel(rows_ref, cols_ref, act_ref, sel_ref, adj_ref, lanes_ref, out_ref):

@@ -62,7 +62,7 @@ class QueryService:
 
     def __init__(self, mesh, csr, max_deg=None, max_iters=64, adaptive=True,
                  backend="recommend", direction_thresholds=None, family=None,
-                 online_adapt=True, refit_every=16):
+                 online_adapt=True, refit_every=16, cost="auto"):
         self.mesh = mesh
         self.csr = csr
         self.max_iters = max_iters
@@ -71,7 +71,7 @@ class QueryService:
             mesh, csr, max_deg=max_deg, max_iters=max_iters,
             adaptive=adaptive, backend=backend,
             direction_thresholds=direction_thresholds, family=family,
-            online_adapt=online_adapt, refit_every=refit_every,
+            online_adapt=online_adapt, refit_every=refit_every, cost=cost,
         )
         self.last_outcome = None  # per-phase latency of the last query
 
@@ -150,7 +150,7 @@ def run_open_loop(args, csr, mesh, family) -> int:
         direction_thresholds=args.thresholds, family=family,
         online_adapt=args.online_adapt, refit_every=args.refit_every,
         overlap=args.overlap, tenant_quota=args.quota,
-        max_batch_sources=args.max_batch_sources,
+        max_batch_sources=args.max_batch_sources, cost=args.cost_mode,
     )
     arrivals = poisson_arrivals(
         csr, args.rate, args.arrivals, args.sources_per_batch,
@@ -196,7 +196,7 @@ def run_closed_loop(args, csr, mesh, family) -> int:
                        backend=args.backend,
                        direction_thresholds=args.thresholds, family=family,
                        online_adapt=args.online_adapt,
-                       refit_every=args.refit_every)
+                       refit_every=args.refit_every, cost=args.cost_mode)
     rng = np.random.default_rng(0)
     lat, warm_lat, p1_ms, p2_ms, used = [], [], [], [], {}
     redispatched, cold_ms = 0, 0.0
@@ -296,7 +296,8 @@ def main(argv=None) -> int:
                     choices=(None, "1t1s", "nt1s", "ntks", "ntkms"))
     ap.add_argument("--backend", default="recommend",
                     choices=("ell_push", "ell_pull", "pull_binned",
-                             "block_mxu", "dopt", "dopt_ell", "dopt_binned",
+                             "pull_binned_fused", "block_mxu", "dopt",
+                             "dopt_ell", "dopt_binned", "dopt_fused",
                              "recommend"),
                     help="frontier-extension backend; the default "
                          "'recommend' picks the scan layout per batch via "
@@ -321,6 +322,14 @@ def main(argv=None) -> int:
                          "budget and static thresholds)")
     ap.add_argument("--refit-every", type=int, default=16,
                     help="batches between in-flight threshold refits")
+    ap.add_argument("--cost-mode", default="auto",
+                    choices=("auto", "slots", "measured"),
+                    help="direction-threshold fit cost model: 'slots' "
+                         "scores by scan-slot counts (deterministic); "
+                         "'measured' converts slots to wall-ms via the "
+                         "lazily-probed per-backend rates "
+                         "(core.extend.BackendCostProbe); 'auto' picks "
+                         "measured on TPU, slots on CPU/interpret")
     args = ap.parse_args(argv)
 
     csr = PAPER_DATASETS[args.dataset](args.scale)

@@ -57,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import (
+    BackendCostProbe,
     BudgetModel,
     DirectionThresholds,
     POLICIES,
@@ -337,8 +338,9 @@ class QueryDispatcher:
       batch's real-morsel convergence depths (the legacy global pow2 p90
       deque remains the empty-model cold path, and ``phase1_iters``
       still pins the budget outright, bypassing the learner);
-    - phase-1 engines run with the ``collect_stats`` sample tap, and the
-      accumulated per-iteration (m_frontier, m_unexplored, scan-cost)
+    - phase-1 AND phase-2 (resume/gang) engines run with the
+      ``collect_stats`` sample tap, and the accumulated per-iteration
+      (m_frontier, m_unexplored, scan-cost / measured-cost)
       records are refit into ``direction_thresholds`` every
       ``refit_every`` batches (``fit_direction_thresholds`` over
       ``online_trace()``), so ``backend="recommend"`` serves alpha/beta
@@ -375,6 +377,7 @@ class QueryDispatcher:
         refit_every: int = 16,
         sample_window: int = 2048,
         pad_pow2_morsels: bool = False,
+        cost: str = "auto",
     ):
         self.mesh = mesh
         self.csr = csr
@@ -418,6 +421,19 @@ class QueryDispatcher:
         # (n_real) and extraction (spans). Off by default: the one-shot
         # query paths keep their historical exact shapes.
         self.pad_pow2_morsels = pad_pow2_morsels
+        # threshold-fit cost model: "slots" scores directions by scan-slot
+        # counts (deterministic, the only mode that existed before the
+        # measured-cost tap); "measured" converts slots to wall-ms via the
+        # BackendCostProbe's per-backend ms/slot rates; "auto" = measured
+        # on real TPUs, slots on CPU/interpret (where probe timings are
+        # noise and replay determinism matters more than calibration)
+        if cost == "auto":
+            cost = "measured" if jax.default_backend() == "tpu" else "slots"
+        if cost not in ("slots", "measured"):
+            raise ValueError(f"unknown cost mode: {cost!r}")
+        self.cost_mode = cost
+        self.cost_probe = BackendCostProbe()
+        self._cost_rates: dict[int, dict] = {}  # n_pad -> probe rates
         self.stats = SchedulerStats()
         self.cache = EngineCache()
         self._graphs: dict[tuple, tuple] = {}  # (axes, operands) -> (ops, n_pad)
@@ -441,6 +457,7 @@ class QueryDispatcher:
             policy.graph_axes,
             spec.needs_rev,
             spec.needs_binned,
+            spec.needs_binned_pack,
             spec.needs_blocks,
             spec.pad_block,
         )
@@ -467,8 +484,6 @@ class QueryDispatcher:
         morsel_shape=None,
     ):
         cap = int(max_iters if max_iters is not None else self.max_iters)
-        if collect_stats and kind not in ("static", "phase1"):
-            raise ValueError(f"no stats tap for engine kind {kind!r}")
         key = EngineKey(
             kind, policy, edge_compute, n_pad, cap, state_layout, extend,
             collect_stats,
@@ -492,12 +507,13 @@ class QueryDispatcher:
         elif kind == "resume":
             builder = lambda: build_resume_engine(
                 self.mesh, policy, edge_compute, n_pad, cap, extend=extend,
-                operands=operands,
+                operands=operands, collect_stats=collect_stats,
             )
         elif kind == "gang":
             builder = lambda: build_gang_resume_engine(
                 self.mesh, policy, edge_compute, n_pad, cap, extend=extend,
                 operands=operands, state_layout=state_layout,
+                collect_stats=collect_stats,
             )
         else:
             raise ValueError(f"unknown engine kind: {kind}")
@@ -575,59 +591,122 @@ class QueryDispatcher:
     # ---------------------------------------------------- online adaptation
 
     def _record_samples(self, stats: np.ndarray, trips: np.ndarray,
-                        n_pad: int, push_slots: int) -> None:
-        """Drain one batch's phase-1 stats-tap buffer into the sample
-        store: one fit-consumable record per (real morsel, iteration)."""
+                        n_pad: int, push_slots: int,
+                        start: np.ndarray | None = None,
+                        phase: int = 1) -> None:
+        """Drain one batch's stats-tap buffer into the sample store: one
+        fit-consumable record per (real morsel, iteration). ``start``
+        gives each morsel's first recorded row (phase-2 taps resume at
+        the survivor's absolute phase-1 exit counter; rows below it are
+        zero-padding, not samples); ``phase`` labels the records so
+        consumers can split head/tail iteration populations."""
         store = self._dir_samples.setdefault(
             int(n_pad), collections.deque(maxlen=self._sample_window)
         )
         for i in range(stats.shape[0]):
-            for j in range(int(trips[i])):
-                n_f, m_f, m_u, pull = (float(v) for v in stats[i, j])
+            j0 = int(start[i]) if start is not None else 0
+            for j in range(j0, int(trips[i])):
+                n_f, m_f, m_u, pull, _wall, pbytes = (
+                    float(v) for v in stats[i, j]
+                )
                 store.append({
                     "it": j,
+                    "phase": phase,
                     "frontier": n_f,
                     "m_frontier": m_f,
                     "m_unexplored": m_u,
                     "push_slots": float(push_slots),
                     "pull_slots_binned": None if pull < 0 else pull,
+                    "pull_bytes_binned": None if pbytes < 0 else pbytes,
                 })
 
-    def online_trace(self) -> dict:
+    def _rates_for(self, n_pad: int) -> dict:
+        """Measured per-backend ms/slot rates for ``n_pad``, probed lazily
+        on first use (the probe jit-compiles one extension per backend —
+        doing it at trace-READ time keeps the serving hot path and every
+        slots-mode run probe-free) and cached for the dispatcher's life."""
+        if n_pad in self._cost_rates:
+            return self._cost_rates[n_pad]
+        best = None
+        score = lambda o: (
+            (o.rev_binned is not None) + (o.rev_binned_pack is not None)
+        )
+        for ops, np_ in self._graphs.values():
+            if int(np_) == int(n_pad) and (
+                best is None or score(ops) > score(best)
+            ):
+                best = ops
+        rates = (
+            {} if best is None else self.cost_probe.rates(best, int(n_pad))
+        )
+        self._cost_rates[n_pad] = rates
+        return rates
+
+    def online_trace(self, cost: str | None = None) -> dict:
         """The accumulated live samples as a ``BENCH_direction_opt``-shaped
         trace document: one workload per observed n_pad (this graph's
         family/avg-degree), records under the canonical ``ell_push``
         backend key — exactly what ``fit_direction_thresholds`` consumes,
         so the offline fit of this trace IS the online refit.
 
-        Scope: samples come from the PHASE-1 tap only — iterations a
-        survivor runs past the budget (in the untapped resume/gang
-        engines) are not observed, so deep-straggler tails are
-        under-represented relative to a full offline bench trace (those
-        tail iterations are tiny-frontier and fail the beta test, i.e.
-        overwhelmingly push-side, but a resume-engine tap is the ROADMAP
-        follow-on that would close the gap)."""
-        return {"workloads": [
-            {
+        Scope: the phase-1 tap plus the resume/gang phase-2 taps — a
+        survivor's post-budget tail iterations (``phase == 2`` records,
+        starting at its absolute phase-1 exit counter) land in the same
+        store, so deep-straggler tails are represented like a full
+        offline bench trace.
+
+        ``cost`` (default: the dispatcher's ``cost_mode``): "measured"
+        annotates each record with ``push_wall_ms`` /
+        ``pull_wall_ms_binned`` / ``pull_wall_ms_fused`` — slot counts
+        converted through the lazily-probed per-backend ms/slot rates —
+        so ``fit_direction_thresholds(..., cost="measured")`` can
+        consume the document; "slots" emits the historical slots-only
+        records."""
+        c = self.cost_mode if cost is None else cost
+        workloads = []
+        for n_pad, recs in sorted(self._dir_samples.items()):
+            records = [dict(r) for r in recs]
+            if c == "measured":
+                rates = self._rates_for(n_pad)
+                pr = rates.get("ell_push", {}).get("ms_per_slot")
+                br = rates.get("pull_binned", {}).get("ms_per_slot")
+                fr = rates.get("pull_binned_fused", {}).get("ms_per_slot")
+                for r in records:
+                    ps = r.get("pull_slots_binned")
+                    r["push_wall_ms"] = (
+                        None if pr is None else pr * r["push_slots"]
+                    )
+                    r["pull_wall_ms_binned"] = (
+                        None if (br is None or ps is None) else br * ps
+                    )
+                    r["pull_wall_ms_fused"] = (
+                        None if (fr is None or ps is None) else fr * ps
+                    )
+            workloads.append({
                 "graph": f"online_npad{n_pad}",
                 "kind": self.family or "unknown",
                 "n": int(self.csr.n_nodes),
                 "n_pad": int(n_pad),
                 "n_edges": int(self.csr.n_edges),
                 "avg_degree": float(self.csr.avg_degree),
-                "backends": {"ell_push": {"iterations": list(recs)}},
-            }
-            for n_pad, recs in sorted(self._dir_samples.items())
-        ]}
+                "backends": {"ell_push": {"iterations": records}},
+            })
+        return {"workloads": workloads}
 
-    def refit_thresholds(self) -> DirectionThresholds | None:
+    def refit_thresholds(self, cost: str | None = None) -> (
+        DirectionThresholds | None
+    ):
         """Refit ``direction_thresholds`` from the accumulated live
         samples (no-op before any sample lands). ``backend="recommend"``
-        serves the refitted alpha/beta on the next batch."""
+        serves the refitted alpha/beta on the next batch. ``cost``
+        overrides the dispatcher's ``cost_mode`` for this one refit
+        (measured-cost fits degrade per-record to slots parity when a
+        backend's rate could not be probed)."""
         if not any(len(r) for r in self._dir_samples.values()):
             return None
+        c = self.cost_mode if cost is None else cost
         self.direction_thresholds = fit_direction_thresholds(
-            self.online_trace()
+            self.online_trace(cost=c), cost=c
         )
         self.stats.refits += 1
         return self.direction_thresholds
@@ -768,21 +847,32 @@ class QueryDispatcher:
         if use_gang:
             eng2 = self.engine(
                 "gang", p2, ec, n_pad, state_layout=state_layout,
-                extend=extend, operands=g2, morsel_shape=(kp,),
+                extend=extend, operands=g2, collect_stats=collect,
+                morsel_shape=(kp,),
             )
             self.stats.gangs += 1
             self.stats.gang_slots += kp
         else:
             eng2 = self.engine(
-                "resume", p2, ec, n_pad, extend=extend, operands=g2
+                "resume", p2, ec, n_pad, extend=extend, operands=g2,
+                collect_stats=collect,
             )
-        res2 = eng2(g2, sub_state, jnp.asarray(sub_it))  # async dispatch
+        out2 = eng2(g2, sub_state, jnp.asarray(sub_it))  # async dispatch
+        res2, stats2 = out2 if collect else (out2, None)
         # block only the tiny per-morsel counters: phase 2 has then fully
         # executed on device, but the state leaves stay there — the stitch
         # below is deferred host work
         iters2 = np.asarray(res2.iterations)
         t2 = time.perf_counter()
         phase_ms["phase2"] = (t2 - t1) * 1e3
+        if stats2 is not None and idx.size > 0:
+            # survivors' post-budget tails: rows run from each morsel's
+            # absolute phase-1 exit counter to its final trip count
+            self._record_samples(
+                np.asarray(stats2)[: idx.size], iters2[: idx.size], n_pad,
+                push_slots=int(np.prod(g.fwd.indices.shape)),
+                start=sub_it[: idx.size], phase=2,
+            )
 
         final_iters = iters1.copy()
         final_iters[idx] = iters2[: idx.size]

@@ -1,7 +1,8 @@
 """Extension-backend parity corpus (ISSUE 2 + ISSUE 3 acceptance).
 
-ell_push / ell_pull / pull_binned / block_mxu and both direction-optimized
-switch flavors must produce bit-identical final states vs the numpy oracle
+ell_push / ell_pull / pull_binned / pull_binned_fused / block_mxu and the
+direction-optimized switch flavors must produce bit-identical final states
+vs the numpy oracle
 and vs each other, across ER and power-law graphs — including a pathological
 heavy-tail fixture (one node with in-degree ≈ n) and graphs with
 zero-in-degree / isolated nodes — all dense edge computes, the msbfs lane
@@ -36,8 +37,8 @@ from repro.core.extend import ExtendSpec, GraphOperands, as_spec
 from repro.core.ife import run_ife
 from repro.launch.mesh import make_mesh
 
-BACKENDS = ["ell_push", "ell_pull", "pull_binned", "block_mxu", "dopt",
-            "dopt_ell"]
+BACKENDS = ["ell_push", "ell_pull", "pull_binned", "pull_binned_fused",
+            "block_mxu", "dopt", "dopt_ell"]
 DENSE_ECS = ["sp_lengths", "sp_parents", "bellman_ford", "reachability"]
 
 
@@ -50,7 +51,7 @@ def full_operands(csr, block=128):
     are comparable bitwise across backends (engines strip what they don't
     scan)."""
     pull, n1 = build_operands(csr, "dopt_ell", block=block)
-    binned, n3 = build_operands(csr, "pull_binned", block=block)
+    binned, n3 = build_operands(csr, "pull_binned_fused", block=block)
     blk, n2 = build_operands(
         csr, ExtendSpec(backend="block_mxu", block=block), block=block
     )
@@ -60,6 +61,7 @@ def full_operands(csr, block=128):
             fwd=pull.fwd,
             rev=pull.rev,
             rev_binned=binned.rev_binned,
+            rev_binned_pack=binned.rev_binned_pack,
             blocks=blk.blocks,
         ),
         n1,
@@ -224,7 +226,8 @@ def test_truncation_emptied_rows_zero_width_slab():
     # that can scan a zero-width layout (sources never spread) — including
     # the min-reduction edge computes, whose jnp reductions have no
     # identity over a size-0 axis and need explicit width-0 guards
-    for be in ("ell_push", "ell_pull", "pull_binned", "dopt", "dopt_ell"):
+    for be in ("ell_push", "ell_pull", "pull_binned", "pull_binned_fused",
+               "dopt", "dopt_ell"):
         ops, n_pad = build_operands(eff, be)
         for ec in ("sp_lengths", "sp_parents", "bellman_ford",
                    "msbfs_parents"):
@@ -366,8 +369,8 @@ def test_scheduler_backend_selection_and_cache_keys():
     srcs = np.array([0, 17, 60], np.int32)
     ref = sched.query(srcs)  # scheduler default IS backend="recommend"
     n_engines = len(sched.cache)
-    for be in ["ell_push", "ell_pull", "pull_binned", "block_mxu", "dopt",
-               "recommend"]:
+    for be in ["ell_push", "ell_pull", "pull_binned", "pull_binned_fused",
+               "block_mxu", "dopt", "recommend"]:
         out = sched.query(srcs, backend=be)
         np.testing.assert_array_equal(
             np.asarray(ref.result.state.levels)[:, :n],
@@ -389,13 +392,15 @@ def test_max_deg_truncation_consistent_across_backends():
     srcs = jnp.array([3])
     cap = 4
     ops_p, _ = build_operands(csr, "dopt_ell", max_deg=cap, block=128)
-    ops_b, _ = build_operands(csr, "pull_binned", max_deg=cap, block=128)
+    ops_b, _ = build_operands(
+        csr, "pull_binned_fused", max_deg=cap, block=128
+    )
     blk_t, _ = build_operands(
         csr, ExtendSpec(backend="block_mxu"), max_deg=cap, block=128
     )
     ops_t = GraphOperands(
         fwd=ops_p.fwd, rev=ops_p.rev, rev_binned=ops_b.rev_binned,
-        blocks=blk_t.blocks,
+        rev_binned_pack=ops_b.rev_binned_pack, blocks=blk_t.blocks,
     )
     ref = run_ife(ops_t, srcs, "sp_lengths", extend="ell_push")
     for be in BACKENDS[1:]:
