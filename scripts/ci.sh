@@ -37,7 +37,16 @@
 #                               # floors: overlap occupancy > 0, async warm
 #                               # p99 <= synchronous-flush p99 on the same
 #                               # open-loop stream, results bit-identical,
-#                               # zero deadline misses at low load)
+#                               # zero deadline misses at low load); finally
+#                               # run the mutable-ops benchmark in --smoke
+#                               # mode and validate BENCH_mutable_ops.json
+#                               # (schema + the mutability floors: same-shape
+#                               # delta folds cheaper in total wall than the
+#                               # from-scratch operand rebuild of every live
+#                               # bundle, compile_events flat across the
+#                               # delta chain, every post-delta query
+#                               # bit-identical to the BFS oracle, and the
+#                               # reshape probe invalidating stale engines)
 #
 # CI_BUDGET_SECONDS caps any lane via timeout (default 1800); a hung XLA
 # compile or subprocess fails the lane instead of wedging the pipeline.
@@ -90,6 +99,10 @@ elif [[ "${1:-}" == "--bench-smoke" ]]; then
   timeout --signal=INT "$BUDGET" \
     python benchmarks/serving_slo.py --smoke --out "$SOUT"
   validate_bench serving_slo "$SOUT"
+  MOUT="${BENCH_MUTABLE_OUT:-/tmp/BENCH_mutable_ops.smoke.json}"
+  timeout --signal=INT "$BUDGET" \
+    python benchmarks/mutable_ops.py --smoke --out "$MOUT"
+  validate_bench mutable_ops "$MOUT"
 else
   FAST_BUDGET="${FAST_LANE_BUDGET_SECONDS:-900}"
   START=$(date +%s)

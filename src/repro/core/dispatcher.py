@@ -673,6 +673,7 @@ def prepare_graph(
     max_deg: int | None = None,
     pad_shards: int | None = None,
     extend="ell_push",
+    version: int = 0,
 ) -> tuple[GraphOperands, int]:
     """Host-side: CSR → padded, device-placed extension operands for this
     policy's mesh: the forward ELL always, plus the reverse ELL, the
@@ -763,6 +764,7 @@ def prepare_graph(
         rev_binned=rev_binned,
         rev_binned_pack=rev_binned_pack,
         blocks=blocks,
+        version=version,
     )
     return ops, n_pad
 

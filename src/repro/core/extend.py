@@ -191,7 +191,6 @@ def as_spec(extend) -> ExtendSpec:
     raise TypeError(f"cannot interpret extend={extend!r}")
 
 
-@jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class GraphOperands:
     """The physical scan operands of one graph (or one graph shard).
@@ -200,6 +199,15 @@ class GraphOperands:
     materialized only when the engine's ExtendSpec needs them (treedefs
     must match shard_map in_specs exactly, so engines carry precisely the
     operands they scan).
+
+    ``version`` is the mutable-graph bookkeeping tag: the dispatcher
+    stamps its monotonically increasing ``operands_version`` here when a
+    ``GraphDelta`` folds new buffers into the bundle. It is a pytree
+    *meta* field, so it must never reach a traced program — a distinct
+    version would be a distinct treedef and force a retrace, defeating
+    the whole warm-engine design. ``dispatcher.strip_operands`` (the
+    mandatory coercion in front of every engine call) rebuilds the bundle
+    without it, so traced code only ever sees ``version=0``.
     """
 
     fwd: EllGraph
@@ -207,10 +215,18 @@ class GraphOperands:
     rev_binned: Optional[BinnedRevEll] = None
     rev_binned_pack: Optional[BinnedPullPack] = None
     blocks: Optional[ShardedBlocks] = None
+    version: int = 0
 
     @property
     def n_nodes(self) -> int:
         return self.fwd.n_nodes
+
+
+jax.tree_util.register_dataclass(
+    GraphOperands,
+    data_fields=["fwd", "rev", "rev_binned", "rev_binned_pack", "blocks"],
+    meta_fields=["version"],
+)
 
 
 def as_operands(graph) -> GraphOperands:
@@ -226,6 +242,7 @@ def build_operands(
     shards: int = 1,
     block: int | None = None,
     binned_shards: int | None = None,
+    version: int = 0,
 ) -> tuple[GraphOperands, int]:
     """Host-side operand construction (single-host variant; the mesh-aware
     path in ``dispatcher.prepare_graph`` adds device placement).
@@ -263,6 +280,7 @@ def build_operands(
             rev_binned=rev_binned,
             rev_binned_pack=rev_binned_pack,
             blocks=blocks,
+            version=version,
         ),
         n_pad,
     )

@@ -77,6 +77,16 @@ class CSRGraph:
         )
         return src, self.indices.astype(np.int32)
 
+    def edge_keys(self) -> np.ndarray:
+        """Sorted ``src * n_nodes + dst`` int64 keys, one per edge — the
+        identity the dedup in ``csr_from_edges`` and the delta layer's
+        edge-set arithmetic (``graph.delta``) both key on. Self-loops are
+        ordinary keys; a deduped CSR's keys are strictly increasing."""
+        src = np.repeat(
+            np.arange(self.n_nodes, dtype=np.int64), self.degrees
+        )
+        return src * self.n_nodes + self.indices.astype(np.int64)
+
 
 def csr_from_edges(
     n_nodes: int,
@@ -85,7 +95,15 @@ def csr_from_edges(
     weights: Optional[np.ndarray] = None,
     dedup: bool = True,
 ) -> CSRGraph:
-    """Build CSR from an edge list, sorting (and optionally deduplicating)."""
+    """Build CSR from an edge list, sorting (and optionally deduplicating).
+
+    The dedup is *stable keep-first* over the ``src * n_nodes + dst`` key
+    (see ``CSRGraph.edge_keys``): among duplicate edges the one earliest
+    in the input order survives, weights included. The mutable-graph path
+    (``graph.delta.apply_delta_csr``) relies on this by concatenating
+    surviving old edges ahead of inserts — re-inserting a live edge keeps
+    the existing edge and its weight, exactly as a from-scratch build of
+    the same concatenated list would."""
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
     key = src * n_nodes + dst

@@ -39,6 +39,7 @@ import jax
 import numpy as np
 
 from ..core import histogram_lengths, reconstruct_paths
+from ..graph.delta import apply_delta_csr, random_delta
 from ..graph.generators import (
     PAPER_DATASET_FAMILIES,
     PAPER_DATASETS,
@@ -156,10 +157,25 @@ def run_open_loop(args, csr, mesh, family) -> int:
         csr, args.rate, args.arrivals, args.sources_per_batch,
         tenants=args.tenants, deadline_ms=args.deadline_ms, seed=1,
     )
+    if args.mutate_stream:
+        # interleave seeded edge-edit batches evenly through the arrival
+        # schedule; run_stream applies each through the serving fence
+        # (admitted-before sees the old graph, admitted-after the new)
+        span = arrivals[-1]["t_ms"] if arrivals else 0.0
+        cur = csr
+        for i in range(args.mutate_stream):
+            t_ms = span * (i + 1) / (args.mutate_stream + 1)
+            d = random_delta(cur, args.delta_edges, args.delta_edges,
+                             seed=500 + i)
+            cur = apply_delta_csr(cur, d)  # deletes sample the live graph
+            arrivals.append({"t_ms": float(t_ms), "delta": d})
+        arrivals.sort(key=lambda a: a["t_ms"])
     print(
         f"open loop: {args.arrivals} Poisson arrivals at {args.rate:.1f} "
         f"q/s across {args.tenants} tenant(s)"
         + (f", deadline {args.deadline_ms:.0f} ms" if args.deadline_ms else "")
+        + (f", {args.mutate_stream} interleaved graph delta(s) of "
+           f"±{args.delta_edges} edges" if args.mutate_stream else "")
     )
     t0 = time.perf_counter()
     loop.run_stream(arrivals)
@@ -186,6 +202,16 @@ def run_open_loop(args, csr, mesh, family) -> int:
             f"  tenant {name}: {ts.completed}/{ts.submitted} served, "
             f"warm p50 {ts.p50():.1f} ms p99 {ts.p99():.1f} ms, "
             f"shed {ts.shed}, misses {ts.deadline_misses}"
+        )
+    if st.deltas_applied:
+        same = sum(1 for r in loop.delta_reports if r.same_shape)
+        inval = sum(r.engines_invalidated for r in loop.delta_reports)
+        print(
+            f"graph deltas: {st.deltas_applied} applied "
+            f"(now version {loop.graph_version}); {same} kept every "
+            f"operand shape (engines stayed warm), "
+            f"{inval} engine(s) invalidated by reshapes; final graph "
+            f"{loop.dispatcher.csr.n_edges} edges"
         )
     _report_core(loop.dispatcher)
     return 0
@@ -289,6 +315,15 @@ def main(argv=None) -> int:
                          "under backlog the queue drains as capped "
                          "batches with re-admission between them, keeping "
                          "tail latency at O(batch) instead of O(backlog)")
+    ap.add_argument("--mutate-stream", type=int, default=0, metavar="N",
+                    help="open loop: interleave N seeded graph deltas "
+                         "evenly through the arrival schedule; each is "
+                         "applied through the serving fence (in-flight "
+                         "batches finish on the old graph, later "
+                         "admissions see the new one)")
+    ap.add_argument("--delta-edges", type=int, default=64, metavar="M",
+                    help="edges added and deleted per --mutate-stream "
+                         "delta")
     ap.add_argument("--paths", action="store_true",
                     help="return actual paths (parents), not lengths "
                          "(closed loop only)")

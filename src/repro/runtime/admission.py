@@ -284,10 +284,14 @@ class AdmissionQueue:
             shed.append((q.qid, reason))
 
         # drop queries whose deadline has already passed: executing them
-        # cannot produce an in-SLO answer, only queueing delay for others
+        # cannot produce an in-SLO answer, only queueing delay for others.
+        # >= — a ticket planned AT its exact deadline instant is expired
+        # (the deadline is "done strictly before t"): with an injected
+        # clock the boundary is deterministic, matching submit-time's
+        # `deadline_ms <= 0` shed instead of racing past it
         live: list[AdmittedQuery] = []
         for q in queue:
-            if q.t_deadline is not None and now > q.t_deadline:
+            if q.t_deadline is not None and now >= q.t_deadline:
                 shed_query(q, SHED_EXPIRED)
             else:
                 live.append(q)

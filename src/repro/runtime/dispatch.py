@@ -55,6 +55,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core import (
     BackendCostProbe,
@@ -82,7 +83,15 @@ from ..core import (
     recommend_policy,
 )
 from ..core.dispatcher import _axes_size
+from ..core.extend import GraphOperands, effective_csr
 from ..graph.csr import CSRGraph
+from ..graph.delta import (
+    DeltaReport,
+    GraphDelta,
+    apply_delta_csr,
+    diff_effective,
+    fold_operands,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,7 +103,17 @@ class EngineKey:
     ``ExtendSpec``): each backend is a different scan program. ``stats``
     marks the sample-tapped flavor (``build_engine(collect_stats=True)``
     returns ``(result, per-iteration stats)`` — same result state,
-    different HLO)."""
+    different HLO).
+
+    ``operands_epoch`` is the mutable-graph shape generation of the
+    operand structures this engine scans: a ``GraphDelta`` that folds
+    in place (same shapes, buffers swapped) leaves the epoch alone — the
+    compiled engine stays warm and simply receives the new buffers at
+    call time — while a delta that forces a structure rebuild with new
+    shapes bumps it, so stale keys are invalidated and the next query
+    compiles against the new shapes. Deliberately NOT the full
+    ``operands_version``: keying on the version would cold-compile on
+    every delta, which is the exact cliff this design removes."""
 
     kind: str  # "static" | "phase1" | "resume"
     policy: MorselPolicy
@@ -104,21 +123,41 @@ class EngineKey:
     state_layout: str
     extend: ExtendSpec = ExtendSpec()
     stats: bool = False
+    operands_epoch: int = 0
 
 
 class EngineCache:
-    """Compiled-QueryEngine cache with hit/miss accounting and a public
-    mapping surface. Hits and misses are additionally counted per engine
-    kind (static/phase1/resume/gang) so the gang path's compile footprint
-    is observable.
+    """Compiled-QueryEngine cache: bounded LRU with hit/miss accounting
+    and a public mapping surface. Hits and misses are additionally
+    counted per engine kind (static/phase1/resume/gang) so the gang
+    path's compile footprint is observable.
+
+    ``max_entries`` bounds the store (None = unbounded): a shape-diverse
+    serving stream — many (policy, backend, morsel-shape) combinations —
+    previously grew both the engine dict and the ``note_shape`` ledger
+    without bound. Least-recently-*used* entries evict first
+    (``get_or_build`` hits refresh recency), the evicted key's shape
+    ledger goes with it, and a later rebuild of an evicted key is a
+    fresh ``miss`` + fresh shape misses — exactly what it costs the
+    serving loop, so ``compile_events`` stays an honest cold counter.
 
     Iteration/lookup is part of the API — callers that count or inspect
     compiles use ``len(cache)``, ``iter(cache)`` / ``keys()``, ``key in
     cache``, ``get(key)`` and ``items()`` instead of reaching into the
     private store."""
 
-    def __init__(self):
-        self._engines: dict[EngineKey, Any] = {}
+    # Default bound: far above any one graph's engine population (a full
+    # backend × policy × kind × budget sweep compiles a few dozen), so
+    # eviction only engages on genuinely unbounded key streams.
+    DEFAULT_MAX_ENTRIES = 128
+
+    def __init__(self, max_entries: int | None = DEFAULT_MAX_ENTRIES):
+        if max_entries is not None and max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1: {max_entries}")
+        self.max_entries = max_entries
+        self._engines: collections.OrderedDict[EngineKey, Any] = (
+            collections.OrderedDict()
+        )
         self.hits = 0
         self.misses = 0
         self.hits_by_kind: collections.Counter = collections.Counter()
@@ -128,6 +167,8 @@ class EngineCache:
         # morsel count is new — invisible to hit/miss, so tracked apart
         self._shapes: dict[EngineKey, set] = {}
         self.shape_misses = 0
+        self.evictions = 0  # LRU capacity evictions
+        self.invalidations = 0  # entries dropped by invalidate()
 
     @property
     def compile_events(self) -> int:
@@ -180,12 +221,35 @@ class EngineCache:
         if eng is not None:
             self.hits += 1
             self.hits_by_kind[kind] += 1
+            self._engines.move_to_end(key)  # LRU recency refresh
             return eng
         self.misses += 1
         self.misses_by_kind[kind] += 1
         eng = builder()
         self._engines[key] = eng
+        if (
+            self.max_entries is not None
+            and len(self._engines) > self.max_entries
+        ):
+            old_key, _ = self._engines.popitem(last=False)
+            self._shapes.pop(old_key, None)
+            self.evictions += 1
         return eng
+
+    def invalidate(self, predicate: Callable[[EngineKey], bool]) -> int:
+        """Drop every cached engine whose key matches ``predicate`` (and
+        its shape ledger). Returns the number of entries removed. The
+        dispatcher calls this after a shape-changing ``GraphDelta`` with
+        an epoch-mismatch predicate, so exactly the engines compiled
+        against rebuilt structures recompile — a re-query of an
+        invalidated key accounts as a fresh miss + fresh shape misses,
+        like any other cold compile."""
+        stale = [k for k in self._engines if predicate(k)]
+        for k in stale:
+            del self._engines[k]
+            self._shapes.pop(k, None)
+        self.invalidations += len(stale)
+        return len(stale)
 
 
 @dataclasses.dataclass
@@ -242,6 +306,7 @@ class SchedulerStats:
     budget_inert_slots: int = 0
     budget_observed: int = 0
     refits: int = 0  # in-flight direction-threshold refits
+    deltas: int = 0  # GraphDeltas applied (apply_delta calls)
 
     @property
     def gang_occupancy(self) -> float:
@@ -271,6 +336,37 @@ class SchedulerStats:
         self.budget_too_high += outcome.budget_too_high
         self.budget_inert_slots += outcome.budget_inert_slots
         self.budget_observed += outcome.budget_observed
+
+
+@dataclasses.dataclass
+class OperandBundle:
+    """One device-placed operand bundle plus its mutability bookkeeping.
+
+    ``version`` is the ``operands_version`` the buffers currently hold;
+    ``epochs`` counts, per structure slot, how many times a delta had to
+    REBUILD that structure with new shapes (in-place folds don't bump
+    it) — ``EngineKey.operands_epoch`` derives from these. ``host`` is
+    the lazily created writable numpy mirror deltas fold into (one
+    device→host copy on the first delta, then reused forever).
+
+    ``policy``/``spec`` record which (policy, ExtendSpec) pair first
+    materialized the bundle — provenance for tooling that needs to
+    rebuild the same operand set from scratch (benchmarks/mutable_ops.py
+    prices the rebuild baseline off it).
+
+    Iterates as ``(ops, n_pad)`` so the historical
+    ``g, n_pad = self._graph_for(...)`` unpacking keeps working."""
+
+    ops: GraphOperands
+    n_pad: int
+    version: int = 0
+    epochs: dict = dataclasses.field(default_factory=dict)
+    host: Any = None
+    policy: Any = None
+    spec: Any = None
+
+    def __iter__(self):
+        return iter((self.ops, self.n_pad))
 
 
 @dataclasses.dataclass
@@ -436,7 +532,10 @@ class QueryDispatcher:
         self._cost_rates: dict[int, dict] = {}  # n_pad -> probe rates
         self.stats = SchedulerStats()
         self.cache = EngineCache()
-        self._graphs: dict[tuple, tuple] = {}  # (axes, operands) -> (ops, n_pad)
+        self._graphs: dict[tuple, OperandBundle] = {}
+        # monotonically increasing graph-mutation counter: bumped by every
+        # apply_delta and stamped on each bundle's (host-side) version tag
+        self.operands_version = 0
         # global pow2-p90 fallback budget (cold start / online_adapt off):
         # p90 per-morsel iteration count of recent batches — the per-bucket
         # BudgetModel supersedes it as soon as it holds samples.
@@ -450,10 +549,9 @@ class QueryDispatcher:
 
     # ------------------------------------------------------------- engines
 
-    def _graph_for(self, policy: MorselPolicy, spec: ExtendSpec = ExtendSpec()):
-        # operand bundles are shared by every spec needing the same physical
-        # structures (rev/blocks), not per backend string
-        key = (
+    @staticmethod
+    def _bundle_key(policy: MorselPolicy, spec: ExtendSpec) -> tuple:
+        return (
             policy.graph_axes,
             spec.needs_rev,
             spec.needs_binned,
@@ -461,14 +559,156 @@ class QueryDispatcher:
             spec.needs_blocks,
             spec.pad_block,
         )
+
+    def _graph_for(
+        self, policy: MorselPolicy, spec: ExtendSpec = ExtendSpec()
+    ) -> OperandBundle:
+        # operand bundles are shared by every spec needing the same physical
+        # structures (rev/blocks), not per backend string. Sharing is safe
+        # across graph versions because a delta folds into the SHARED bundle
+        # and bumps its version/epochs once: a spec can never observe a
+        # bundle pinned at a different operands_version than its siblings —
+        # in-flight batches instead pin the resolved (ops, epoch) pair at
+        # begin time (see _begin_hybrid), so they keep their pre-delta
+        # buffers without ever re-resolving through this cache.
+        key = self._bundle_key(policy, spec)
         if key not in self._graphs:
             # pad for mesh.size so every policy's graph shares one n_pad and
             # phase-1 state can resume on the phase-2 graph unchanged
-            self._graphs[key] = prepare_graph(
+            ops, n_pad = prepare_graph(
                 self.csr, self.mesh, policy, self.max_deg,
                 pad_shards=self.mesh.size, extend=spec,
+                version=self.operands_version,
+            )
+            self._graphs[key] = OperandBundle(
+                ops=ops, n_pad=n_pad, version=self.operands_version,
+                policy=policy, spec=spec,
             )
         return self._graphs[key]
+
+    def _spec_epoch(self, bundle: OperandBundle, spec: ExtendSpec) -> int:
+        """The shape generation an engine scanning ``spec``'s structures
+        out of ``bundle`` compiles against: the max epoch over exactly
+        the structures the spec scans — a rebuild of the blocks operand
+        must not invalidate push engines sharing the bundle."""
+        e = bundle.epochs
+        v = e.get("fwd", 0)
+        if spec.needs_rev:
+            v = max(v, e.get("rev", 0))
+        if spec.needs_binned:
+            v = max(v, e.get("rev_binned", 0))
+        if spec.needs_binned_pack:
+            v = max(v, e.get("rev_binned_pack", 0))
+        if spec.needs_blocks:
+            v = max(v, e.get("blocks", 0))
+        return v
+
+    # ------------------------------------------------------- graph mutation
+
+    def apply_delta(self, delta: GraphDelta) -> DeltaReport:
+        """Mutate the served graph in place: fold ``delta`` into every
+        cached operand bundle instead of rebuilding from scratch.
+
+        Per bundle, only the structures whose content actually changed
+        are re-placed on device (untouched device arrays are reused),
+        and only structures whose SHAPES changed (a row overflowed its
+        ELL width, a degree left every existing bucket's invariant
+        range, a new block tile found no free slot) bump their epoch —
+        so a same-shape delta leaves every compiled engine warm and
+        ``cache.compile_events`` flat, while a shape-changing delta
+        invalidates exactly the engine keys whose scanned structures
+        were rebuilt. Queries planned after this call see the new graph;
+        batches already in flight keep the operand buffers they pinned
+        at begin time (never torn)."""
+        new_csr = apply_delta_csr(self.csr, delta)
+        old_eff = effective_csr(self.csr, self.max_deg)
+        new_eff = effective_csr(new_csr, self.max_deg)
+        diff = diff_effective(old_eff, new_eff, delta)
+        self.operands_version += 1
+        n_changed = n_rebuilt = moves = 0
+        for key, bundle in self._graphs.items():
+            if bundle.host is None:
+                # first delta against this bundle: one device->host copy
+                # into a writable mirror (np.array, not asarray — jax
+                # buffer views are read-only), reused by every later fold
+                bundle.host = jax.tree.map(
+                    lambda x: np.array(x), bundle.ops
+                )
+            structs, rep = fold_operands(
+                bundle.host, old_eff, new_eff, diff
+            )
+            bundle.host = GraphOperands(
+                **structs, version=self.operands_version
+            )
+            bundle.ops = self._place_structures(key[0], bundle, rep)
+            bundle.version = self.operands_version
+            for s, r in rep.reshaped.items():
+                if r:
+                    bundle.epochs[s] = bundle.epochs.get(s, 0) + 1
+            n_changed += rep.n_changed
+            n_rebuilt += rep.n_reshaped
+            moves += rep.binned_moves
+        self.csr = new_csr
+        # stale-state sweep: measured cost rates and probes were taken
+        # against the pre-delta operands
+        self._cost_rates.clear()
+        invalidated = self.cache.invalidate(self._engine_stale)
+        self.stats.deltas += 1
+        return DeltaReport(
+            version=self.operands_version,
+            n_adds=delta.n_adds,
+            n_dels=delta.n_dels,
+            changed_edges=diff.n_changed_edges,
+            dirty_fwd_rows=int(len(diff.fwd_dirty)),
+            dirty_rev_rows=int(len(diff.rev_dirty)),
+            bundles=len(self._graphs),
+            structures_changed=n_changed,
+            structures_rebuilt=n_rebuilt,
+            binned_moves=moves,
+            engines_invalidated=invalidated,
+        )
+
+    def _place_structures(
+        self, graph_axes, bundle: OperandBundle, rep
+    ) -> GraphOperands:
+        """Device-place exactly the structures a fold changed, with
+        ``prepare_graph``'s sharding rule (leading row/stacked-shard axis
+        over the policy's graph axes, everything else replicated);
+        unchanged structures keep their existing device arrays."""
+        ga = graph_axes
+        mesh = self.mesh
+        shard = lambda x: NamedSharding(
+            mesh, P(ga if ga else None, *(None,) * (np.ndim(x) - 1))
+        )
+        old, host = bundle.ops, bundle.host
+        # one batched transfer for every changed structure (a device_put
+        # per leaf pays a dispatch round-trip each; the pytree form issues
+        # them together)
+        dirty = {
+            name: getattr(host, name)
+            for name in ("fwd", "rev", "rev_binned", "rev_binned_pack",
+                         "blocks")
+            if rep.changed[name]
+        }
+        placed = jax.device_put(dirty, jax.tree.map(shard, dirty))
+        pick = lambda name, old_s: placed.get(name, old_s)
+        return GraphOperands(
+            fwd=pick("fwd", old.fwd),
+            rev=pick("rev", old.rev),
+            rev_binned=pick("rev_binned", old.rev_binned),
+            rev_binned_pack=pick("rev_binned_pack", old.rev_binned_pack),
+            blocks=pick("blocks", old.blocks),
+            version=self.operands_version,
+        )
+
+    def _engine_stale(self, key: EngineKey) -> bool:
+        """True when ``key`` was compiled against operand shapes an
+        applied delta has since rebuilt (its epoch no longer matches the
+        bundle's current epoch for the structures it scans)."""
+        bundle = self._graphs.get(self._bundle_key(key.policy, key.extend))
+        if bundle is None:
+            return False
+        return key.operands_epoch != self._spec_epoch(bundle, key.extend)
 
     def engine(
         self,
@@ -482,16 +722,20 @@ class QueryDispatcher:
         operands=None,
         collect_stats: bool = False,
         morsel_shape=None,
+        epoch: int | None = None,
     ):
         cap = int(max_iters if max_iters is not None else self.max_iters)
-        key = EngineKey(
-            kind, policy, edge_compute, n_pad, cap, state_layout, extend,
-            collect_stats,
-        )
         if operands is None and (
             extend.needs_binned or extend.needs_rev or extend.needs_blocks
         ):
-            operands = self._graph_for(policy, extend)[0]
+            bundle = self._graph_for(policy, extend)
+            operands = bundle.ops
+            if epoch is None:
+                epoch = self._spec_epoch(bundle, extend)
+        key = EngineKey(
+            kind, policy, edge_compute, n_pad, cap, state_layout, extend,
+            collect_stats, int(epoch) if epoch else 0,
+        )
         if kind == "static":
             builder = lambda: build_engine(
                 self.mesh, policy, edge_compute, n_pad, cap,
@@ -631,8 +875,9 @@ class QueryDispatcher:
         score = lambda o: (
             (o.rev_binned is not None) + (o.rev_binned_pack is not None)
         )
-        for ops, np_ in self._graphs.values():
-            if int(np_) == int(n_pad) and (
+        for b in self._graphs.values():
+            ops = b.ops
+            if int(b.n_pad) == int(n_pad) and (
                 best is None or score(ops) > score(best)
             ):
                 best = ops
@@ -741,10 +986,19 @@ class QueryDispatcher:
     # ------------------------------------------ split-phase hybrid internals
 
     def _begin_hybrid(self, pol, ec, g, n_pad, morsels, state_layout,
-                      extend=ExtendSpec(), n_real=0, buckets=()):
+                      extend=ExtendSpec(), n_real=0, buckets=(), epoch=0):
         """Choose the budget, then DISPATCH phase 1 without blocking: jax
         async dispatch returns device futures immediately, so the caller's
-        host thread is free until ``_settle_hybrid`` blocks on them."""
+        host thread is free until ``_settle_hybrid`` blocks on them.
+
+        The phase-2 operand bundle is resolved and PINNED here, at begin
+        time, even though it is only consumed at settle time: resolving
+        it inside ``_settle_hybrid`` (the historical path) re-read the
+        shared bundle cache, so an ``apply_delta`` landing between begin
+        and settle would have torn the batch across graph versions —
+        phase 1 on the old edges, phase 2 on the new. The pinned ops
+        keep the pre-delta device buffers alive for exactly as long as
+        the in-flight batch needs them."""
         p1, p2 = hybrid_phases(
             pol.source_axes, pol.graph_axes, lanes=pol.lanes,
             or_impl=pol.or_impl,
@@ -755,14 +1009,18 @@ class QueryDispatcher:
             "phase1", p1, ec, n_pad, max_iters=budget,
             state_layout=state_layout, extend=extend, operands=g,
             collect_stats=collect, morsel_shape=morsels.shape[:1],
+            epoch=epoch,
         )
+        b2 = self._graph_for(p2, extend)
         t0 = time.perf_counter()
         out1 = eng1(g, morsels)  # async: no block_until_ready
         return {
             "pol": pol, "p2": p2, "ec": ec, "g": g, "n_pad": n_pad,
             "state_layout": state_layout, "extend": extend,
             "n_real": n_real, "budget": budget, "collect": collect,
-            "out1": out1, "t0": t0,
+            "out1": out1, "t0": t0, "epoch": epoch,
+            "g2": b2.ops, "n_pad2": b2.n_pad,
+            "epoch2": self._spec_epoch(b2, extend),
         }
 
     def _settle_hybrid(self, inf) -> SettledBatch:
@@ -823,7 +1081,10 @@ class QueryDispatcher:
         sub_it = np.zeros((kp,), iters1.dtype)
         sub_it[: idx.size] = iters1[idx]
 
-        g2, n_pad2 = self._graph_for(p2, extend)
+        # the phase-2 operands pinned at begin time (never re-resolved:
+        # a delta applied while this batch was in flight must not swap
+        # the graph under phase 2 — see _begin_hybrid)
+        g2, n_pad2 = inf["g2"], inf["n_pad2"]
         assert n_pad2 == n_pad, (n_pad2, n_pad)
 
         state1 = None
@@ -848,14 +1109,14 @@ class QueryDispatcher:
             eng2 = self.engine(
                 "gang", p2, ec, n_pad, state_layout=state_layout,
                 extend=extend, operands=g2, collect_stats=collect,
-                morsel_shape=(kp,),
+                morsel_shape=(kp,), epoch=inf["epoch2"],
             )
             self.stats.gangs += 1
             self.stats.gang_slots += kp
         else:
             eng2 = self.engine(
                 "resume", p2, ec, n_pad, extend=extend, operands=g2,
-                collect_stats=collect,
+                collect_stats=collect, epoch=inf["epoch2"],
             )
         out2 = eng2(g2, sub_state, jnp.asarray(sub_it))  # async dispatch
         res2, stats2 = out2 if collect else (out2, None)
@@ -908,7 +1169,7 @@ class QueryDispatcher:
         return SettledBatch(outcome, materialize)
 
     def _run_hybrid(self, pol, ec, g, n_pad, morsels, state_layout,
-                    extend=ExtendSpec(), n_real=0, buckets=()):
+                    extend=ExtendSpec(), n_real=0, buckets=(), epoch=0):
         """Two-phase hybrid on one morsel batch, synchronously: begin +
         settle + finalize back-to-back. Returns a QueryOutcome whose
         result state is bit-identical to the static engine's.
@@ -927,15 +1188,16 @@ class QueryDispatcher:
         per-iteration samples land in the threshold-refit store."""
         inf = self._begin_hybrid(
             pol, ec, g, n_pad, morsels, state_layout, extend=extend,
-            n_real=n_real, buckets=buckets,
+            n_real=n_real, buckets=buckets, epoch=epoch,
         )
         return self._settle_hybrid(inf).finalize()
 
     def _begin_static(self, pol, ec, g, n_pad, morsels, state_layout,
-                      extend=ExtendSpec()):
+                      extend=ExtendSpec(), epoch=0):
         eng = self.engine(
             "static", pol, ec, n_pad, state_layout=state_layout,
             extend=extend, operands=g, morsel_shape=morsels.shape[:1],
+            epoch=epoch,
         )
         t0 = time.perf_counter()
         res = eng(g, morsels)  # async: no block_until_ready
@@ -951,9 +1213,10 @@ class QueryDispatcher:
         ))
 
     def _run_static(self, pol, ec, g, n_pad, morsels, state_layout,
-                    extend=ExtendSpec(), n_real=0, buckets=()):
+                    extend=ExtendSpec(), n_real=0, buckets=(), epoch=0):
         inf = self._begin_static(
-            pol, ec, g, n_pad, morsels, state_layout, extend=extend
+            pol, ec, g, n_pad, morsels, state_layout, extend=extend,
+            epoch=epoch,
         )
         return self._settle_static(inf).finalize()
 
@@ -984,7 +1247,12 @@ class QueryDispatcher:
                 thresholds=self.direction_thresholds,
             )
         spec = as_spec(backend)
-        g, n_pad = self._graph_for(pol, spec)
+        bundle = self._graph_for(pol, spec)
+        g, n_pad = bundle.ops, bundle.n_pad
+        # pin the operand epoch at plan time: everything this batch
+        # dispatches (phase 1, static, every chunk) keys its engines on
+        # the shape generation of the buffers resolved HERE
+        epoch = self._spec_epoch(bundle, spec)
         src_shards = _axes_size(self.mesh, pol.source_axes)
         morsels = pad_sources(sources, src_shards, pol.lanes, n_pad)
         # paper Fig 13: dense graphs cap concurrent source morsels (k);
@@ -1024,7 +1292,7 @@ class QueryDispatcher:
             else np.zeros(0, np.int64)
         )
         return sources, name, pol, ec, spec, g, n_pad, morsels, chunk, \
-            n_real, buckets
+            n_real, buckets, epoch
 
     def _hybrid_eligible(self, pol, state_layout: str) -> bool:
         return (
@@ -1051,7 +1319,8 @@ class QueryDispatcher:
         host-serial, and the budget/threshold state a later batch reads is
         only current once the earlier batch has settled."""
         (sources, name, pol, ec, spec, g, n_pad, morsels, chunk, n_real,
-         buckets) = self._plan_query(sources, returns_paths, policy, backend)
+         buckets, epoch) = self._plan_query(
+             sources, returns_paths, policy, backend)
         if morsels.shape[0] > chunk:
             # oversized batch: the in-flight cap splits it into a host-
             # stitched chunk loop — run synchronously at settle time
@@ -1060,17 +1329,18 @@ class QueryDispatcher:
                 "sources": sources, "name": name, "pol": pol, "ec": ec,
                 "spec": spec, "g": g, "n_pad": n_pad, "morsels": morsels,
                 "chunk": chunk, "state_layout": state_layout,
+                "epoch": epoch,
             }
             return InflightBatch("chunked", name, n_real, buckets, payload)
         if self._hybrid_eligible(pol, state_layout):
             inf = self._begin_hybrid(
                 pol, ec, g, n_pad, jnp.asarray(morsels), state_layout,
-                extend=spec, n_real=n_real, buckets=buckets,
+                extend=spec, n_real=n_real, buckets=buckets, epoch=epoch,
             )
             return InflightBatch("hybrid", name, n_real, buckets, inf)
         inf = self._begin_static(
             pol, ec, g, n_pad, jnp.asarray(morsels), state_layout,
-            extend=spec,
+            extend=spec, epoch=epoch,
         )
         return InflightBatch("static", name, n_real, buckets, inf)
 
@@ -1085,7 +1355,7 @@ class QueryDispatcher:
             outcome = self._run_chunked(
                 p["pol"], p["ec"], p["g"], p["n_pad"], p["morsels"],
                 p["chunk"], p["state_layout"], p["spec"],
-                inflight.n_real, inflight.buckets,
+                inflight.n_real, inflight.buckets, p.get("epoch", 0),
             )
             settled = SettledBatch(outcome)
         elif inflight.kind == "hybrid":
@@ -1102,7 +1372,7 @@ class QueryDispatcher:
         return settled.finalize()
 
     def _run_chunked(self, pol, ec, g, n_pad, morsels, chunk, state_layout,
-                     spec, n_real, buckets) -> QueryOutcome:
+                     spec, n_real, buckets, epoch=0) -> QueryOutcome:
         """The in-flight-cap chunk loop: fixed-size chunks, host-stitched
         into one outcome (learning/stats are applied once by the caller)."""
         run_fn = (
@@ -1123,7 +1393,7 @@ class QueryDispatcher:
                 run_fn(
                     pol, ec, g, n_pad, jnp.asarray(part), state_layout,
                     extend=spec, n_real=real_in,
-                    buckets=buckets[i : i + real_in],
+                    buckets=buckets[i : i + real_in], epoch=epoch,
                 )
             )
         result = IFEResult(

@@ -59,6 +59,15 @@ class AdaptiveScheduler(QueryDispatcher):
         )
         self.admissions = {"ntkms": 0, "per_query": 0}
 
+    def apply_delta(self, delta):
+        """Graph mutation through the dispatcher, plus the façade's own
+        stale-state refresh: its private admission queue captured
+        ``avg_degree`` at construction and the pooled-policy decision in
+        ``flush`` would keep keying on the pre-delta density."""
+        report = super().apply_delta(delta)
+        self._admission.avg_degree = float(self.csr.avg_degree)
+        return report
+
     # ----------------------------------------------------------- admission
 
     def submit(self, sources, qid: str | None = None) -> str:

@@ -117,6 +117,7 @@ class ServingStats:
     finalizes: int = 0
     overlapped_finalizes: int = 0
     cold_ms: float = 0.0
+    deltas_applied: int = 0  # graph mutations served mid-stream
     tenants: dict = dataclasses.field(default_factory=dict)
 
     @property
@@ -225,6 +226,13 @@ class ServingLoop:
         self._ms_per_iter: float | None = None
         # submit-time record per in-flight qid: (tenant, t_submit, t_deadline)
         self._meta: dict[str, tuple[str, float, float | None]] = {}
+        # DeltaReports of every apply_delta served by this loop, in order
+        self.delta_reports: list = []
+
+    @property
+    def graph_version(self) -> int:
+        """The dispatcher's current ``operands_version`` (0 = unmutated)."""
+        return self.dispatcher.operands_version
 
     # ------------------------------------------------------------- intake
 
@@ -337,6 +345,35 @@ class ServingLoop:
         if self.on_result is not None:
             self.on_result(qid, levels)
 
+    # ------------------------------------------------------------ mutation
+
+    def apply_delta(self, delta):
+        """Mutate the served graph mid-stream, with a defined fence:
+        every query admitted BEFORE this call is planned, dispatched and
+        settled against the pre-delta graph (the queue drains through
+        the normal pipeline first), and every query admitted after sees
+        the post-delta graph — no batch is ever torn across versions
+        (the dispatcher additionally pins each in-flight batch's operand
+        buffers at begin time, so even the overlapped pipeline can never
+        mix graphs inside one batch). The settled-but-unfinalized
+        pipeline tail may ride through the delta: its device work is
+        already complete against the old buffers, which its payload
+        keeps alive until the stitch.
+
+        Same-shape deltas keep every compiled engine warm — the serving
+        stream sees a buffer swap, not a cold start. Returns the
+        dispatcher's ``DeltaReport``."""
+        while self.admission.pending():
+            self.pump()
+        report = self.dispatcher.apply_delta(delta)
+        # stale-state sweep: the admission planner's pooled-policy and
+        # deadline math key on avg_degree, captured at construction —
+        # refresh it against the mutated graph
+        self.admission.avg_degree = float(self.dispatcher.csr.avg_degree)
+        self.stats.deltas_applied += 1
+        self.delta_reports.append(report)
+        return report
+
     # ------------------------------------------------------------- driving
 
     def drain(self) -> dict[str, np.ndarray]:
@@ -352,11 +389,15 @@ class ServingLoop:
 
     def run_stream(self, arrivals: list[dict]) -> dict[str, np.ndarray]:
         """Serve an open-loop arrival schedule: each entry is a dict with
-        ``t_ms`` (offset from stream start), ``sources``, and optionally
-        ``tenant`` / ``deadline_ms`` / ``qid``. Arrivals are admitted when
-        their time comes whether or not the loop is keeping up — queueing
-        delay under overload is the point of open-loop measurement — and
-        the stream is drained at the end."""
+        ``t_ms`` (offset from stream start) and either ``sources`` (a
+        query arrival, with optional ``tenant`` / ``deadline_ms`` /
+        ``qid``) or ``delta`` (a ``GraphDelta`` mutation applied at its
+        scheduled time through ``apply_delta``'s version fence — queries
+        scheduled before it are served on the old graph, after it on the
+        new). Arrivals are admitted when their time comes whether or not
+        the loop is keeping up — queueing delay under overload is the
+        point of open-loop measurement — and the stream is drained at
+        the end."""
         order = sorted(range(len(arrivals)), key=lambda i: arrivals[i]["t_ms"])
         t0 = self.clock()
         i = 0
@@ -365,6 +406,9 @@ class ServingLoop:
             while i < len(order) and arrivals[order[i]]["t_ms"] <= now_ms:
                 a = arrivals[order[i]]
                 i += 1
+                if "delta" in a:
+                    self.apply_delta(a["delta"])
+                    continue
                 self.submit(
                     a["sources"], tenant=a.get("tenant", "default"),
                     deadline_ms=a.get("deadline_ms"), qid=a.get("qid"),

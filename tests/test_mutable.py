@@ -1,0 +1,569 @@
+"""Mutable graphs (ISSUE 8): versioned delta operands + stale-state sweep.
+
+Locks the tentpole contract — ``apply_delta`` folds a ``GraphDelta`` into
+the live operand bundles and the result of update-then-query is
+bit-identical to rebuild-then-query on every backend — plus the satellite
+bugfixes: the EngineCache LRU bound, in-flight bundle pinning across a
+delta, the exact-deadline admission boundary, the dedup-consistency
+contract between ``apply_delta_csr`` and a from-scratch
+``csr_from_edges`` build, and the random-edit-script property test
+against the rebuild oracle (bucket-boundary crossings, zero<->nonzero
+degree transitions, an edgeless ``[n, 0]``-slab start).
+"""
+import functools
+
+import numpy as np
+import pytest
+
+from oracle import bfs_levels
+
+from repro.graph.csr import csr_from_edges
+from repro.graph.delta import (
+    GraphDelta,
+    apply_delta_csr,
+    diff_effective,
+    random_delta,
+)
+from repro.graph.generators import powerlaw
+from repro.launch.mesh import make_mesh
+from repro.runtime.admission import AdmissionQueue, SHED_EXPIRED
+from repro.runtime.dispatch import EngineCache, EngineKey, QueryDispatcher
+from repro.runtime.service import ServingLoop
+
+
+@functools.lru_cache(maxsize=None)
+def mesh11():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def _rand_csr(n=100, m=700, seed=0, weighted=False):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.1, 2.0, m).astype(np.float32) if weighted else None
+    return csr_from_edges(
+        n, rng.integers(0, n, m), rng.integers(0, n, m), weights=w
+    )
+
+
+def _levels(disp, srcs, **kw):
+    out = disp.query(srcs, **kw)
+    return np.asarray(out.result.state.levels)
+
+
+# ---------------------------------------------------------------------------
+# GraphDelta semantics + satellite 4: dedup/self-loop consistency
+# ---------------------------------------------------------------------------
+
+def test_delta_normalization_and_validation():
+    d = GraphDelta(add_src=[1, 2], add_dst=[3, 4])
+    assert d.n_adds == 2 and d.n_dels == 0
+    assert d.del_src.dtype == np.int64 and len(d.del_src) == 0
+    np.testing.assert_array_equal(d.touched_rows(), [1, 2])
+    with pytest.raises(ValueError):
+        GraphDelta(add_src=[1], add_dst=[2, 3])
+    with pytest.raises(ValueError):
+        GraphDelta(add_src=[1], add_dst=[2], add_weights=[1.0, 2.0])
+    with pytest.raises(ValueError):
+        GraphDelta(add_src=[99], add_dst=[0]).validate(n_nodes=10)
+    with pytest.raises(ValueError):
+        # weighted delta against an unweighted graph
+        apply_delta_csr(
+            _rand_csr(),
+            GraphDelta(add_src=[0], add_dst=[1], add_weights=[2.0]),
+        )
+
+
+def test_apply_delta_matches_concat_rebuild_dedup_and_self_loops():
+    """Satellite 4: ``apply_delta_csr(g, d)`` must agree edge-for-edge
+    (weights included) with ``csr_from_edges`` over the concatenated
+    surviving + inserted edge list — duplicate adds collapse, self-loops
+    are ordinary edges, deleting an absent edge is a no-op, and
+    re-inserting a live edge keeps the OLD weight (stable keep-first)."""
+    csr = _rand_csr(n=40, m=200, seed=3, weighted=True)
+    src, dst = csr.edge_list()
+    live = (int(src[7]), int(dst[7]))
+    delta = GraphDelta(
+        add_src=[5, 5, 5, live[0], 11],
+        add_dst=[5, 5, 9, live[1], 11],  # dup self-loops + live re-insert
+        del_src=[src[0], 13],
+        del_dst=[dst[0], 13],            # second delete likely absent
+        add_weights=[9.0, 8.0, 7.0, 123.0, 6.0],
+    )
+    got = apply_delta_csr(csr, delta)
+
+    # hand-built oracle over the same concatenation order
+    n = csr.n_nodes
+    key = src.astype(np.int64) * n + dst.astype(np.int64)
+    dkey = np.unique(delta.del_src * n + delta.del_dst)
+    keep = ~np.isin(key, dkey)
+    ref = csr_from_edges(
+        n,
+        np.concatenate([src[keep], delta.add_src]),
+        np.concatenate([dst[keep], delta.add_dst]),
+        weights=np.concatenate([csr.weights[keep], delta.add_weights]),
+        dedup=True,
+    )
+    np.testing.assert_array_equal(got.indptr, ref.indptr)
+    np.testing.assert_array_equal(got.indices, ref.indices)
+    np.testing.assert_array_equal(got.weights, ref.weights)
+
+    # keep-first: the re-inserted live edge kept its original weight
+    w_live = csr.weights[7]
+    pos = np.flatnonzero(
+        got.edge_keys() == live[0] * n + live[1]
+    )
+    assert len(pos) == 1 and got.weights[pos[0]] == w_live
+    # dedup'd CSR edge keys are strictly increasing (no duplicates)
+    assert (np.diff(got.edge_keys()) > 0).all()
+    # the duplicate self-loop collapsed to one edge with the FIRST weight
+    pos55 = np.flatnonzero(got.edge_keys() == 5 * n + 5)
+    assert len(pos55) == 1 and got.weights[pos55[0]] == np.float32(9.0)
+
+
+def test_diff_effective_sees_truncation_boundary():
+    """A delete under a degree cap can pull a previously truncated edge
+    into the effective set — the diff compares full per-row effective
+    sets, so the fold rewrites that row."""
+    from repro.core.extend import effective_csr
+
+    # row 0 with degree 10, cap at 8 -> 2 truncated edges
+    src = np.zeros(10, np.int64)
+    dst = np.arange(1, 11, dtype=np.int64)
+    csr = csr_from_edges(12, src, dst)
+    delta = GraphDelta(del_src=[0], del_dst=[1])
+    new = apply_delta_csr(csr, delta)
+    diff = diff_effective(
+        effective_csr(csr, 8), effective_csr(new, 8), delta
+    )
+    # edge (0,1) left, a truncated edge entered: both directions dirty
+    assert 0 in diff.fwd_dirty and diff.n_changed_edges >= 2
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: EngineCache bounded LRU
+# ---------------------------------------------------------------------------
+
+def _key(i, epoch=0):
+    return EngineKey(
+        kind="static", policy=("p",), edge_compute="sp",
+        n_nodes_padded=64, max_iters=i, state_layout="replicated",
+        extend=None, stats=True, operands_epoch=epoch,
+    )
+
+
+def test_engine_cache_lru_eviction_and_accounting():
+    c = EngineCache(max_entries=2)
+    c.get_or_build(_key(1), lambda: "e1")
+    c.get_or_build(_key(2), lambda: "e2")
+    c.note_shape(_key(1), (4,))
+    c.note_shape(_key(2), (4,))
+    assert c.compile_events == 4 and len(c) == 2
+    c.get_or_build(_key(1), lambda: "BUG")  # hit refreshes recency
+    c.get_or_build(_key(3), lambda: "e3")   # evicts key 2 (LRU), not 1
+    assert _key(2) not in c and _key(1) in c and _key(3) in c
+    assert c.evictions == 1 and len(c) == 2
+    # the evicted key's shape ledger went with it: same shape is a fresh
+    # miss again, exactly what the re-compile will cost
+    assert c.note_shape(_key(2), (4,)) is True
+    assert c.get_or_build(_key(2), lambda: "e2b") == "e2b"
+    assert c.misses == 4 and c.evictions == 2  # reinsert evicted key 1
+
+
+def test_engine_cache_invalidate_and_bounds():
+    c = EngineCache(max_entries=8)
+    for i in range(4):
+        c.get_or_build(_key(i, epoch=i % 2), lambda i=i: f"e{i}")
+        c.note_shape(_key(i, epoch=i % 2), (8,))
+    n = c.invalidate(lambda k: k.operands_epoch == 1)
+    assert n == 2 and c.invalidations == 2 and len(c) == 2
+    assert all(k.operands_epoch == 0 for k in c.keys())
+    # pruned ledger: invalidated keys pay fresh shape misses on return
+    assert c.note_shape(_key(1, epoch=1), (8,)) is True
+    with pytest.raises(ValueError):
+        EngineCache(max_entries=0)
+    # unbounded cache never evicts
+    u = EngineCache(max_entries=None)
+    for i in range(300):
+        u.get_or_build(_key(i), lambda: i)
+    assert len(u) == 300 and u.evictions == 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: exact-deadline admission boundary (injectable clock)
+# ---------------------------------------------------------------------------
+
+def test_deadline_exact_boundary_sheds_at_plan():
+    clock = [1000.0]
+    q = AdmissionQueue(
+        n_nodes=100, n_devices=1, avg_degree=5.0, clock=lambda: clock[0]
+    )
+    q.submit(np.array([1, 2], np.int32), qid="exact", deadline_ms=50.0)
+    clock[0] = 1000.050  # plan at EXACTLY the deadline instant
+    plan = q.plan()
+    assert not plan.batches and "exact" not in plan.instant
+    assert q.stats.sheds_by_reason[SHED_EXPIRED] == 1
+    # one tick earlier the same ticket is NOT expired (it may still be
+    # shed as hopeless, but never as expired)
+    q2 = AdmissionQueue(
+        n_nodes=100, n_devices=1, avg_degree=5.0, clock=lambda: clock[0]
+    )
+    clock[0] = 1000.0
+    q2.submit(np.array([1, 2], np.int32), qid="alive", deadline_ms=50.0)
+    clock[0] = 1000.0499
+    q2.plan()
+    assert q2.stats.sheds_by_reason[SHED_EXPIRED] == 0
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: update-then-query == rebuild-then-query, per backend
+# ---------------------------------------------------------------------------
+
+BACKENDS_FAST = ["dopt", "pull_binned_fused", "block_mxu"]
+BACKENDS_SLOW = ["ell_push", "ell_pull", "pull_binned"]
+
+
+def _parity_case(backend, state_layout="replicated", policy=None,
+                 weighted=False):
+    csr = _rand_csr(n=120, m=900, seed=1, weighted=weighted)
+    rng = np.random.default_rng(5)
+    delta = random_delta(csr, n_adds=25, n_dels=25, seed=7)
+    srcs = rng.integers(0, 120, 8).astype(np.int32)
+    d = QueryDispatcher(mesh11(), csr, max_iters=32)
+    d.query(srcs, backend=backend, state_layout=state_layout, policy=policy)
+    rep = d.apply_delta(delta)
+    assert rep.version == 1 and d.operands_version == 1
+    lv = _levels(d, srcs, backend=backend, state_layout=state_layout,
+                 policy=policy)
+    d2 = QueryDispatcher(mesh11(), apply_delta_csr(csr, delta), max_iters=32)
+    lv2 = _levels(d2, srcs, backend=backend, state_layout=state_layout,
+                  policy=policy)
+    np.testing.assert_array_equal(lv, lv2)
+
+
+@pytest.mark.parametrize("backend", BACKENDS_FAST)
+def test_update_then_query_matches_rebuild(backend):
+    _parity_case(backend)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", BACKENDS_SLOW)
+def test_update_then_query_matches_rebuild_all_backends(backend):
+    _parity_case(backend)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["dopt", "pull_binned_fused"])
+def test_update_then_query_matches_rebuild_sharded(backend):
+    _parity_case(backend, state_layout="sharded")
+
+
+@pytest.mark.slow
+def test_update_then_query_matches_rebuild_msbfs_lanes():
+    _parity_case("dopt", policy="ntkms")
+
+
+def test_update_then_query_weighted_graph():
+    _parity_case("dopt", weighted=True)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: same-shape delta keeps compiled engines warm
+# ---------------------------------------------------------------------------
+
+def _warm_graph():
+    """In-degrees only {10, 11}: one refined reverse bucket of width 11,
+    so swapping an 11-in-degree target with a 10-in-degree one (same
+    source, out-degree unchanged) moves rows *within* existing slabs and
+    every operand structure keeps its exact shape."""
+    n = 64
+    rng = np.random.default_rng(7)
+    src_l, dst_l = [], []
+    targets = list(range(32, 56))
+    for i, t in enumerate(targets):
+        for s in rng.choice(32, size=(10 if i % 2 == 0 else 11),
+                            replace=False):
+            src_l.append(int(s))
+            dst_l.append(int(t))
+    csr = csr_from_edges(n, np.array(src_l), np.array(dst_l))
+    indeg = np.zeros(n, int)
+    np.add.at(indeg, np.array(dst_l), 1)
+    edges = set(zip(src_l, dst_l))
+    for (s, t) in edges:
+        if indeg[t] == 11:
+            for t2 in targets:
+                if indeg[t2] == 10 and (s, t2) not in edges:
+                    return csr, GraphDelta(
+                        add_src=[s], add_dst=[t2],
+                        del_src=[s], del_dst=[t],
+                    )
+    raise AssertionError("unreachable: constructed graph has both degrees")
+
+
+@pytest.mark.parametrize("backend", ["pull_binned_fused", "dopt"])
+def test_same_shape_delta_keeps_engines_warm(backend):
+    csr, delta = _warm_graph()
+    d = QueryDispatcher(mesh11(), csr, max_iters=32)
+    rng = np.random.default_rng(0)
+    srcs = rng.integers(0, 32, 8).astype(np.int32)
+    for _ in range(2):  # warm up: let the budget model's choice settle
+        d.query(srcs, backend=backend)
+    before = d.cache.compile_events
+    rep = d.apply_delta(delta)
+    assert rep.same_shape and rep.engines_invalidated == 0
+    assert rep.structures_rebuilt == 0
+    lv = _levels(d, srcs, backend=backend)
+    assert d.cache.compile_events == before, (
+        "same-shape delta must not trigger any engine compile or retrace"
+    )
+    d2 = QueryDispatcher(mesh11(), apply_delta_csr(csr, delta), max_iters=32)
+    np.testing.assert_array_equal(lv, _levels(d2, srcs, backend=backend))
+
+
+def test_shape_changing_delta_invalidates_only_stale_engines():
+    csr = _rand_csr(n=100, m=400, seed=2)
+    d = QueryDispatcher(mesh11(), csr, max_iters=32)
+    srcs = np.arange(6, dtype=np.int32)
+    d.query(srcs, backend="dopt")
+    n_engines = len(d.cache)
+    # 60 adds onto one target forces a reverse-slab reshape
+    rng = np.random.default_rng(9)
+    delta = GraphDelta(
+        add_src=rng.integers(0, 100, 60), add_dst=np.full(60, 3)
+    )
+    rep = d.apply_delta(delta)
+    assert not rep.same_shape and rep.engines_invalidated > 0
+    assert rep.engines_invalidated <= n_engines
+    lv = _levels(d, srcs, backend="dopt")
+    d2 = QueryDispatcher(mesh11(), apply_delta_csr(csr, delta), max_iters=32)
+    np.testing.assert_array_equal(lv, _levels(d2, srcs, backend="dopt"))
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: in-flight batches pin their operand bundle
+# ---------------------------------------------------------------------------
+
+def test_inflight_batch_pins_pre_delta_bundle():
+    csr = powerlaw(160, 5.0, seed=0)
+    rng = np.random.default_rng(3)
+    delta = random_delta(csr, 15, 15, seed=9)
+    csr2 = apply_delta_csr(csr, delta)
+    d = QueryDispatcher(mesh11(), csr, max_iters=64)
+    srcs = rng.integers(0, 160, 4).astype(np.int32)
+    inflight = d.begin_batch(srcs, backend="dopt")
+    d.apply_delta(delta)  # lands while the batch is in flight
+    outcome = d.finalize_batch(d.settle_batch(inflight))
+    lv = np.asarray(outcome.result.state.levels)[: len(srcs), : csr.n_nodes]
+    ref_old = np.stack([bfs_levels(csr, int(s)) for s in srcs])
+    np.testing.assert_array_equal(
+        lv, ref_old, err_msg="in-flight batch must finish on the OLD graph"
+    )
+    lv2 = _levels(d, srcs, backend="dopt")[: len(srcs), : csr2.n_nodes]
+    ref_new = np.stack([bfs_levels(csr2, int(s)) for s in srcs])
+    np.testing.assert_array_equal(
+        lv2, ref_new, err_msg="post-delta query must see the NEW graph"
+    )
+
+
+# ---------------------------------------------------------------------------
+# ServingLoop fence
+# ---------------------------------------------------------------------------
+
+def test_serving_loop_delta_fence_old_before_new_after():
+    csr = powerlaw(160, 5.0, seed=0)
+    rng = np.random.default_rng(3)
+    delta = random_delta(csr, 15, 15, seed=9)
+    csr2 = apply_delta_csr(csr, delta)
+    loop = ServingLoop(mesh11(), csr, backend="dopt", family="powerlaw",
+                       max_iters=64, overlap=True)
+    pre = {f"pre{q}": rng.integers(0, 160, 4).astype(np.int32)
+           for q in range(2)}
+    for qid, s in pre.items():
+        loop.submit(s, qid=qid)
+    rep = loop.apply_delta(delta)
+    assert rep.version == 1 and loop.graph_version == 1
+    assert loop.stats.deltas_applied == 1
+    assert loop.delta_reports == [rep]
+    post = {f"post{q}": rng.integers(0, 160, 4).astype(np.int32)
+            for q in range(2)}
+    for qid, s in post.items():
+        loop.submit(s, qid=qid)
+    results = loop.drain()
+    for qid, s in pre.items():
+        ref = np.stack([bfs_levels(csr, int(x)) for x in s])
+        np.testing.assert_array_equal(
+            results[qid], ref,
+            err_msg=f"{qid}: admitted before the delta -> old graph",
+        )
+    for qid, s in post.items():
+        ref = np.stack([bfs_levels(csr2, int(x)) for x in s])
+        np.testing.assert_array_equal(
+            results[qid], ref,
+            err_msg=f"{qid}: admitted after the delta -> new graph",
+        )
+    # the admission estimator follows the mutated graph's density
+    assert loop.admission.avg_degree == pytest.approx(csr2.avg_degree)
+
+
+def test_run_stream_applies_delta_entries_in_order():
+    csr = powerlaw(160, 5.0, seed=0)
+    rng = np.random.default_rng(4)
+    delta = random_delta(csr, 20, 20, seed=8)
+    csr2 = apply_delta_csr(csr, delta)
+    a = rng.integers(0, 160, 4).astype(np.int32)
+    b = rng.integers(0, 160, 4).astype(np.int32)
+    loop = ServingLoop(mesh11(), csr, backend="dopt", family="powerlaw",
+                       max_iters=64, overlap=True)
+    out = loop.run_stream([
+        {"t_ms": 0.0, "sources": a, "qid": "a"},
+        {"t_ms": 5.0, "delta": delta},
+        {"t_ms": 9.0, "sources": b, "qid": "b"},
+    ])
+    np.testing.assert_array_equal(
+        out["a"], np.stack([bfs_levels(csr, int(x)) for x in a])
+    )
+    np.testing.assert_array_equal(
+        out["b"], np.stack([bfs_levels(csr2, int(x)) for x in b])
+    )
+    assert loop.stats.deltas_applied == 1
+
+
+@pytest.mark.slow
+def test_serving_loop_same_shape_delta_flat_compile_events():
+    """The ISSUE acceptance bar: a same-shape delta applied mid-stream
+    leaves ``EngineCache.compile_events`` unchanged while serving correct
+    post-delta results."""
+    csr, delta = _warm_graph()
+    csr2 = apply_delta_csr(csr, delta)
+    rng = np.random.default_rng(1)
+    loop = ServingLoop(mesh11(), csr, backend="pull_binned_fused",
+                       max_iters=32, overlap=True)
+    for q in range(3):  # warm the cache and the budget model
+        loop.submit(rng.integers(0, 32, 8).astype(np.int32), qid=f"w{q}")
+        loop.pump()
+    loop.drain()
+    before = loop.dispatcher.cache.compile_events
+    rep = loop.apply_delta(delta)
+    assert rep.same_shape
+    s = rng.integers(0, 32, 8).astype(np.int32)
+    loop.submit(s, qid="after")
+    results = loop.drain()
+    assert loop.dispatcher.cache.compile_events == before
+    ref = np.stack([bfs_levels(csr2, int(x)) for x in s])
+    np.testing.assert_array_equal(results["after"], ref)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 5: random edit scripts vs the rebuild oracle
+# ---------------------------------------------------------------------------
+
+def _check_bundle_invariants(disp):
+    """Structural invariants of every live host mirror: perm/inverse
+    roundtrip and the refinement bound width <= 1.1 * in_degree."""
+    from repro.core.extend import effective_csr
+
+    eff = effective_csr(disp.csr, disp.max_deg)
+    rev = eff.reverse()
+    indeg = np.diff(rev.indptr)
+    for bundle in disp._graphs.values():
+        host = bundle.host
+        if host is None or host.rev_binned is None:
+            continue
+        bn = host.rev_binned
+        K = bn.perm.shape[0]
+        rows_local = bn.inv.shape[-1]
+        for k in range(K):
+            filled = bn.perm[k][bn.perm[k] < rows_local]
+            assert len(np.unique(filled)) == len(filled)
+            np.testing.assert_array_equal(
+                bn.perm[k][bn.inv[k]], np.arange(rows_local)
+            )
+        widths = [s.shape[-1] for s in bn.slabs]
+        starts = np.cumsum([0] + [s.shape[1] for s in bn.slabs])
+        for k in range(K):
+            for b, w in enumerate(widths):
+                rows = bn.perm[k][starts[b]:starts[b + 1]]
+                for r in rows[rows < rows_local]:
+                    g = k * rows_local + int(r)
+                    if g >= eff.n_nodes:
+                        continue
+                    d = int(indeg[g])
+                    if d == 0:
+                        assert w == 0 or b == 0
+                    else:
+                        assert d <= w <= 1.1 * d + 1e-9, (k, b, g, d, w)
+
+
+@pytest.mark.parametrize("seed", [1, 2])
+def test_random_edit_scripts_vs_rebuild_oracle(seed):
+    csr = _rand_csr(n=100, m=700, seed=seed)
+    d = QueryDispatcher(mesh11(), csr, max_iters=32)
+    cur = csr
+    r = np.random.default_rng(seed)
+    versions = [0]
+    for step in range(6):
+        kind = step % 4
+        n = cur.n_nodes
+        if kind == 0:  # mixed random edits (dup deletes included)
+            delta = random_delta(
+                cur, n_adds=int(r.integers(0, 15)),
+                n_dels=int(r.integers(0, 15)),
+                seed=int(r.integers(10**6)),
+            )
+        elif kind == 1:  # duplicate adds + self-loops
+            v = r.integers(0, n, 4)
+            delta = GraphDelta(
+                add_src=np.concatenate([v, v]),
+                add_dst=np.concatenate([v, v]),
+            )
+        elif kind == 2:  # zero a node's out-degree (nonzero -> zero)
+            u = int(r.integers(0, n))
+            s, t = cur.edge_list()
+            mine = t[s == u]
+            delta = GraphDelta(del_src=np.full(len(mine), u), del_dst=mine)
+        else:  # pile 20 edges onto one target: bucket-boundary crossing
+            t0 = int(r.integers(0, n))
+            delta = GraphDelta(
+                add_src=r.integers(0, n, 20), add_dst=np.full(20, t0)
+            )
+        rep = d.apply_delta(delta)
+        versions.append(rep.version)
+        cur = apply_delta_csr(cur, delta)
+        _check_bundle_invariants(d)
+        srcs = r.integers(0, n, 5).astype(np.int32)
+        lv = _levels(d, srcs, backend="dopt")
+        oracle = QueryDispatcher(mesh11(), cur, max_iters=32)
+        np.testing.assert_array_equal(
+            lv, _levels(oracle, srcs, backend="dopt"),
+            err_msg=f"step {step} (kind {kind})",
+        )
+    assert versions == list(range(7))  # monotone operands_version
+
+
+def test_edgeless_slab_round_trip():
+    """[n, 0]-slab start: populate an edgeless graph by delta, query,
+    then delete every edge again — parity with the rebuild at each stop."""
+    rng = np.random.default_rng(5)
+    empty = csr_from_edges(50, np.zeros(0, np.int64), np.zeros(0, np.int64))
+    d = QueryDispatcher(mesh11(), empty, max_iters=16)
+    src = np.array([3], np.int32)
+    assert _levels(d, src, backend="dopt") is not None
+
+    grow = GraphDelta(
+        add_src=rng.integers(0, 50, 60), add_dst=rng.integers(0, 50, 60)
+    )
+    d.apply_delta(grow)
+    cur = apply_delta_csr(empty, grow)
+    assert cur.n_edges > 0
+    oracle = QueryDispatcher(mesh11(), cur, max_iters=16)
+    np.testing.assert_array_equal(
+        _levels(d, src, backend="dopt"), _levels(oracle, src, backend="dopt")
+    )
+
+    s, t = cur.edge_list()
+    shrink = GraphDelta(del_src=s, del_dst=t)
+    d.apply_delta(shrink)
+    back = apply_delta_csr(cur, shrink)
+    assert back.n_edges == 0
+    oracle2 = QueryDispatcher(mesh11(), back, max_iters=16)
+    np.testing.assert_array_equal(
+        _levels(d, src, backend="dopt"), _levels(oracle2, src, backend="dopt")
+    )
