@@ -1,0 +1,365 @@
+"""New query-scenario families through the unchanged serving stack
+(ISSUE 9).
+
+Three scenario families — weighted top-k path distances, personalized
+PageRank (epsilon-terminated residual diffusion), and 2/3-hop pattern
+walk counts — are registered edge computes, so the admission -> hybrid
+dispatch -> online-learning stack serves them with zero scheduler-layer
+special-casing. Measured here, per family, through a live
+``ServingLoop`` (admission plan, two-phase hybrid, budget learners all
+on):
+
+- **serve wall**: warm per-query wall of a small submitted stream, with
+  every delivered result checked against the pure-numpy oracle
+  (bitwise for the monotone/int families; ULP-tolerant for PPR, whose
+  scatter-add order differs from ``np.add.at``);
+- **lane guard**: none of the three families has a saturating lane
+  form, so no engine the stream compiled may carry a multi-lane policy
+  (the MS-BFS pack path is provably never taken);
+- **weighted churn** (the weighted-delta fold floor): a chain of
+  weight-only deltas — each edge deleted and re-inserted at a new
+  weight, so every operand keeps its exact shape — folded into the live
+  bundles dirty-row-only for less total wall than the wholesale
+  re-place baseline (one ``prepare_graph`` per live bundle on the
+  post-delta CSR), with the folded dispatcher's top-k distances
+  bit-identical to a from-scratch rebuild at the end of the chain.
+
+Floors (asserted in-process and by ``scripts/ci.sh --bench-smoke``):
+every scenario oracle-identical through the stack, no lane-packed
+engine, churn fold wall < wholesale re-place wall, churn results
+bit-identical to the rebuild.
+
+Writes machine-readable ``BENCH_query_scenarios.json`` (schema
+validated in-process and re-validated by the CI lane).
+
+    PYTHONPATH=src python benchmarks/query_scenarios.py [--smoke] \
+        [--out BENCH_query_scenarios.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).parent))
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+# the bench reuses the test corpus' numpy oracles (single source of
+# truth for the scenario semantics) rather than duplicating them here
+sys.path.insert(0, str(Path(__file__).parent.parent / "tests"))
+
+SCHEMA = 1
+
+KINDS = ("topk_paths", "ppr", "pattern_counts")
+
+REQUIRED = {
+    "schema": int,
+    "smoke": bool,
+    "workload": dict,
+    "scenarios": list,
+    "weighted_churn": dict,
+    "summary": dict,
+}
+SCENARIO_FIELDS = (
+    "kind", "edge_compute", "queries", "serve_wall_ms_per_query",
+    "iterations", "oracle_match", "lane_packed", "batches",
+)
+CHURN_FIELDS = (
+    "n_deltas", "edges_reweighted", "fold_wall_ms", "replace_wall_ms",
+    "wall_speedup", "same_shape_all", "oracle_match",
+)
+
+
+def validate(doc: dict) -> None:
+    """Schema + acceptance guards for BENCH_query_scenarios.json: all
+    three scenario families served oracle-identical through the stack
+    with no lane-packed engine, and the weighted-churn fold strictly
+    cheaper in total wall than the wholesale re-place baseline."""
+    for key, ty in REQUIRED.items():
+        assert key in doc, f"missing top-level field: {key}"
+        assert isinstance(doc[key], ty), (key, type(doc[key]))
+    assert doc["schema"] == SCHEMA, doc["schema"]
+    kinds = [s["kind"] for s in doc["scenarios"]]
+    assert sorted(kinds) == sorted(KINDS), kinds
+    for s in doc["scenarios"]:
+        for f in SCENARIO_FIELDS:
+            assert f in s, f"scenario {s.get('kind')} missing field: {f}"
+        assert s["oracle_match"] is True, s
+        assert s["lane_packed"] is False, (
+            "a no-lane-form kind compiled a multi-lane engine", s
+        )
+        assert s["queries"] >= 1 and s["batches"] >= 1, s
+        assert s["serve_wall_ms_per_query"] > 0, s
+        assert s["iterations"] >= 1, s
+    c = doc["weighted_churn"]
+    for f in CHURN_FIELDS:
+        assert f in c, f"weighted_churn missing field: {f}"
+    assert c["n_deltas"] >= 2 and c["edges_reweighted"] >= 1, c
+    assert c["same_shape_all"] is True, (
+        "weight-only churn must never change an operand shape", c
+    )
+    assert c["oracle_match"] is True, c
+    assert c["fold_wall_ms"] < c["replace_wall_ms"], (
+        "weighted-delta fold must beat the wholesale re-place: "
+        f"{c['fold_wall_ms']:.1f} vs {c['replace_wall_ms']:.1f} ms"
+    )
+    s = doc["summary"]
+    for f in ("all_oracle_match", "no_lane_packing",
+              "passes_churn_floor"):
+        assert f in s and s[f] is True, (f, s)
+
+
+def smoke_line(doc: dict) -> str:
+    """One-line artifact summary for the CI bench-smoke lane."""
+    per = ", ".join(
+        f"{s['kind']} {s['serve_wall_ms_per_query']:.1f} ms/q "
+        f"({s['iterations']} iters)"
+        for s in doc["scenarios"]
+    )
+    c = doc["weighted_churn"]
+    return (
+        f"{per}; all oracle-identical, no lane packing; weighted churn "
+        f"fold {c['fold_wall_ms']:.1f} ms vs re-place "
+        f"{c['replace_wall_ms']:.1f} ms ({c['wall_speedup']:.2f}x)"
+    )
+
+
+def weighted_graph(n: int, m: int, seed: int = 0):
+    from repro.graph.csr import csr_from_edges
+
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.1, 2.0, m).astype(np.float32)
+    return csr_from_edges(
+        n, rng.integers(0, n, m), rng.integers(0, n, m), weights=w
+    )
+
+
+def _oracle_match(kind: str, csr, sources, got) -> bool:
+    from oracle import pattern_counts, ppr_mass, topk_dists
+
+    n = csr.n_nodes
+    if kind == "topk_paths":
+        ref = np.stack([topk_dists(csr, [int(s)]) for s in sources])
+        return bool(np.array_equal(np.asarray(got), ref))
+    if kind == "ppr":
+        ref = np.stack([ppr_mass(csr, [int(s)])[0] for s in sources])
+        # XLA scatter-add order differs from np.add.at: ULP tolerance
+        # against the oracle only (engine-vs-engine parity is bitwise
+        # and lives in tests/test_queries.py)
+        return bool(np.allclose(np.asarray(got), ref, rtol=1e-5,
+                                atol=1e-7))
+    refs = [pattern_counts(csr, [int(s)]) for s in sources]
+    return bool(
+        np.array_equal(np.asarray(got["wedges"]),
+                       np.stack([r[0] for r in refs]))
+        and np.array_equal(np.asarray(got["closed"]),
+                           np.stack([r[1] for r in refs]))
+    )
+
+
+def run_scenarios(mesh, csr, n_queries: int, max_iters: int) -> list:
+    from repro.core import QUERY_KINDS
+    from repro.runtime.service import ServingLoop
+
+    import jax
+
+    rng = np.random.default_rng(3)
+    records = []
+    for kind in KINDS:
+        loop = ServingLoop(mesh, csr, max_iters=max_iters)
+        warm = loop.submit([int(rng.integers(0, csr.n_nodes))],
+                           query_kind=kind)
+        loop.drain()
+        subs = {}
+        for _q in range(n_queries):
+            s = [int(rng.integers(0, csr.n_nodes))]
+            subs[loop.submit(s, query_kind=kind).qid] = s
+        t0 = time.perf_counter()
+        res = loop.drain()
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        ok = all(
+            _oracle_match(kind, csr, s, res[qid])
+            for qid, s in subs.items()
+        )
+        lane_packed = any(
+            k.policy.lanes > 1 for k in loop.dispatcher.cache.keys()
+        )
+        # iteration depth telemetry from one direct dispatch
+        out = loop.dispatcher.query(
+            [int(rng.integers(0, csr.n_nodes))], query_kind=kind
+        )
+        iters = int(np.max(np.asarray(out.result.iterations)))
+        records.append({
+            "kind": kind,
+            "edge_compute": QUERY_KINDS[kind].edge_compute,
+            "queries": int(n_queries),
+            "serve_wall_ms_per_query": float(wall_ms / n_queries),
+            "iterations": iters,
+            "oracle_match": bool(ok),
+            "lane_packed": bool(lane_packed),
+            "batches": int(loop.stats.batches),
+        })
+        print(
+            f"{kind}: {n_queries} queries in {wall_ms:.1f} ms "
+            f"({wall_ms / n_queries:.1f} ms/q), {iters} iters, "
+            f"oracle match {ok}, lane_packed {lane_packed}"
+        )
+        del warm
+    return records
+
+
+def run_weighted_churn(mesh, csr, n_deltas: int, edges_per_delta: int,
+                       max_iters: int) -> dict:
+    """Weight-only churn: delete + re-insert the same edges at new
+    weights (shapes pinned by construction), fold vs wholesale re-place
+    of every live bundle, top-k results checked against a rebuild."""
+    import jax
+
+    from repro.core.dispatcher import prepare_graph
+    from repro.graph.delta import GraphDelta, apply_delta_csr
+    from repro.runtime.dispatch import QueryDispatcher
+
+    rng = np.random.default_rng(11)
+    disp = QueryDispatcher(mesh, csr, max_iters=max_iters)
+    srcs = rng.integers(0, csr.n_nodes, 4).astype(np.int32)
+    for _ in range(2):  # warm the engines and the budget model
+        disp.query(srcs, query_kind="topk_paths")
+
+    cur = csr
+    fold_total = replace_total = 0.0
+    same_shape_all = True
+    reweighted = 0
+    for i in range(n_deltas):
+        s, t = cur.edge_list()
+        pick = np.unique(
+            rng.integers(0, cur.n_edges, size=edges_per_delta)
+        )
+        reweighted += len(pick)
+        delta = GraphDelta(
+            add_src=s[pick], add_dst=t[pick],
+            del_src=s[pick], del_dst=t[pick],
+            add_weights=rng.uniform(0.1, 2.0, len(pick)).astype(
+                np.float32
+            ),
+        )
+        t0 = time.perf_counter()
+        rep = disp.apply_delta(delta)
+        jax.block_until_ready([b.ops for b in disp._graphs.values()])
+        fold_ms = (time.perf_counter() - t0) * 1e3
+        same_shape_all = same_shape_all and rep.same_shape
+        cur = apply_delta_csr(cur, delta)
+
+        # wholesale re-place baseline: rebuild every live bundle's
+        # operand set from the post-delta CSR (what a server without
+        # weight-aware folds would redo on each re-weighting)
+        t0 = time.perf_counter()
+        rebuilt = [
+            prepare_graph(cur, mesh, b.policy, None,
+                          pad_shards=mesh.size, extend=b.spec)[0]
+            for b in disp._graphs.values()
+        ]
+        jax.block_until_ready(rebuilt)
+        replace_ms = (time.perf_counter() - t0) * 1e3
+        fold_total += fold_ms
+        replace_total += replace_ms
+        print(
+            f"churn {i}: fold {fold_ms:.1f} ms vs re-place "
+            f"{replace_ms:.1f} ms, same_shape={rep.same_shape}, "
+            f"{len(pick)} edges reweighted"
+        )
+
+    folded = np.asarray(
+        disp.query(srcs, query_kind="topk_paths").result.state.dists
+    )
+    rebuilt_disp = QueryDispatcher(mesh, cur, max_iters=max_iters)
+    ref = np.asarray(
+        rebuilt_disp.query(srcs, query_kind="topk_paths").result.state.dists
+    )
+    ok = bool(np.array_equal(folded, ref))
+    return {
+        "n_deltas": int(n_deltas),
+        "edges_reweighted": int(reweighted),
+        "fold_wall_ms": float(fold_total),
+        "replace_wall_ms": float(replace_total),
+        "wall_speedup": (
+            float(replace_total / fold_total) if fold_total else 1.0
+        ),
+        "same_shape_all": bool(same_shape_all),
+        "oracle_match": ok,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small graph / short stream (CI bench-smoke)")
+    ap.add_argument("--out", default=str(
+        Path(__file__).resolve().parent.parent
+        / "BENCH_query_scenarios.json"
+    ))
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from repro.launch.mesh import make_mesh
+
+    if args.smoke:
+        n, m, n_queries, n_deltas, per_delta = 384, 2304, 2, 4, 24
+        churn_n, churn_m = 3072, 24576
+    else:
+        n, m, n_queries, n_deltas, per_delta = 1536, 12288, 4, 6, 64
+        churn_n, churn_m = 6144, 49152
+    max_iters = 512
+    csr = weighted_graph(n, m)
+    mesh = make_mesh((1, jax.device_count()), ("data", "model"))
+    print(
+        f"scenario workload: {csr.n_nodes} nodes, {csr.n_edges} weighted "
+        f"edges; {n_queries} queries/family through a live ServingLoop"
+    )
+
+    scenarios = run_scenarios(mesh, csr, n_queries, max_iters)
+    # the churn floor gets a larger graph: the fold's wall scales with
+    # the dirty rows, the re-place baseline's with the whole operand
+    # set, and the gap is the point being measured
+    churn = run_weighted_churn(
+        mesh, weighted_graph(churn_n, churn_m, seed=1), n_deltas,
+        per_delta, max_iters,
+    )
+
+    doc = {
+        "schema": SCHEMA,
+        "smoke": bool(args.smoke),
+        "workload": {
+            "n_nodes": int(csr.n_nodes),
+            "n_edges": int(csr.n_edges),
+            "weighted": True,
+            "queries_per_family": int(n_queries),
+            "max_iters": int(max_iters),
+        },
+        "scenarios": scenarios,
+        "weighted_churn": churn,
+        "summary": {
+            "all_oracle_match": bool(
+                all(s["oracle_match"] for s in scenarios)
+                and churn["oracle_match"]
+            ),
+            "no_lane_packing": bool(
+                not any(s["lane_packed"] for s in scenarios)
+            ),
+            "passes_churn_floor": bool(
+                churn["fold_wall_ms"] < churn["replace_wall_ms"]
+            ),
+        },
+    }
+    validate(doc)
+    Path(args.out).write_text(json.dumps(doc, indent=1, sort_keys=True))
+    print(f"summary: {smoke_line(doc)}")
+    print(f"wrote {args.out} (schema v{SCHEMA} validated)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -46,7 +46,17 @@
 #                               # bundle, compile_events flat across the
 #                               # delta chain, every post-delta query
 #                               # bit-identical to the BFS oracle, and the
-#                               # reshape probe invalidating stale engines)
+#                               # reshape probe invalidating stale engines);
+#                               # finally run the query-scenarios benchmark
+#                               # in --smoke mode and validate
+#                               # BENCH_query_scenarios.json (schema + the
+#                               # scenario floors: top-k paths / PPR /
+#                               # pattern counts all oracle-identical
+#                               # through the live serving stack with no
+#                               # lane-packed engine, and the weighted
+#                               # weight-only churn chain folding for less
+#                               # total wall than the wholesale re-place
+#                               # baseline, bit-identical to a rebuild)
 #
 # CI_BUDGET_SECONDS caps any lane via timeout (default 1800); a hung XLA
 # compile or subprocess fails the lane instead of wedging the pipeline.
@@ -103,6 +113,10 @@ elif [[ "${1:-}" == "--bench-smoke" ]]; then
   timeout --signal=INT "$BUDGET" \
     python benchmarks/mutable_ops.py --smoke --out "$MOUT"
   validate_bench mutable_ops "$MOUT"
+  QOUT="${BENCH_QUERY_OUT:-/tmp/BENCH_query_scenarios.smoke.json}"
+  timeout --signal=INT "$BUDGET" \
+    python benchmarks/query_scenarios.py --smoke --out "$QOUT"
+  validate_bench query_scenarios "$QOUT"
 else
   FAST_BUDGET="${FAST_LANE_BUDGET_SECONDS:-900}"
   START=$(date +%s)

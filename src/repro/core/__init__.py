@@ -1,5 +1,5 @@
 """Paper core: IFE engine + morsel dispatching policies (DESIGN.md §1-2)."""
-from .edge_compute import EDGE_COMPUTES, NO_PARENT
+from .edge_compute import EDGE_COMPUTES, NO_PARENT, QUERY_KINDS, QueryKind
 from .ife import (
     run_ife,
     run_ife_batch,

@@ -169,6 +169,31 @@ def ring_reduce_scatter(x: jax.Array, axis_name: str, op) -> jax.Array:
     return lax.ppermute(owned, axis_name, perm)
 
 
+def allgather_reduce_scatter(x: jax.Array, axis_name: str, op) -> jax.Array:
+    """Reduce-scatter over one mesh axis as all-gather + strict left fold
+    (device-index order) + own-chunk slice. Same contract as
+    ``ring_reduce_scatter`` but built only from group-safe collectives:
+    ``all_gather`` compiles with per-replica-group rendezvous, whereas the
+    ring's ``ppermute`` lowers to one CollectivePermute whose rendezvous
+    spans EVERY device on the mesh. Engines whose while_loop trip count
+    can diverge across source-shard groups (``sync="shard"``, the hybrid's
+    phase 1) must use this flavor: a ring there deadlocks the groups still
+    iterating once the first group exits (the early group never arrives at
+    the all-device rendezvous)."""
+    K = axis_size(axis_name)
+    flat = x.reshape(-1)
+    if K == 1:
+        return flat
+    n = flat.shape[0]
+    assert n % K == 0, (n, K)
+    gathered = lax.all_gather(flat, axis_name)  # [K, n]
+    red = gathered[0]
+    for k in range(1, K):  # strict fold: deterministic combine order
+        red = op(red, gathered[k])
+    d = lax.axis_index(axis_name)
+    return lax.dynamic_slice_in_dim(red, d * (n // K), n // K)
+
+
 def or_reduce_scatter(x: jax.Array, axis_names, impl: str = "ring") -> jax.Array:
     """OR-reduce-scatter of a bool/uint8 array over mesh axes: returns this
     device's row block (length = x.size / prod(K)). Used by the
@@ -199,36 +224,74 @@ def or_reduce_scatter(x: jax.Array, axis_names, impl: str = "ring") -> jax.Array
     return out.reshape(n_rows, *shape_tail).astype(orig_dtype)
 
 
-def min_reduce_scatter(x: jax.Array, axis_names) -> jax.Array:
-    """Min-reduce-scatter (parents / Bellman-Ford contributions)."""
+def _rs_impl(impl: str):
+    if impl == "ring":
+        return ring_reduce_scatter
+    if impl == "allgather":
+        return allgather_reduce_scatter
+    raise ValueError(f"unknown reduce-scatter impl: {impl}")
+
+
+def min_reduce_scatter(x: jax.Array, axis_names, impl: str = "ring") -> jax.Array:
+    """Min-reduce-scatter (parents / Bellman-Ford / top-k contributions)."""
     if isinstance(axis_names, str):
         axis_names = (axis_names,)
     if not axis_names or _axis_size(axis_names) == 1:
         return x
+    rs = _rs_impl(impl)
     shape_tail = x.shape[1:]
     flat = x.reshape(-1)
     for a in axis_names:
-        flat = ring_reduce_scatter(flat, a, jnp.minimum)
+        flat = rs(flat, a, jnp.minimum)
     n_rows = x.shape[0] // _axis_size(axis_names)
     return flat.reshape(n_rows, *shape_tail)
 
 
-def merge_scatter(merge: str, contribution, axis_names, or_impl: str):
+def sum_reduce_scatter(x: jax.Array, axis_names, impl: str = "ring") -> jax.Array:
+    """Sum-reduce-scatter (PPR residual pushes / pattern-count
+    contributions). Each shard's additive partial over its local forward
+    rows sums exactly once per target row — disjoint edge sets, so either
+    impl reconstructs the global sum in a fixed deterministic order (ring:
+    ring order; allgather: device-index fold order)."""
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    if not axis_names or _axis_size(axis_names) == 1:
+        return x
+    rs = _rs_impl(impl)
+    shape_tail = x.shape[1:]
+    flat = x.reshape(-1)
+    for a in axis_names:
+        flat = rs(flat, a, jnp.add)
+    n_rows = x.shape[0] // _axis_size(axis_names)
+    return flat.reshape(n_rows, *shape_tail)
+
+
+def merge_scatter(merge: str, contribution, axis_names, or_impl: str,
+                  impl: str = "ring"):
     """Sharded-state variant of merge_contribution: global contributions in,
-    this shard's fully-merged row block out."""
+    this shard's fully-merged row block out.
+
+    ``impl`` selects the min/sum reduce-scatter flavor ("ring" |
+    "allgather"); for ``merge="or"`` an ``impl="allgather"`` overrides the
+    policy's ``or_impl`` so that NO ppermute ring runs — required inside
+    ``sync="shard"`` engine bodies (see ``allgather_reduce_scatter``)."""
     if isinstance(axis_names, str):
         axis_names = (axis_names,)
     if not axis_names:
         return contribution
+    if impl == "allgather" and or_impl == "ring":
+        or_impl = "allgather"
     if merge == "or":
         return or_reduce_scatter(contribution, axis_names, or_impl)
     if merge == "min":
-        return min_reduce_scatter(contribution, axis_names)
+        return min_reduce_scatter(contribution, axis_names, impl)
+    if merge == "sum":
+        return sum_reduce_scatter(contribution, axis_names, impl)
     if merge == "or_min":
         reached, cand = contribution
         return (
             or_reduce_scatter(reached, axis_names, or_impl),
-            min_reduce_scatter(cand, axis_names),
+            min_reduce_scatter(cand, axis_names, impl),
         )
     raise ValueError(f"unknown merge: {merge}")
 
@@ -254,6 +317,8 @@ def gang_merge_scatter(merge: str, contribution, axis_names, or_impl: str):
         return unmove(or_reduce_scatter(move(contribution), axis_names, or_impl))
     if merge == "min":
         return unmove(min_reduce_scatter(move(contribution), axis_names))
+    if merge == "sum":
+        return unmove(sum_reduce_scatter(move(contribution), axis_names))
     if merge == "or_min":
         reached, cand = contribution
         return (
@@ -323,6 +388,8 @@ def merge_contribution(merge: str, contribution, axis_names, or_impl: str):
         return or_allreduce(contribution, axis_names, or_impl)
     if merge == "min":
         return min_allreduce(contribution, axis_names)
+    if merge == "sum":
+        return lax.psum(contribution, axis_names)
     if merge == "or_min":
         reached, cand = contribution
         return (

@@ -251,11 +251,15 @@ def build_engine(
       burn inert iterations (empty frontier => no-op) until the slowest
       morsel finishes.
     - "shard" — the condition is reduced over the graph axes only. Each
-      source-shard group exits as soon as ITS morsels converge; collectives
-      inside the body only span a group's graph shards, so divergent trip
-      counts across source groups are deadlock-free. This is phase 1 of the
-      adaptive hybrid: the saved inert iterations are handed to
-      ``build_resume_engine`` instead of wasted.
+      source-shard group exits as soon as ITS morsels converge. Divergent
+      trip counts across source groups are only deadlock-free when every
+      collective in the body rendezvous per replica group
+      (psum/pmin/all_gather do; a ppermute ring does NOT — it lowers to
+      one CollectivePermute spanning every device), so this builder
+      degrades any ring flavor (``or_impl="ring"`` unions, the min/sum
+      reduce-scatter merges of the sharded layout) to allgather. This is
+      phase 1 of the adaptive hybrid: the saved inert iterations are
+      handed to ``build_resume_engine`` instead of wasted.
     """
     ec = EDGE_COMPUTES[edge_compute]
     spec = as_spec(extend)
@@ -272,6 +276,23 @@ def build_engine(
         sync_axes = tuple(sa) + tuple(ga)
     else:
         sync_axes = tuple(ga)
+    # sync="shard" lets source-shard groups exit the while_loop at
+    # different trip counts. psum/pmin/all_gather rendezvous per replica
+    # group, so the divergence is safe — but ppermute lowers to ONE
+    # CollectivePermute spanning every device, and the group still
+    # iterating deadlocks waiting for the group that already exited. Any
+    # ring collective inside the body (or_impl="ring" unions, the
+    # min/sum reduce-scatter merges of the sharded layout) must degrade
+    # to its allgather flavor here.
+    divergent = sync == "shard" and any(
+        int(mesh.shape[a]) > 1 for a in sa
+    )
+    or_impl = (
+        "allgather"
+        if divergent and policy.or_impl == "ring"
+        else policy.or_impl
+    )
+    scatter_impl = "allgather" if divergent else "ring"
 
     def worker(graph_in, sources_local: jax.Array):
         ops = as_operands(graph_in)
@@ -285,7 +306,7 @@ def build_engine(
             row_offset=None if sharded else offset,
             row_base=offset if sharded else None,
             axes=tuple(ga),
-            or_impl=policy.or_impl,
+            or_impl=or_impl,
             sharded=sharded,
         )
         bw = _stats_bin_widths(ops) if collect_stats else None
@@ -322,11 +343,12 @@ def build_engine(
                 contribution = ec.extend(be, ops, state, ctx)
                 if sharded:
                     merged = merge_scatter(
-                        ec.MERGE, contribution, ga, policy.or_impl
+                        ec.MERGE, contribution, ga, or_impl,
+                        impl=scatter_impl,
                     )
                 else:
                     merged = merge_contribution(
-                        ec.MERGE, contribution, ga, policy.or_impl
+                        ec.MERGE, contribution, ga, or_impl
                     )
                 out = (ec.apply(state, merged, it), it + 1)
                 return out + ((stats,) if collect_stats else ())

@@ -141,6 +141,69 @@ def ell_min_dist(
     return out.at[g.indices].min(cand, mode="drop")
 
 
+def ell_push_sum(
+    g: EllGraph, values: jax.Array, row_offset=None, n_out=None,
+    normalize: bool = False,
+) -> jax.Array:
+    """Additive push: out[v] = sum over local rows u with edge u->v of
+    values[u] (optionally divided by u's out-degree first). This is the
+    ``y += xᵀA`` linear-algebra primitive under the diffusion / pattern-count
+    computes, restricted to this shard's rows; padding rows/slots carry the
+    sentinel index and drop. Layout contract as in ``ell_reach_dense``."""
+    n = values.shape[0] if n_out is None else n_out
+    vloc = _local_rows(values, g, row_offset)
+    if normalize:
+        vloc = vloc / jnp.maximum(g.degrees, 1).astype(vloc.dtype)
+    out = jnp.zeros((n, 1), vloc.dtype)
+    if g.indices.shape[1] == 0:
+        return out[:, 0]
+    chunk = _deg_chunk(g.indices.shape[0], 4)
+    return _chunked_scatter(g, out, vloc[:, None], chunk, "add")[:, 0]
+
+
+def ell_min_topk(
+    rev: EllGraph, gdists: jax.Array, seed_row: jax.Array
+) -> jax.Array:
+    """Full-Jacobi k-best relax over the reverse ELL: for each local row v,
+    the k smallest of {gdists[u, :] + w(u, v) : u in-neighbor of v} plus v's
+    own seed value (0 for sources, +inf otherwise). ``gdists`` is the global
+    [n_out, k] sorted slot table; ``seed_row`` is [rows] local. Returns the
+    sorted [rows, k] recompute. Degree-chunked: the running top-k merge keeps
+    the candidate temp at [rows, (chunk+1)·k] instead of [rows, max_in_deg·k].
+    """
+    rows, D = rev.indices.shape
+    k = gdists.shape[-1]
+    acc0 = jnp.full((rows, k), jnp.inf, jnp.float32).at[:, 0].set(seed_row)
+    if D == 0:  # edgeless/zero-cap slab: seed-only candidates
+        return acc0
+    w = (
+        rev.weights
+        if rev.weights is not None
+        else jnp.ones_like(rev.indices, dtype=jnp.float32)
+    )
+
+    def step(idx, wts, acc):
+        got = gdists.at[idx].get(mode="fill", fill_value=jnp.inf)
+        cand = (got + wts[:, :, None]).reshape(rows, -1)
+        merged = jnp.concatenate([acc, cand], axis=1)
+        return jnp.sort(merged, axis=1)[:, :k]
+
+    chunk = _deg_chunk(rows, 4 * k)
+    if chunk >= D:
+        return step(rev.indices, w, acc0)
+    assert D % chunk == 0, (D, chunk)
+    return jax.lax.fori_loop(
+        0,
+        D // chunk,
+        lambda i, acc: step(
+            jax.lax.dynamic_slice_in_dim(rev.indices, i * chunk, chunk, 1),
+            jax.lax.dynamic_slice_in_dim(w, i * chunk, chunk, 1),
+            acc,
+        ),
+        acc0,
+    )
+
+
 def _row_ids(g: EllGraph, row_offset, row_base) -> jax.Array:
     """Global node ids of this shard's rows (after any slicing)."""
     rows = g.indices.shape[0]
@@ -191,6 +254,10 @@ class SPLengths:
     """Unweighted shortest-path lengths (paper Listing 2)."""
 
     MERGE = "or"
+    #: safe to fold into 64-lane MS-BFS batches (saturating-OR frontier);
+    #: weighted/float/int frontiers have no lane form and must never be
+    #: packed (admission checks this flag before nTkMS planning)
+    LANES_OK = True
 
     @staticmethod
     def init(n_nodes: int, sources: jax.Array) -> SPLengthState:
@@ -244,6 +311,7 @@ class ReachState(NamedTuple):
 
 class Reachability:
     MERGE = "or"
+    LANES_OK = True
 
     @staticmethod
     def init(n_nodes: int, sources: jax.Array) -> ReachState:
@@ -288,6 +356,7 @@ class SPParents:
     """
 
     MERGE = "or_min"
+    LANES_OK = True
 
     @staticmethod
     def init(n_nodes: int, sources: jax.Array) -> SPParentState:
@@ -339,6 +408,7 @@ class BellmanFord:
     """Weighted SSSP — nodes may re-enter the frontier (walk semantics)."""
 
     MERGE = "min"
+    LANES_OK = False  # float-min relax has no saturating lane form
 
     @staticmethod
     def init(n_nodes: int, sources: jax.Array) -> BellmanFordState:
@@ -388,6 +458,7 @@ class MSBFSLengths:
 
     MERGE = "or"
     LANES = 64
+    LANES_OK = True
 
     @staticmethod
     def init(n_nodes: int, sources: jax.Array) -> MSBFSState:
@@ -441,6 +512,7 @@ class MSBFSParents:
 
     MERGE = "or_min"
     LANES = 64
+    LANES_OK = True
 
     @staticmethod
     def init(n_nodes: int, sources: jax.Array) -> MSBFSParentState:
@@ -489,6 +561,188 @@ class MSBFSParents:
         )
 
 
+class TopKState(NamedTuple):
+    frontier: jax.Array  # [n] bool — some slot of this row improved
+    dists: jax.Array  # [n, K] float32, sorted ascending (inf = empty slot)
+    src_mask: jax.Array  # [n] bool
+
+
+class TopKPaths:
+    """Weighted top-k shortest-walk lengths (k-slot Bellman-Ford).
+
+    Full-Jacobi pull each round: ``merged[v]`` is the k smallest of v's seed
+    value (0 for sources) and ``dists[u, :] + w(u, v)`` over ALL in-neighbors
+    u — a recompute, not a frontier-masked delta, so duplicate walks are
+    never double-counted. From the seed-only init the recompute is monotone
+    non-increasing, hence the engine's generic ``any(frontier != 0)`` loop
+    condition terminates exactly at the k-best fixpoint; ``frontier`` marks
+    rows whose slot vector improved last round. Pull-only: needs the reverse
+    ELL operand (route ``extend='ell_pull'``)."""
+
+    MERGE = "min"
+    LANES_OK = False  # k-slot float frontier has no saturating lane form
+    K = 4
+
+    @staticmethod
+    def init(n_nodes: int, sources: jax.Array) -> TopKState:
+        src = jnp.zeros((n_nodes,), jnp.bool_).at[sources].set(
+            True, mode="drop"
+        )
+        dists = jnp.full((n_nodes, TopKPaths.K), jnp.inf, jnp.float32)
+        dists = dists.at[sources, 0].set(0.0, mode="drop")
+        return TopKState(frontier=src, dists=dists, src_mask=src)
+
+    @staticmethod
+    def local_extend(g: EllGraph, state: TopKState, row_offset=None,
+                     n_out=None, row_base=None):
+        raise NotImplementedError(
+            "top-k relax is pull-only (scans the reverse ELL); run it "
+            "through a backend with reverse operands (extend='ell_pull')"
+        )
+
+    @staticmethod
+    def extend(be, ops, state: TopKState, ctx):
+        return be.min_topk(ops, state.dists, state.src_mask, ctx)
+
+    @staticmethod
+    def gang_extend(be, ops, state: TopKState, ctx):
+        return jax.vmap(
+            lambda st: TopKPaths.extend(be, ops, st, ctx)
+        )(state)
+
+    @staticmethod
+    def apply(state: TopKState, merged: jax.Array, it: jax.Array):
+        improved = jnp.any(merged < state.dists, axis=-1)
+        return TopKState(
+            frontier=improved, dists=merged, src_mask=state.src_mask
+        )
+
+
+class PPRState(NamedTuple):
+    frontier: jax.Array  # [n] f32: residual where > EPS, else exactly 0
+    residual: jax.Array  # [n] f32
+    mass: jax.Array  # [n] f32 — the PPR estimate
+
+
+class PPRDiffusion:
+    """Personalized PageRank via residual diffusion (push-style).
+
+    Every round, all rows with residual above EPS settle at once: ALPHA of
+    the settled residual lands in ``mass`` and (1-ALPHA), out-degree
+    normalized, diffuses to the out-neighbors (summed across shards with
+    MERGE='sum'). The epsilon termination lives in the frontier leaf —
+    ``frontier`` holds the residual where it exceeds EPS and exactly 0
+    elsewhere, so the engine's generic ``any(frontier != 0)`` loop condition
+    IS the residual-mass convergence test; resume/gang builders need no
+    modification. Seeds start with residual 1 each (multi-seed results are
+    the sum of per-seed PPR vectors — linearity). Dangling rows (out-degree
+    0) leak their (1-ALPHA) share, which is what guarantees convergence and
+    what the numpy oracle mirrors exactly."""
+
+    MERGE = "sum"
+    LANES_OK = False
+    ALPHA = 0.15
+    EPS = 1e-4
+
+    @staticmethod
+    def init(n_nodes: int, sources: jax.Array) -> PPRState:
+        r = jnp.zeros((n_nodes,), jnp.float32).at[sources].set(
+            1.0, mode="drop"
+        )
+        return PPRState(
+            frontier=r, residual=r, mass=jnp.zeros((n_nodes,), jnp.float32)
+        )
+
+    @staticmethod
+    def local_extend(g: EllGraph, state: PPRState, row_offset=None,
+                     n_out=None, row_base=None) -> jax.Array:
+        push = (1.0 - PPRDiffusion.ALPHA) * state.frontier
+        return ell_push_sum(g, push, row_offset, n_out, normalize=True)
+
+    @staticmethod
+    def extend(be, ops, state: PPRState, ctx):
+        push = (1.0 - PPRDiffusion.ALPHA) * state.frontier
+        return be.push_sum(ops, push, ctx, normalize=True)
+
+    @staticmethod
+    def gang_extend(be, ops, state: PPRState, ctx):
+        return jax.vmap(
+            lambda st: PPRDiffusion.extend(be, ops, st, ctx)
+        )(state)
+
+    @staticmethod
+    def apply(state: PPRState, pushed: jax.Array, it: jax.Array):
+        settled = state.frontier  # the residual mass pushed this round
+        r = state.residual - settled + pushed
+        return PPRState(
+            frontier=jnp.where(r > PPRDiffusion.EPS, r, 0.0),
+            residual=r,
+            mass=state.mass + PPRDiffusion.ALPHA * settled,
+        )
+
+
+class PatternState(NamedTuple):
+    frontier: jax.Array  # [n] int32: walk counts of the current hop
+    wedges: jax.Array  # [n] int32: 2-hop walk counts seed -> · -> v
+    closed: jax.Array  # [n] int32: 3-hop walk counts seed -> · -> · -> v
+    src_mask: jax.Array  # [n] bool
+
+
+class PatternCounts:
+    """2–3-hop pattern counts (wedges / triangles) as matmul chains.
+
+    The frontier carries exact int32 walk multiplicities: hop t+1 is
+    ``c[v] = Σ_u c[u]·A[u, v]`` — on the block path a chain of MXU matmuls
+    over the existing ``ShardedBlocks``, on the push path the same additive
+    scatter. After hop 2 the per-node wedge counts (2-walks from the seed
+    set) are latched; after hop 3 the closed-walk counts are latched and the
+    frontier zeroes itself, so the generic loop condition stops at exactly 3
+    iterations. Triangle counts fall out host-side: ``closed`` at a seed row
+    counts the directed 3-cycles through that seed (2 per undirected
+    triangle); wedge totals are ``wedges.sum()``. Counts are exact (additive
+    int32), not saturating — the saturating 0/1 matmul stays the
+    reachability path."""
+
+    MERGE = "sum"
+    LANES_OK = False
+    HOPS = 3
+
+    @staticmethod
+    def init(n_nodes: int, sources: jax.Array) -> PatternState:
+        src = jnp.zeros((n_nodes,), jnp.bool_).at[sources].set(
+            True, mode="drop"
+        )
+        z = jnp.zeros((n_nodes,), jnp.int32)
+        return PatternState(
+            frontier=src.astype(jnp.int32), wedges=z, closed=z, src_mask=src
+        )
+
+    @staticmethod
+    def local_extend(g: EllGraph, state: PatternState, row_offset=None,
+                     n_out=None, row_base=None) -> jax.Array:
+        return ell_push_sum(g, state.frontier, row_offset, n_out)
+
+    @staticmethod
+    def extend(be, ops, state: PatternState, ctx):
+        return be.push_sum(ops, state.frontier, ctx)
+
+    @staticmethod
+    def gang_extend(be, ops, state: PatternState, ctx):
+        return jax.vmap(
+            lambda st: PatternCounts.extend(be, ops, st, ctx)
+        )(state)
+
+    @staticmethod
+    def apply(state: PatternState, pushed: jax.Array, it: jax.Array):
+        # it=0 -> pushed = 1-hop counts; it=1 -> 2-hop; it=2 -> 3-hop
+        return PatternState(
+            frontier=jnp.where(it >= PatternCounts.HOPS - 1, 0, pushed),
+            wedges=jnp.where(it == 1, pushed, state.wedges),
+            closed=jnp.where(it == 2, pushed, state.closed),
+            src_mask=state.src_mask,
+        )
+
+
 EDGE_COMPUTES = {
     "bfs_levels": BFSLevels,
     "sp_lengths": SPLengths,
@@ -497,4 +751,35 @@ EDGE_COMPUTES = {
     "reachability": Reachability,
     "msbfs_lengths": MSBFSLengths,
     "msbfs_parents": MSBFSParents,
+    "topk_paths": TopKPaths,
+    "ppr": PPRDiffusion,
+    "pattern_counts": PatternCounts,
+}
+
+
+class QueryKind(NamedTuple):
+    """One row of the serving-surface query registry: how a client-facing
+    ``query_kind`` maps onto edge computes and what comes back.
+
+    ``edge_compute`` is None for the built-in reachability family, where the
+    dispatcher still picks sp/msbfs × lengths/parents from (policy,
+    returns_paths); every other kind names one compute. ``result_leaves``
+    are the state fields delivered per query. ``lanes_ok`` mirrors the
+    compute's LANES_OK and gates MS-BFS lane packing at admission."""
+
+    edge_compute: str | None
+    result_leaves: tuple
+    needs_weights: bool = False
+    lanes_ok: bool = True
+
+
+QUERY_KINDS = {
+    "reach": QueryKind(None, ("levels",)),
+    "topk_paths": QueryKind(
+        "topk_paths", ("dists",), needs_weights=True, lanes_ok=False
+    ),
+    "ppr": QueryKind("ppr", ("mass",), lanes_ok=False),
+    "pattern_counts": QueryKind(
+        "pattern_counts", ("wedges", "closed"), lanes_ok=False
+    ),
 }

@@ -95,6 +95,8 @@ from .edge_compute import (
     ell_min_dist,
     ell_min_parent,
     ell_min_parent_lanes,
+    ell_min_topk,
+    ell_push_sum,
     ell_reach_dense,
     ell_reach_lanes,
 )
@@ -348,12 +350,40 @@ def _local_state(x: jax.Array, rows: int, ctx: ExtendCtx) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
+def _min_topk_pull(ops, dists, src_mask, ctx):
+    """Shared top-k relax: a full-Jacobi gather over the reverse ELL — the
+    only physical form (a scatter cannot sorted-merge k slots), so every
+    backend routes here. The slot table is globalized first (sharded rows
+    place-with-inf + min-allreduce, the same inverse pattern as pull
+    min_dist); contributions come back row-placed for the 'min' merge."""
+    if ops.rev is None:
+        raise ValueError(
+            "top-k relax scans the reverse ELL; build operands with "
+            "extend='ell_pull' (needs_rev)"
+        )
+    rev = ops.rev
+    rows = rev.indices.shape[0]
+    gd = _global_min(dists, ctx, jnp.float32(jnp.inf))
+    seed = jnp.where(
+        _local_state(src_mask, rows, ctx), 0.0, jnp.inf
+    ).astype(jnp.float32)
+    return _place_rows(ell_min_topk(rev, gd, seed), ctx, jnp.float32(jnp.inf))
+
+
 class PushBackend:
     name = "ell_push"
 
     @staticmethod
     def reach_dense(ops, frontier, visited, ctx):
         return ell_reach_dense(ops.fwd, frontier, ctx.row_offset, ctx.n_out)
+
+    @staticmethod
+    def push_sum(ops, values, ctx, normalize=False):
+        return ell_push_sum(
+            ops.fwd, values, ctx.row_offset, ctx.n_out, normalize
+        )
+
+    min_topk = staticmethod(_min_topk_pull)
 
     @staticmethod
     def reach_lanes(ops, lanes, visited, ctx):
@@ -588,6 +618,11 @@ class PullBackend:
             PullBackend._min_parent_lanes(ops, gl, visited, ctx),
         )
 
+    # additive push has no pull realization worth keeping (gather-sum over
+    # rev scans the same edge set at the same cost); top-k is pull-native
+    push_sum = staticmethod(PushBackend.push_sum)
+    min_topk = staticmethod(_min_topk_pull)
+
 
 # ---------------------------------------------------------------------------
 # pull_binned — the pull gather over degree-binned reverse slabs.
@@ -761,6 +796,9 @@ class BinnedPullBackend:
             BinnedPullBackend._min_parent_lanes(ops, gl, visited, ctx),
         )
 
+    push_sum = staticmethod(PushBackend.push_sum)
+    min_topk = staticmethod(_min_topk_pull)
+
 
 # ---------------------------------------------------------------------------
 # pull_binned_fused — the binned pull realized by the fused Pallas kernel.
@@ -885,6 +923,9 @@ class FusedBinnedPullBackend:
             FusedBinnedPullBackend._min_parent_lanes(ops, gl, visited, ctx),
         )
 
+    push_sum = staticmethod(PushBackend.push_sum)
+    min_topk = staticmethod(_min_topk_pull)
+
 
 # ---------------------------------------------------------------------------
 # block_mxu — saturating matmul over per-shard blocks with stripe skipping.
@@ -936,9 +977,43 @@ class BlockBackend:
         lanes = frontier[:, None].astype(jnp.uint8)
         return BlockBackend.reach_lanes(ops, lanes, visited, ctx)[:, 0] != 0
 
+    @staticmethod
+    def push_sum(ops, values, ctx, normalize=False):
+        """Additive count/mass propagation as a non-saturating block matmul:
+        ``out[v] = Σ_u values[u]·A[u, v]`` — the pattern-count hop chain on
+        the MXU. Bit-identical to the push-ELL scatter for integer values
+        (addition is exact either way); float values may differ in the last
+        ulp from the scatter order, so float diffusion routes to ell_push.
+        """
+        sb = ops.blocks
+        if sb is None:
+            return PushBackend.push_sum(ops, values, ctx, normalize)
+        blocks = sb.blocks[0]
+        brows = sb.block_rows[0]
+        bcols = sb.block_cols[0]
+        B = sb.block_size
+        rows = ops.fwd.indices.shape[0]
+        local = _local_state(values, rows, ctx)
+        if normalize:
+            local = local / jnp.maximum(ops.fwd.degrees, 1).astype(
+                local.dtype
+            )
+        src = jnp.take(local.reshape(rows // B, B), brows, axis=0)
+        partial = lax.dot_general(
+            blocks.astype(local.dtype),
+            src[:, :, None],
+            dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=local.dtype,
+        )[:, :, 0]  # [nb, B(dst)]
+        G = ctx.n_out // B
+        out = jnp.zeros((G, B), local.dtype)
+        out = out.at[bcols].add(partial, mode="drop")  # sentinel col drops
+        return out.reshape(ctx.n_out)
+
     min_parent = staticmethod(PushBackend.min_parent)
     min_parent_lanes = staticmethod(PushBackend.min_parent_lanes)
     min_dist = staticmethod(PushBackend.min_dist)
+    min_topk = staticmethod(_min_topk_pull)
 
     @staticmethod
     def reach_parent_dense(ops, frontier, visited, ctx):
@@ -1115,6 +1190,14 @@ class AutoBackend:
             lambda: self.pull_be._min_dist(ops, gdu, ctx),
             lambda: PushBackend.min_dist(ops, dist, frontier, ctx),
         )
+
+    # additive push and top-k relax have one physical form each (scatter-add
+    # resp. reverse gather) — no direction decision to make
+    def push_sum(self, ops, values, ctx, normalize=False):
+        return PushBackend.push_sum(ops, values, ctx, normalize)
+
+    def min_topk(self, ops, dists, src_mask, ctx):
+        return _min_topk_pull(ops, dists, src_mask, ctx)
 
     # one union + one predicate + one cond for or_min edge computes
     def reach_parent_dense(self, ops, frontier, visited, ctx):

@@ -301,6 +301,14 @@ class BudgetModel:
         for b, t in zip(buckets, np.asarray(trips).reshape(-1)):
             self.observe(family, int(b), [int(t)])
 
+    def reset(self) -> None:
+        """Drop every learned window (the mispredict telemetry stays —
+        it is cumulative accounting, not bucket-keyed state). The
+        dispatcher calls this in its graph-delta fence: a mutation moves
+        sources between degree buckets, so depths observed under the old
+        bucketing must not budget post-delta batches."""
+        self._windows.clear()
+
     def _window_for(self, family, bucket: int):
         w = self._windows.get((family, int(bucket)))
         if w:
@@ -573,6 +581,19 @@ def recommend_backend(
     dense_blocks = (
         n_nodes is not None and avg_degree * block * block >= n_nodes
     )  # expected edges per block² tile = avg_degree·block²/n ≥ 1
+    if edge_compute == "topk_paths":
+        # pull-native: the k-slot relax only exists as a reverse-ELL gather
+        return "ell_pull"
+    if edge_compute == "ppr":
+        # additive float diffusion has one order-stable physical form (the
+        # push scatter-add); the block matmul would reorder float sums
+        return "ell_push"
+    if edge_compute == "pattern_counts":
+        # exact int32 hop chains: MXU matmuls when the graph is dense at
+        # block granularity, else the same sums via the push scatter
+        if dense_blocks and have("blocks"):
+            return "block_mxu"
+        return "ell_push"
     if lanes >= 64 and dense_blocks and have("blocks"):
         return "block_mxu"
     if have("rev_binned"):

@@ -176,8 +176,9 @@ def apply_delta_csr(csr: CSRGraph, delta: GraphDelta) -> CSRGraph:
 # ---------------------------------------------------------------------------
 
 
-def _row_edge_keys(eff: CSRGraph, rows: np.ndarray, n: int) -> np.ndarray:
-    """Flattened ``src * n + dst`` keys of the effective edges of ``rows``."""
+def _row_edge_keys(eff: CSRGraph, rows: np.ndarray, n: int):
+    """Flattened ``src * n + dst`` keys of the effective edges of ``rows``,
+    plus the weights at the same flat positions (``None`` unweighted)."""
     ptr = eff.indptr
     counts = (ptr[rows + 1] - ptr[rows]).astype(np.int64)
     flat_rows = np.repeat(rows, counts)
@@ -185,22 +186,32 @@ def _row_edge_keys(eff: CSRGraph, rows: np.ndarray, n: int) -> np.ndarray:
         np.cumsum(counts) - counts, counts
     )
     pos = np.repeat(ptr[rows], counts) + offs
-    return flat_rows * n + eff.indices[pos].astype(np.int64)
+    keys = flat_rows * n + eff.indices[pos].astype(np.int64)
+    w = eff.weights[pos] if eff.weights is not None else None
+    return keys, w
 
 
 @dataclasses.dataclass(frozen=True)
 class DeltaDiff:
     """Exactly what changed between two effective graphs, keyed for the
     per-structure folds. ``added``/``removed`` are ``src * n + dst`` edge
-    keys; dirty rows are the rows whose *membership set* changed (rows
-    whose set is unchanged keep identical within-row edge order in both
-    the forward and reverse orientations, so they need no rewrite)."""
+    keys; dirty rows are the rows whose *membership set* OR per-edge
+    weights changed (rows with an unchanged set and unchanged weights keep
+    identical within-row edge order in both the forward and reverse
+    orientations, so they need no rewrite). Weight-only changes never make
+    ``added``/``removed`` — the 0/1 block tiles don't see weights."""
 
     n_nodes: int
     fwd_dirty: np.ndarray  # int64 forward rows to rewrite
     rev_dirty: np.ndarray  # int64 reverse rows (dst nodes) to rewrite
     added: np.ndarray  # int64 effective edge keys
     removed: np.ndarray  # int64 effective edge keys
+    # edges present in BOTH effective sets whose weight changed (a
+    # delete+reinsert of the same edge at a new weight inside one delta):
+    # membership-invisible, but their rows must still be rewritten
+    reweighted: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64)
+    )
 
     @property
     def n_changed_edges(self) -> int:
@@ -214,20 +225,32 @@ def diff_effective(
     delta touches. Exact under truncation: a delete can pull a previously
     truncated edge into the cap, an insert can push one out — both show up
     because we compare full per-row effective sets, not the delta's own
-    edge list."""
+    edge list. On weighted graphs, edges surviving in both sets are also
+    compared by weight (a delete+reinsert at a new weight changes no
+    membership but must still dirty its forward and reverse rows)."""
     n = old_eff.n_nodes
     rows = delta.touched_rows()
-    old_keys = _row_edge_keys(old_eff, rows, n)
-    new_keys = _row_edge_keys(new_eff, rows, n)
+    old_keys, old_w = _row_edge_keys(old_eff, rows, n)
+    new_keys, new_w = _row_edge_keys(new_eff, rows, n)
     removed = np.setdiff1d(old_keys, new_keys)
     added = np.setdiff1d(new_keys, old_keys)
     changed = np.concatenate([added, removed])
+    reweighted = np.zeros(0, np.int64)
+    if old_w is not None and new_w is not None:
+        # keys are globally unique (dedup'd CSR rows): intersect aligns the
+        # surviving edges positionally across the two effective sets
+        common, io, inew = np.intersect1d(
+            old_keys, new_keys, return_indices=True
+        )
+        reweighted = common[old_w[io] != new_w[inew]]
+    dirty = np.concatenate([changed, reweighted])
     return DeltaDiff(
         n_nodes=n,
-        fwd_dirty=np.unique(changed // n),
-        rev_dirty=np.unique(changed % n),
+        fwd_dirty=np.unique(dirty // n),
+        rev_dirty=np.unique(dirty % n),
         added=added,
         removed=removed,
+        reweighted=reweighted,
     )
 
 

@@ -33,6 +33,7 @@ conflated with compile time.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -77,11 +78,12 @@ class QueryService:
         self.last_outcome = None  # per-phase latency of the last query
 
     def query(self, sources, returns_paths=False, policy=None,
-              state_layout="replicated", backend=None):
+              state_layout="replicated", backend=None, query_kind="reach"):
         """One request batch -> (result state, policy used)."""
         out = self.scheduler.query(
             sources, returns_paths=returns_paths, policy=policy,
             state_layout=state_layout, backend=backend,
+            query_kind=query_kind,
         )
         self.last_outcome = out
         return out.result, out.policy
@@ -93,7 +95,8 @@ def _pct(values, p):
 
 def poisson_arrivals(csr, rate_qps: float, n_arrivals: int,
                      sources_per_query: int, tenants: int = 1,
-                     deadline_ms: float | None = None, seed: int = 0):
+                     deadline_ms: float | None = None, seed: int = 0,
+                     query_kind: str = "reach"):
     """Seeded open-loop Poisson schedule for ``ServingLoop.run_stream``:
     exponential inter-arrival gaps at ``rate_qps``, tenants round-robin,
     every query's sources drawn by the same ``pick_sources`` rule the
@@ -107,6 +110,7 @@ def poisson_arrivals(csr, rate_qps: float, n_arrivals: int,
             "sources": pick_sources(csr, sources_per_query, seed=100 + i),
             "tenant": f"t{i % tenants}",
             "deadline_ms": deadline_ms,
+            "query_kind": query_kind,
         }
         for i in range(n_arrivals)
     ]
@@ -156,6 +160,7 @@ def run_open_loop(args, csr, mesh, family) -> int:
     arrivals = poisson_arrivals(
         csr, args.rate, args.arrivals, args.sources_per_batch,
         tenants=args.tenants, deadline_ms=args.deadline_ms, seed=1,
+        query_kind=args.query_kind,
     )
     if args.mutate_stream:
         # interleave seeded edge-edit batches evenly through the arrival
@@ -234,8 +239,13 @@ def run_closed_loop(args, csr, mesh, family) -> int:
         compiles0 = cache.compile_events
         t0 = time.perf_counter()
         res, pol = svc.query(sources, returns_paths=args.paths,
-                             policy=args.policy)
-        if args.paths and not pol.startswith("ntkms"):
+                             policy=args.policy,
+                             query_kind=args.query_kind)
+        if args.query_kind != "reach":
+            # non-reach kinds carry their own result leaves (dists /
+            # mass / wedges+closed): sync the whole state for timing
+            jax.block_until_ready(res.state)
+        elif args.paths and not pol.startswith("ntkms"):
             dests = rng.integers(0, csr.n_nodes, 4).astype(np.int32)
             paths = reconstruct_paths(
                 res.state.parents[0, : csr.n_nodes], dests, max_len=32
@@ -324,6 +334,16 @@ def main(argv=None) -> int:
     ap.add_argument("--delta-edges", type=int, default=64, metavar="M",
                     help="edges added and deleted per --mutate-stream "
                          "delta")
+    ap.add_argument("--query-kind", default="reach",
+                    choices=("reach", "topk_paths", "ppr", "pattern_counts"),
+                    help="scenario family served by every arrival/batch: "
+                         "'reach' = BFS levels (the historical surface), "
+                         "'topk_paths' = weighted k-shortest distances "
+                         "(synthesizes seeded edge weights when the "
+                         "dataset has none), 'ppr' = personalized "
+                         "PageRank mass, 'pattern_counts' = 2/3-hop "
+                         "wedge+triangle walk counts; non-reach kinds "
+                         "are never lane-packed")
     ap.add_argument("--paths", action="store_true",
                     help="return actual paths (parents), not lengths "
                          "(closed loop only)")
@@ -368,6 +388,15 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     csr = PAPER_DATASETS[args.dataset](args.scale)
+    if args.query_kind == "topk_paths" and csr.weights is None:
+        # the k-shortest relax needs edge weights; paper proxy datasets
+        # are unweighted, so synthesize a seeded uniform weighting (the
+        # same convention as the weighted-graph test corpus)
+        rng = np.random.default_rng(7)
+        csr = dataclasses.replace(
+            csr,
+            weights=rng.uniform(0.1, 2.0, csr.n_edges).astype(np.float32),
+        )
     mesh = make_mesh((1, jax.device_count()), ("data", "model"))
     # threshold-table family of the dataset (None => Beamer-default /
     # nearest-bucket fallback inside DirectionThresholds.lookup)

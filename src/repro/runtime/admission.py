@@ -52,7 +52,7 @@ from typing import Callable
 
 import numpy as np
 
-from ..core import recommend_policy
+from ..core import QUERY_KINDS, recommend_policy
 from ..core.msbfs import LanePacker
 
 # shed reasons (AdmissionTicket.shed_reason / AdmissionStats.sheds_by_reason)
@@ -72,6 +72,7 @@ class AdmittedQuery:
     sources: np.ndarray
     t_submit: float
     t_deadline: float | None = None
+    query_kind: str = "reach"
 
 
 @dataclasses.dataclass
@@ -98,6 +99,7 @@ class PlannedBatch:
     spans: dict[str, tuple[int, int]]
     packed: bool
     policy: str | None
+    query_kind: str = "reach"
 
 
 @dataclasses.dataclass
@@ -196,11 +198,22 @@ class AdmissionQueue:
         deadline_ms: float | None = None,
         qid: str | None = None,
         now: float | None = None,
+        query_kind: str = "reach",
     ) -> AdmissionTicket:
         """Admit (or shed) one query. ``deadline_ms`` is the SLO relative
         to submission; it becomes an absolute clock deadline here. A
         duplicate qid among admitted-but-uncompleted queries is a caller
-        bug (two results would race for one key) and raises."""
+        bug (two results would race for one key) and raises.
+
+        ``query_kind`` names the scenario family (``core.QUERY_KINDS``);
+        kinds whose edge compute has no saturating lane form
+        (``lanes_ok=False``) are admitted normally but never join the
+        shared MS-BFS lane pack — ``plan()`` always serves them solo."""
+        if query_kind not in QUERY_KINDS:
+            raise ValueError(
+                f"unknown query_kind: {query_kind!r} "
+                f"(known: {sorted(QUERY_KINDS)})"
+            )
         self.stats.submitted += 1
         if qid is None:
             qid = f"q{self._next_qid}"
@@ -237,7 +250,7 @@ class AdmissionQueue:
         self._active[qid] = tenant
         self._active_by_tenant[tenant] += 1
         self._queue.append(
-            AdmittedQuery(qid, tenant, sources, now, t_deadline)
+            AdmittedQuery(qid, tenant, sources, now, t_deadline, query_kind)
         )
         return AdmissionTicket(qid, admitted=True)
 
@@ -313,16 +326,30 @@ class AdmissionQueue:
             self._queue = live[k:] + self._queue
             live = live[:k]
 
-        total = sum(len(q.sources) for q in live)
-        policy = recommend_policy(
-            total, self.n_devices, self.avg_degree, n_nodes=self.n_nodes
+        # kinds without a lane form are carved out BEFORE the Fig 14
+        # pooling decision: a burst of (say) weighted top-k or ppr sources
+        # can neither be lane-packed itself nor tip the reach pool's
+        # recommend_policy into ntkms on its behalf — they always dispatch
+        # as solo batches (the dispatch layer re-checks the same
+        # ``lanes_ok`` bit, so a bypassing caller still cannot lane-pack)
+        poolable = [q for q in live if QUERY_KINDS[q.query_kind].lanes_ok]
+        forced_solo = {
+            q.qid for q in live if not QUERY_KINDS[q.query_kind].lanes_ok
+        }
+        total = sum(len(q.sources) for q in poolable)
+        policy = (
+            recommend_policy(
+                total, self.n_devices, self.avg_degree, n_nodes=self.n_nodes
+            )
+            if poolable
+            else None
         )
         batches: list[PlannedBatch] = []
         solo: list[AdmittedQuery] = []
         if policy == "ntkms":
             packer = LanePacker(self.lanes)
-            by_qid = {q.qid: q for q in live}
-            for q in live:
+            by_qid = {q.qid: q for q in poolable}
+            for q in poolable:
                 packer.add(q.qid, q.sources)
             rate = self.ms_per_iter() if self.ms_per_iter else None
             # eviction fixpoint: a packed batch finishes with its SLOWEST
@@ -366,11 +393,16 @@ class AdmissionQueue:
                     sources=flat, spans=spans, packed=True, policy="ntkms",
                 ))
         else:
-            solo = live
-        for q in solo:  # arrival order
+            solo = poolable
+        # solo batches in arrival order, evictees keeping their original
+        # queue position; forced-solo kinds interleave by the same rule
+        solo_qids = {q.qid for q in solo} | forced_solo
+        for q in live:  # arrival order
+            if q.qid not in solo_qids:
+                continue
             batches.append(PlannedBatch(
                 queries=[q], sources=q.sources,
                 spans={q.qid: (0, len(q.sources))}, packed=False,
-                policy=None,
+                policy=None, query_kind=q.query_kind,
             ))
         return AdmissionPlan(batches, instant, shed)

@@ -65,6 +65,7 @@ from ..core import (
     ExtendSpec,
     IFEResult,
     MorselPolicy,
+    QUERY_KINDS,
     as_spec,
     build_engine,
     build_gang_resume_engine,
@@ -650,8 +651,12 @@ class QueryDispatcher:
             moves += rep.binned_moves
         self.csr = new_csr
         # stale-state sweep: measured cost rates and probes were taken
-        # against the pre-delta operands
+        # against the pre-delta operands, and the online learners are
+        # keyed to the PRE-delta degree buckets — serving them across the
+        # fence would budget/steer post-delta batches with buckets their
+        # sources no longer belong to
         self._cost_rates.clear()
+        self.invalidate_learned_state()
         invalidated = self.cache.invalidate(self._engine_stale)
         self.stats.deltas += 1
         return DeltaReport(
@@ -667,6 +672,23 @@ class QueryDispatcher:
             binned_moves=moves,
             engines_invalidated=invalidated,
         )
+
+    def invalidate_learned_state(self) -> None:
+        """Reset the online learners whose keys or samples embed the
+        pre-delta degree distribution: the per-bucket budget windows,
+        the global-p90 fallback deque, and the direction-threshold
+        sample store (plus the refitted table itself, unless the caller
+        pinned one — a pin is an explicit instruction to serve that
+        table regardless of the stream). Part of ``apply_delta``'s
+        fence; callers that rebuild operands out-of-band can invoke it
+        directly."""
+        if self.budget_model is not None:
+            self.budget_model.reset()
+        self._iter_p90s.clear()
+        self._dir_samples.clear()
+        self._batches_since_refit = 0
+        if not self._thresholds_pinned:
+            self.direction_thresholds = None
 
     def _place_structures(
         self, graph_axes, bundle: OperandBundle, rep
@@ -1222,10 +1244,29 @@ class QueryDispatcher:
 
     # ------------------------------------------------------ batch planning
 
-    def _plan_query(self, sources, returns_paths, policy, backend):
+    def _plan_query(self, sources, returns_paths, policy, backend,
+                    query_kind="reach"):
         """Shared preamble of query/begin_batch: resolve policy, edge
         compute, extension spec, operands, morsels, chunking, and the
-        budget model's bucket keys for one source batch."""
+        budget model's bucket keys for one source batch.
+
+        ``query_kind`` selects the scenario family (``QUERY_KINDS``):
+        "reach" is the historical BFS/MS-BFS surface; the other kinds
+        name their edge compute directly and, when the compute has no
+        saturating lane form (``lanes_ok=False``), must not run under a
+        lane-packed multi-source policy — an auto-recommended one
+        degrades to nTkS, an explicitly pinned one is an error."""
+        kind = QUERY_KINDS.get(query_kind)
+        if kind is None:
+            raise ValueError(
+                f"unknown query_kind: {query_kind!r} "
+                f"(known: {sorted(QUERY_KINDS)})"
+            )
+        if query_kind != "reach" and returns_paths:
+            raise ValueError(
+                f"returns_paths is a reach-family option; "
+                f"query_kind={query_kind!r} has its own result leaves"
+            )
         sources = np.asarray(sources, np.int32).reshape(-1)
         name = policy or recommend_policy(
             len(sources),
@@ -1235,7 +1276,20 @@ class QueryDispatcher:
             n_nodes=self.csr.n_nodes,
         )
         pol = POLICIES[name]()
-        if pol.is_multi_source:
+        if pol.is_multi_source and not kind.lanes_ok:
+            if policy is not None:
+                raise ValueError(
+                    f"policy {policy!r} lane-packs sources but "
+                    f"query_kind={query_kind!r} has no lane form"
+                )
+            # recommend_policy pooled >=64 sources into a lane policy;
+            # this kind's state has no lane axis, so serve the same
+            # batch as per-source morsels instead
+            name = "ntks"
+            pol = POLICIES[name]()
+        if kind.edge_compute is not None:
+            ec = kind.edge_compute
+        elif pol.is_multi_source:
             ec = "msbfs_parents" if returns_paths else "msbfs_lengths"
         else:
             ec = "sp_parents" if returns_paths else "sp_lengths"
@@ -1312,6 +1366,7 @@ class QueryDispatcher:
         policy: str | None = None,
         state_layout: str = "replicated",
         backend=None,
+        query_kind: str = "reach",
     ) -> InflightBatch:
         """Plan one batch and dispatch its phase 1 (or static engine)
         asynchronously. The returned ``InflightBatch`` MUST be settled via
@@ -1320,7 +1375,7 @@ class QueryDispatcher:
         only current once the earlier batch has settled."""
         (sources, name, pol, ec, spec, g, n_pad, morsels, chunk, n_real,
          buckets, epoch) = self._plan_query(
-             sources, returns_paths, policy, backend)
+             sources, returns_paths, policy, backend, query_kind)
         if morsels.shape[0] > chunk:
             # oversized batch: the in-flight cap splits it into a host-
             # stitched chunk loop — run synchronously at settle time
@@ -1431,6 +1486,7 @@ class QueryDispatcher:
         policy: str | None = None,
         state_layout: str = "replicated",
         backend=None,
+        query_kind: str = "reach",
     ) -> QueryOutcome:
         """Serve one request batch of source nodes, synchronously.
 
@@ -1445,9 +1501,15 @@ class QueryDispatcher:
         ("ell_push" | "ell_pull" | "block_mxu" | "dopt" | an ExtendSpec;
         "recommend" applies ``recommend_backend``); None uses the
         scheduler's default. All choices are bit-identical in result.
+
+        ``query_kind`` selects the scenario family ("reach" | "topk_paths"
+        | "ppr" | "pattern_counts"): everything downstream of the edge
+        compute — engine cache, two-phase hybrid, gang resume, online
+        learning — is shared across kinds unchanged.
         """
         inflight = self.begin_batch(
             sources, returns_paths=returns_paths, policy=policy,
             state_layout=state_layout, backend=backend,
+            query_kind=query_kind,
         )
         return self.settle_batch(inflight).finalize()

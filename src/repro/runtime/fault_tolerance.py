@@ -34,8 +34,12 @@ class StragglerDetector:
         """Returns True if this step is flagged as a straggler."""
         self.n += 1
         if self.n <= self.warmup:
-            self.ewma = dt if self.ewma == 0 else self.ewma
-            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+            # seed the EWMA from the first sample ONLY — seeding and then
+            # EWMA-ing the same sample would weight it twice
+            if self.ewma == 0:
+                self.ewma = dt
+            else:
+                self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
             return False
         flagged = dt > self.threshold * self.ewma and self.ewma > 0
         if flagged:
@@ -43,6 +47,12 @@ class StragglerDetector:
             log.warning(
                 "straggler: step %d took %.3fs (ewma %.3fs)", step, dt,
                 self.ewma,
+            )
+            # clamped update: the baseline still adapts under a persistent
+            # slow regime (otherwise every later step flags forever), but
+            # one outlier can pull it up by at most the flag bar itself
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * min(
+                dt, self.threshold * self.ewma
             )
         else:
             self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt

@@ -46,6 +46,7 @@ from typing import Any, Callable
 
 import numpy as np
 
+from ..core import QUERY_KINDS
 from .admission import AdmissionQueue, AdmissionTicket, PlannedBatch
 from .dispatch import QueryDispatcher, SettledBatch
 
@@ -242,13 +243,20 @@ class ServingLoop:
         tenant: str = "default",
         deadline_ms: float | None = None,
         qid: str | None = None,
+        query_kind: str = "reach",
     ) -> AdmissionTicket:
         """Admit one query into the stream (see AdmissionQueue.submit).
-        Shed submissions are counted against the tenant and never run."""
+        Shed submissions are counted against the tenant and never run.
+
+        ``query_kind`` selects the scenario family (``core.QUERY_KINDS``):
+        "reach" delivers per-source level rows as before; other kinds
+        deliver their own result leaves — a [rows, n(, k)] array for
+        single-leaf kinds ("topk_paths" dists, "ppr" mass), a dict of
+        such arrays for multi-leaf kinds ("pattern_counts")."""
         now = self.clock()
         ticket = self.admission.submit(
             sources, tenant=tenant, deadline_ms=deadline_ms, qid=qid,
-            now=now,
+            now=now, query_kind=query_kind,
         )
         ts = self.stats.tenant(tenant)
         ts.submitted += 1
@@ -283,7 +291,9 @@ class ServingLoop:
     def _dispatch(self, pb: PlannedBatch) -> None:
         t0 = self.clock()
         compiles0 = self.dispatcher.cache.compile_events
-        inflight = self.dispatcher.begin_batch(pb.sources, policy=pb.policy)
+        inflight = self.dispatcher.begin_batch(
+            pb.sources, policy=pb.policy, query_kind=pb.query_kind,
+        )
         if self._tail is not None and self.overlap:
             # batch i's phase 1 is now in flight on device: the host is
             # free to stitch batch i-1 — the overlap this loop exists for
@@ -320,10 +330,33 @@ class ServingLoop:
                 if self._ms_per_iter is None
                 else 0.5 * self._ms_per_iter + 0.5 * rate
             )
-        out = unpack_levels(
-            np.asarray(outcome.result.state.levels), pb.spans,
-            self.dispatcher.csr.n_nodes, pb.packed,
-        )
+        n = self.dispatcher.csr.n_nodes
+        if pb.query_kind == "reach":
+            out = unpack_levels(
+                np.asarray(outcome.result.state.levels), pb.spans,
+                n, pb.packed,
+            )
+        else:
+            # non-reach kinds are never lane-packed (admission's lanes_ok
+            # carve-out), so the state leaves are already one row per
+            # source: slice each query's span and the graph padding off
+            # every result leaf the kind declares
+            assert not pb.packed, pb.query_kind
+            leaves = QUERY_KINDS[pb.query_kind].result_leaves
+            arrs = {
+                leaf: np.asarray(getattr(outcome.result.state, leaf))
+                for leaf in leaves
+            }
+            out = {
+                qid: (
+                    arrs[leaves[0]][a:b, :n]
+                    if len(leaves) == 1
+                    else {
+                        leaf: arrs[leaf][a:b, :n] for leaf in leaves
+                    }
+                )
+                for qid, (a, b) in pb.spans.items()
+            }
         for q in pb.queries:
             self._deliver(q.qid, out[q.qid], cold)
 
@@ -412,6 +445,7 @@ class ServingLoop:
                 self.submit(
                     a["sources"], tenant=a.get("tenant", "default"),
                     deadline_ms=a.get("deadline_ms"), qid=a.get("qid"),
+                    query_kind=a.get("query_kind", "reach"),
                 )
             if self.admission.pending():
                 self.pump()

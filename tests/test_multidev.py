@@ -160,6 +160,49 @@ for layout in ("replicated", "sharded"):
         assert (np.asarray(sout.result.state.levels) == ref_levels).all(), \
             "serial resume != gang resume"
 print("gang OK")
+
+# --- divergent-trip sharded phase 1 (ISSUE 9 deadlock regression) -----------
+# sync="shard" lets source-shard groups exit the phase-1 while_loop at
+# different trip counts. psum/pmin/all_gather rendezvous per replica group,
+# so that divergence is safe — but the min/sum reduce-scatter merges of the
+# sharded new-kind engines used ppermute rings, and a ring lowers to ONE
+# CollectivePermute whose rendezvous spans every device: the group still
+# iterating deadlocked forever once the other group exited. Budget 14 sits
+# between this graph's group convergence depths (13 vs 15), so one group
+# exits early while the other survives into the gang phase 2 — the exact
+# pre-fix hang shape. A deadlock here trips the faulthandler exit below
+# rather than the outer 900 s subprocess timeout.
+import faulthandler
+faulthandler.dump_traceback_later(300, exit=True)
+from repro.runtime.dispatch import QueryDispatcher
+
+rngq = np.random.default_rng(3)
+nq, mq = 300, 1800
+wq = rngq.uniform(0.1, 2.0, mq).astype(np.float32)
+csrq = csr_from_edges(
+    nq, rngq.integers(0, nq, mq), rngq.integers(0, nq, mq), weights=wq
+)
+srcsq = np.array([0, 3, 17, 44], dtype=np.int32)
+# per-kind budgets straddle this graph's source-group convergence depths:
+# topk converges at [12,13 | 15,12] trips per group, ppr at [46,41 | 42,50]
+for kind, leaf, budget in (("topk_paths", "dists", 14), ("ppr", "mass", 48)):
+    dq = QueryDispatcher(mesh, csrq, max_iters=512, phase1_iters=budget)
+    refq = None
+    for lay in ("replicated", "sharded"):
+        out = dq.query(srcsq, query_kind=kind, state_layout=lay)
+        assert out.hybrid and out.redispatched >= 1, (kind, lay, out)
+        got = np.asarray(getattr(out.result.state, leaf))[:, :nq]
+        its = np.asarray(out.result.iterations)
+        if refq is None:
+            refq, ref_its = got, its
+        else:
+            assert (its == ref_its).all(), (kind, its, ref_its)
+            if kind == "ppr":
+                np.testing.assert_allclose(got, refq, rtol=1e-6, atol=1e-9)
+            else:
+                assert (got == refq).all(), f"{kind} sharded != replicated"
+faulthandler.cancel_dump_traceback_later()
+print("divergent-shard OK")
 print("ALL_MULTIDEV_OK")
 """
 

@@ -567,3 +567,118 @@ def test_edgeless_slab_round_trip():
     np.testing.assert_array_equal(
         _levels(d, src, backend="dopt"), _levels(oracle2, src, backend="dopt")
     )
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 9 satellites: weighted edit scripts + learned-state delta fence
+# ---------------------------------------------------------------------------
+
+def _topk(disp, srcs, **kw):
+    out = disp.query(srcs, query_kind="topk_paths", **kw)
+    return np.asarray(out.result.state.dists)
+
+
+@pytest.mark.parametrize("seed", [1, 2])
+def test_weighted_edit_scripts_fold_vs_rebuild(seed):
+    """Weighted folds are dirty-row-only but must still land every
+    changed weight: random weighted edit scripts — including weight-ONLY
+    churn, where each edge is deleted and re-inserted at a new weight so
+    the structure keeps its exact shape and only the reweighted-row path
+    of ``diff_effective`` fires — stay bit-identical to a from-scratch
+    rebuild under a weight-sensitive query (top-k path distances)."""
+    csr = _rand_csr(n=80, m=500, seed=seed, weighted=True)
+    d = QueryDispatcher(mesh11(), csr, max_iters=64)
+    cur = csr
+    r = np.random.default_rng(seed + 100)
+    for step in range(4):
+        kind = step % 3
+        n = cur.n_nodes
+        if kind == 0:  # mixed weighted edits (random_delta draws weights)
+            delta = random_delta(
+                cur, n_adds=int(r.integers(1, 12)),
+                n_dels=int(r.integers(0, 12)),
+                seed=int(r.integers(10**6)),
+            )
+        elif kind == 1:  # weight-only churn: same edges, new weights
+            s, t = cur.edge_list()
+            pick = np.unique(r.integers(0, cur.n_edges, size=20))
+            delta = GraphDelta(
+                add_src=s[pick], add_dst=t[pick],
+                del_src=s[pick], del_dst=t[pick],
+                add_weights=r.uniform(0.1, 2.0, len(pick)).astype(
+                    np.float32
+                ),
+            )
+        else:  # weighted pile-on: bucket-boundary crossing
+            t0 = int(r.integers(0, n))
+            delta = GraphDelta(
+                add_src=r.integers(0, n, 15), add_dst=np.full(15, t0),
+                add_weights=r.uniform(0.1, 2.0, 15).astype(np.float32),
+            )
+        rep = d.apply_delta(delta)
+        if kind == 1:
+            # structure untouched: the fold must take the warm path and
+            # still rewrite the reweighted rows
+            assert rep.same_shape and rep.dirty_fwd_rows > 0
+        cur = apply_delta_csr(cur, delta)
+        srcs = r.integers(0, n, 3).astype(np.int32)
+        oracle = QueryDispatcher(mesh11(), cur, max_iters=64)
+        np.testing.assert_array_equal(
+            _topk(d, srcs), _topk(oracle, srcs),
+            err_msg=f"step {step} (kind {kind})",
+        )
+
+
+def test_delta_fence_resets_learned_state():
+    """A graph delta re-buckets every source degree, so the online
+    learners keyed to pre-delta buckets — budget-model windows, the
+    global-p90 fallback, direction samples, refit thresholds — must be
+    invalidated by ``apply_delta`` (cumulative mispredict telemetry is
+    accounting, not bucket-keyed state, and survives)."""
+    csr = powerlaw(160, 5.0, seed=0)
+    d = QueryDispatcher(
+        mesh11(), csr, max_iters=64, online_adapt=True, refit_every=2,
+        backend="dopt", family="powerlaw",
+    )
+    rng = np.random.default_rng(2)
+    for _q in range(4):
+        d.query(rng.integers(0, 160, 6).astype(np.int32))
+    assert len(d.budget_model) > 0 and d.budget_model.n_samples > 0
+    assert d._dir_samples and d._iter_p90s
+    d.refit_thresholds()
+    assert d.direction_thresholds is not None
+    observed_before = d.budget_model.mispredicts.observed
+
+    rep = d.apply_delta(random_delta(csr, 10, 10, seed=5))
+    assert rep.version == 1
+    assert len(d.budget_model) == 0 and d.budget_model.n_samples == 0
+    assert not d._dir_samples and not d._iter_p90s
+    assert d.direction_thresholds is None
+    assert d.budget_model.mispredicts.observed == observed_before
+
+    # post-delta serving re-learns against the NEW bucketing
+    d.query(rng.integers(0, 160, 6).astype(np.int32))
+    assert d.budget_model.n_samples > 0
+
+
+def test_delta_fence_keeps_pinned_thresholds():
+    """Explicitly-provided thresholds are an operator pin, not learned
+    state: ``apply_delta`` must leave them in place."""
+    csr = powerlaw(160, 5.0, seed=0)
+    trainer = QueryDispatcher(
+        mesh11(), csr, max_iters=64, online_adapt=True, refit_every=2,
+        backend="dopt", family="powerlaw",
+    )
+    rng = np.random.default_rng(3)
+    for _q in range(3):
+        trainer.query(rng.integers(0, 160, 6).astype(np.int32))
+    pinned = trainer.refit_thresholds()
+    assert pinned is not None
+
+    d = QueryDispatcher(
+        mesh11(), csr, max_iters=64, online_adapt=True,
+        direction_thresholds=pinned, backend="dopt", family="powerlaw",
+    )
+    d.query(rng.integers(0, 160, 6).astype(np.int32))
+    d.apply_delta(random_delta(csr, 10, 10, seed=6))
+    assert d.direction_thresholds is pinned

@@ -1,0 +1,246 @@
+"""New query-scenario families through the UNCHANGED serving stack
+(ISSUE 9 tentpole acceptance).
+
+Weighted top-k path distances, personalized-PageRank diffusion, and
+2/3-hop pattern (wedge/triangle-walk) counts are registered as first-class
+edge computes and must flow through admission -> hybrid dispatch -> online
+learning with zero scheduler-layer special-casing: the same AdmissionQueue
+plans them (solo — none has a saturating lane form), the same
+QueryDispatcher serves them through the two-phase hybrid + gang resume,
+and every result is bit-identical to the pure-numpy oracle in BOTH engine
+state layouts. Also pins the lanes_ok capability guard (weighted/new-kind
+submissions are provably never MS-BFS lane-packed) and the block_mxu ==
+ell_push exactness of integer pattern counts.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from proptest import given, st_ints, st_seeds
+from oracle import pattern_counts, ppr_mass, topk_dists
+
+from repro.graph.csr import CSRGraph, csr_from_edges
+from repro.core import EDGE_COMPUTES, QUERY_KINDS, build_operands
+from repro.core.edge_compute import PPRDiffusion, TopKPaths
+from repro.core.extend import ExtendSpec, GraphOperands, as_spec
+from repro.core.ife import run_ife
+from repro.runtime.dispatch import QueryDispatcher
+from repro.runtime.service import ServingLoop
+from repro.launch.mesh import make_mesh
+
+
+def mesh11():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def weighted_csr(n=96, m=640, seed=0) -> CSRGraph:
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.1, 2.0, m).astype(np.float32)
+    return csr_from_edges(
+        n, rng.integers(0, n, m), rng.integers(0, n, m), weights=w
+    )
+
+
+def query_operands(csr, block=128):
+    """One bundle carrying forward + reverse + block operands at a common
+    pad, so every new-kind backend scans the identical edge set."""
+    pull, n1 = build_operands(csr, "ell_pull", block=block)
+    blk, n2 = build_operands(
+        csr, ExtendSpec(backend="block_mxu", block=block), block=block
+    )
+    assert n1 == n2
+    return GraphOperands(fwd=pull.fwd, rev=pull.rev, blocks=blk.blocks), n1
+
+
+def test_query_kinds_registry_consistent():
+    # every non-reach kind names a registered edge compute whose LANES_OK
+    # capability matches the registry bit the admission/dispatch guards
+    # read — the one source of truth for "can this pack into lanes"
+    assert QUERY_KINDS["reach"].edge_compute is None
+    for name, kind in QUERY_KINDS.items():
+        if kind.edge_compute is None:
+            continue
+        ec = EDGE_COMPUTES[kind.edge_compute]
+        assert getattr(ec, "LANES_OK") == kind.lanes_ok, name
+        assert len(kind.result_leaves) >= 1, name
+    # the weighted relax computes advertise no lane form
+    assert not QUERY_KINDS["topk_paths"].lanes_ok
+    assert not QUERY_KINDS["ppr"].lanes_ok
+    assert not QUERY_KINDS["pattern_counts"].lanes_ok
+    assert not EDGE_COMPUTES["bellman_ford"].LANES_OK
+    assert EDGE_COMPUTES["msbfs_lengths"].LANES_OK
+
+
+@given(st_seeds(), st_ints(48, 128), cases=3)
+def test_prop_new_kinds_oracle_parity_run_ife(seed, n):
+    """run_ife fixpoints == numpy oracles, bitwise, on random weighted
+    graphs — the kernel-level ground truth the serving parity builds on."""
+    csr = weighted_csr(n=n, m=6 * n, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    srcs = rng.integers(0, n, size=2).astype(np.int32)
+    ops, n_pad = query_operands(csr)
+
+    r = run_ife(ops, srcs, "topk_paths", max_iters=512, extend="ell_pull")
+    np.testing.assert_array_equal(
+        np.asarray(r.state.dists)[:n], topk_dists(csr, srcs, k=TopKPaths.K)
+    )
+
+    r = run_ife(ops, srcs, "ppr", max_iters=512, extend="ell_push")
+    mass, residual, iters = ppr_mass(
+        csr, srcs, alpha=PPRDiffusion.ALPHA, eps=PPRDiffusion.EPS
+    )
+    # XLA's scatter-add visits a row's in-edges in a different order than
+    # np.add.at, so engine-vs-ORACLE is ULP-tolerant; engine-vs-engine
+    # (layouts, backends, replays) stays bitwise elsewhere in this file
+    np.testing.assert_allclose(
+        np.asarray(r.state.mass)[:n], mass, rtol=1e-5, atol=1e-7
+    )
+    np.testing.assert_allclose(
+        np.asarray(r.state.residual)[:n], residual, rtol=1e-5, atol=1e-7
+    )
+    assert int(np.asarray(r.iterations)) == iters
+    # epsilon termination: every node's residual is settled at exit
+    assert (np.asarray(r.state.residual)[:n] <= PPRDiffusion.EPS).all()
+
+    r = run_ife(ops, srcs, "pattern_counts", max_iters=512)
+    wedges, closed = pattern_counts(csr, srcs)
+    np.testing.assert_array_equal(np.asarray(r.state.wedges)[:n], wedges)
+    np.testing.assert_array_equal(np.asarray(r.state.closed)[:n], closed)
+    assert int(np.asarray(r.iterations)) == 3
+
+
+def test_pattern_counts_block_mxu_bitwise_vs_push():
+    """Integer walk counts are associative sums: the MXU block-matmul
+    chain must equal the ELL push scatter bit-for-bit on real rows."""
+    csr = weighted_csr(n=100, m=1400, seed=3)
+    ops, n_pad = query_operands(csr)
+    srcs = np.array([5, 9], np.int32)
+    a = run_ife(ops, srcs, "pattern_counts", max_iters=16, extend="ell_push")
+    b = run_ife(
+        ops, srcs, "pattern_counts", max_iters=16,
+        extend=ExtendSpec(backend="block_mxu", block=128),
+    )
+    n = csr.n_nodes
+    np.testing.assert_array_equal(
+        np.asarray(a.state.wedges)[:n], np.asarray(b.state.wedges)[:n]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(a.state.closed)[:n], np.asarray(b.state.closed)[:n]
+    )
+    assert int(np.asarray(a.iterations)) == int(np.asarray(b.iterations))
+
+
+def test_new_kinds_through_unchanged_stack_both_layouts():
+    """The headline acceptance: all three families served through the
+    stock AdmissionQueue -> QueryDispatcher -> ServingLoop (no layer
+    special-cases them beyond compute registration), oracle-identical in
+    the replicated AND sharded engine state layouts."""
+    csr = weighted_csr(n=96, m=640, seed=1)
+    n = csr.n_nodes
+    loop = ServingLoop(mesh11(), csr, max_iters=512)
+    t_topk = loop.submit([3, 17], query_kind="topk_paths")
+    t_ppr = loop.submit([5], query_kind="ppr")
+    t_pat = loop.submit([7, 9], query_kind="pattern_counts")
+    t_reach = loop.submit([0, 1])  # reach rides the same stream
+    res = loop.drain()
+
+    # per-source result rows against the oracles
+    for i, s in enumerate([3, 17]):
+        np.testing.assert_array_equal(
+            res[t_topk.qid][i], topk_dists(csr, [s], k=TopKPaths.K)
+        )
+    mass, _, _ = ppr_mass(csr, [5])
+    np.testing.assert_allclose(res[t_ppr.qid][0], mass, rtol=1e-5, atol=1e-7)
+    for i, s in enumerate([7, 9]):
+        wedges, closed = pattern_counts(csr, [s])
+        np.testing.assert_array_equal(res[t_pat.qid]["wedges"][i], wedges)
+        np.testing.assert_array_equal(res[t_pat.qid]["closed"][i], closed)
+    assert res[t_reach.qid].shape == (2, n)
+
+    # the stack really served them: one dispatcher, shared engine cache,
+    # stats accounted — and nothing was lane-packed
+    assert loop.stats.batches == 4
+    assert loop.dispatcher.stats.queries == 4
+    assert not any(k.policy.lanes > 1 for k in loop.dispatcher.cache.keys())
+
+    # sharded engine layout is bit-identical through the same dispatcher
+    d = QueryDispatcher(mesh11(), csr, max_iters=512)
+    for kind, leaves, srcs in [
+        ("topk_paths", ("dists",), [3, 17]),
+        ("ppr", ("mass", "residual"), [5]),
+        ("pattern_counts", ("wedges", "closed"), [7, 9]),
+    ]:
+        rep = d.query(srcs, query_kind=kind, state_layout="replicated")
+        sh = d.query(srcs, query_kind=kind, state_layout="sharded")
+        for leaf in leaves:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(rep.result.state, leaf)),
+                np.asarray(getattr(sh.result.state, leaf)),
+                err_msg=f"{kind}.{leaf}",
+            )
+        np.testing.assert_array_equal(
+            np.asarray(rep.result.iterations),
+            np.asarray(sh.result.iterations),
+        )
+
+
+def test_lanes_ok_kinds_never_lane_packed():
+    """Satellite guard: submissions of kinds with no saturating lane form
+    are NEVER pooled into the shared MS-BFS lane pack, no matter how many
+    sources are queued — and a caller pinning a lane policy gets a loud
+    error instead of silent corruption."""
+    csr = weighted_csr(seed=2)
+    loop = ServingLoop(mesh11(), csr, max_iters=64)
+    # 72 pooled sources would normally tip recommend_policy into ntkms
+    for i in range(72):
+        loop.submit([int(i % csr.n_nodes)], query_kind="ppr")
+    plan = loop.admission.plan(now=loop.clock())
+    assert len(plan.batches) == 72
+    assert not any(pb.packed for pb in plan.batches)
+    assert all(pb.policy is None for pb in plan.batches)
+    assert all(pb.query_kind == "ppr" for pb in plan.batches)
+
+    # mixed stream: the reach pool still packs, the weighted kinds stay
+    # solo and do not tip the pool's policy decision
+    loop2 = ServingLoop(mesh11(), csr, max_iters=64)
+    for i in range(70):
+        loop2.submit([int(i % csr.n_nodes)])
+    for i in range(3):
+        loop2.submit([int(i)], query_kind="topk_paths")
+    plan2 = loop2.admission.plan(now=loop2.clock())
+    packed = [pb for pb in plan2.batches if pb.packed]
+    unpacked = [pb for pb in plan2.batches if not pb.packed]
+    assert len(packed) == 1 and packed[0].query_kind == "reach"
+    assert len(unpacked) == 3
+    assert all(pb.query_kind == "topk_paths" for pb in unpacked)
+
+    # dispatch-layer re-check: pinning a lane policy onto a lane-less
+    # kind raises; the auto-recommended path degrades to per-source
+    # morsels (ntks), never ntkms
+    d = QueryDispatcher(mesh11(), csr, max_iters=64)
+    many = np.arange(72, dtype=np.int32) % csr.n_nodes
+    out = d.query(many, query_kind="ppr")
+    assert out.policy == "ntks"
+    with pytest.raises(ValueError, match="no lane form"):
+        d.query(many, query_kind="ppr", policy="ntkms")
+
+
+def test_query_kind_validation():
+    csr = weighted_csr(seed=4)
+    loop = ServingLoop(mesh11(), csr, max_iters=32)
+    with pytest.raises(ValueError, match="unknown query_kind"):
+        loop.submit([1], query_kind="nope")
+    d = QueryDispatcher(mesh11(), csr, max_iters=32)
+    with pytest.raises(ValueError, match="unknown query_kind"):
+        d.query([1], query_kind="nope")
+    with pytest.raises(ValueError, match="returns_paths"):
+        d.query([1], query_kind="ppr", returns_paths=True)
+
+
+def test_topk_local_extend_is_pull_only():
+    ec = EDGE_COMPUTES["topk_paths"]
+    csr = weighted_csr(seed=5)
+    ops, _ = query_operands(csr)
+    state = ec.init(csr.n_nodes, jnp.asarray([0], jnp.int32))
+    with pytest.raises(NotImplementedError):
+        ec.local_extend(ops.fwd, state)

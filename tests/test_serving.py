@@ -555,3 +555,72 @@ def test_admission_queue_capped_batches_order_and_bit_identity():
     )
     for qid, _s in queries:
         np.testing.assert_array_equal(capped[qid], ref[qid])
+
+
+# ---------------------------------------------------------------------------
+# PPR epsilon-termination determinism (ISSUE 9 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_ppr_epsilon_termination_deterministic_across_stack_knobs():
+    """PPR's iterate-until-epsilon exit is a pure function of the graph
+    and seeds: the same seeded stream must settle to bit-identical mass,
+    residuals, and iteration counts with online learning on or off and
+    in the replicated or sharded engine state layout. The learners and
+    layouts may move WHEN work happens (budget caps, resume, gang), but
+    never the float trajectory of the converging diffusion."""
+    from repro.runtime.dispatch import QueryDispatcher
+
+    csr, heads = serve_graph()
+    rng = np.random.default_rng(11)
+    subs = [
+        (f"p{i}", rng.integers(0, csr.n_nodes, 2).astype(np.int32))
+        for i in range(4)
+    ]
+
+    # served stream: online-adapt on vs off, delivered mass rows bitwise
+    def run_loop(online_adapt):
+        loop = _loop(csr, online_adapt=online_adapt, max_iters=512)
+        for qid, s in subs:
+            loop.submit(s, qid=qid, query_kind="ppr")
+        return loop.drain()
+
+    adapt_on = run_loop(True)
+    adapt_off = run_loop(False)
+    assert set(adapt_on) == set(adapt_off) == {qid for qid, _ in subs}
+    for qid in adapt_on:
+        np.testing.assert_array_equal(adapt_on[qid], adapt_off[qid])
+
+    # dispatcher level: every (online_adapt, layout) cell agrees on the
+    # full state — mass, residual, AND the iteration count at which the
+    # epsilon exit fired
+    runs = {}
+    for adapt in (True, False):
+        for layout in ("replicated", "sharded"):
+            d = QueryDispatcher(
+                mesh11(), csr, max_iters=512, online_adapt=adapt,
+                backend="dopt", family="powerlaw",
+            )
+            outs = [
+                d.query(s, query_kind="ppr", state_layout=layout)
+                for _qid, s in subs
+            ]
+            runs[(adapt, layout)] = [
+                (
+                    np.asarray(o.result.state.mass),
+                    np.asarray(o.result.state.residual),
+                    np.asarray(o.result.iterations),
+                )
+                for o in outs
+            ]
+    ref = runs[(True, "replicated")]
+    from repro.core.edge_compute import PPRDiffusion
+
+    for (mass, residual, iters) in ref:
+        assert (residual <= PPRDiffusion.EPS).all()
+        assert (iters < 512).all()
+    for cell, got in runs.items():
+        for (m0, r0, i0), (m1, r1, i1) in zip(ref, got):
+            np.testing.assert_array_equal(m0, m1, err_msg=str(cell))
+            np.testing.assert_array_equal(r0, r1, err_msg=str(cell))
+            np.testing.assert_array_equal(i0, i1, err_msg=str(cell))

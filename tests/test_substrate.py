@@ -120,6 +120,51 @@ def test_straggler_detector():
     assert det.ewma < 1.5
 
 
+def test_straggler_warmup_seeds_first_sample_once():
+    from repro.runtime.fault_tolerance import StragglerDetector
+
+    # constant step time through warmup: the EWMA must equal it EXACTLY.
+    # Seeding from the first sample and then EWMA-ing that same sample
+    # (the old bug) leaves ewma == dt only by luck of the constant input,
+    # so also check an increasing ramp against the hand-rolled recurrence.
+    det = StragglerDetector(warmup=4, threshold=2.0, alpha=0.25)
+    for s in range(4):
+        det.observe(s, 2.0)
+    assert det.ewma == 2.0
+
+    det2 = StragglerDetector(warmup=4, threshold=2.0, alpha=0.25)
+    ref = None
+    for s, dt in enumerate([1.0, 1.2, 1.4, 1.6]):
+        det2.observe(s, dt)
+        ref = dt if ref is None else 0.75 * ref + 0.25 * dt
+    assert det2.ewma == pytest.approx(ref)
+    # no incident can fire during warmup, however wild the sample
+    det3 = StragglerDetector(warmup=3, threshold=2.0)
+    for s, dt in enumerate([1.0, 50.0, 1.0]):
+        assert det3.observe(s, dt) is False
+    assert det3.incidents == []
+
+
+def test_straggler_ewma_adapts_to_persistent_slow_regime():
+    from repro.runtime.fault_tolerance import StragglerDetector
+
+    # a permanent 10x slowdown must flag when it starts, then the
+    # clamped update lets the baseline converge to the new normal and
+    # the flagging STOPS — the old unclamped-skip behavior froze the
+    # EWMA at the fast regime and flagged every later step forever
+    det = StragglerDetector(warmup=3, threshold=2.0, alpha=0.2)
+    for s in range(10):
+        det.observe(s, 1.0)
+    flags = [det.observe(10 + i, 10.0) for i in range(60)]
+    assert flags[0] is True
+    assert not all(flags), "EWMA never adapted to the persistent regime"
+    tail = flags[-10:]
+    assert not any(tail), "still flagging after convergence"
+    assert det.ewma == pytest.approx(10.0, rel=0.05)
+    # and a genuine outlier on top of the NEW baseline still flags
+    assert det.observe(99, 25.0) is True
+
+
 def test_compression_error_feedback():
     from repro.optim.compression import (
         compress_grads,
