@@ -56,7 +56,17 @@
 #                               # lane-packed engine, and the weighted
 #                               # weight-only churn chain folding for less
 #                               # total wall than the wholesale re-place
-#                               # baseline, bit-identical to a rebuild)
+#                               # baseline, bit-identical to a rebuild);
+#                               # finally run the scale-out benchmark in
+#                               # --smoke mode and validate
+#                               # BENCH_scale_out.json (schema + the
+#                               # scale-out floors: the streamed per-shard
+#                               # operand build's traced host peak strictly
+#                               # below the wholesale build's, every
+#                               # device-assembled operand leaf bitwise-
+#                               # identical across the two builds, and the
+#                               # degree-chunked hub-slab gathers exact
+#                               # against the unchunked oracle)
 #
 # CI_BUDGET_SECONDS caps any lane via timeout (default 1800); a hung XLA
 # compile or subprocess fails the lane instead of wedging the pipeline.
@@ -117,6 +127,10 @@ elif [[ "${1:-}" == "--bench-smoke" ]]; then
   timeout --signal=INT "$BUDGET" \
     python benchmarks/query_scenarios.py --smoke --out "$QOUT"
   validate_bench query_scenarios "$QOUT"
+  XOUT="${BENCH_SCALE_OUT:-/tmp/BENCH_scale_out.smoke.json}"
+  timeout --signal=INT "$BUDGET" \
+    python benchmarks/scale_out.py --smoke --out "$XOUT"
+  validate_bench scale_out "$XOUT"
 else
   FAST_BUDGET="${FAST_LANE_BUDGET_SECONDS:-900}"
   START=$(date +%s)

@@ -28,17 +28,20 @@ from .policies import (
     recommend_backend,
     recommend_k,
 )
+from .edge_compute import chunk_fold
 from .extend import (
     BACKENDS,
     STATS_WIDTH,
     BackendCostProbe,
     ExtendSpec,
     GraphOperands,
+    OperandStream,
     as_spec,
     build_operands,
     effective_csr,
     frontier_stats,
     make_backend,
+    operand_stream,
 )
 from .dispatcher import (
     QueryEngine,

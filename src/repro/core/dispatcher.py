@@ -53,6 +53,7 @@ from .extend import (
     build_operands,
     frontier_stats,
     make_backend,
+    operand_stream,
 )
 from .ife import IFEResult
 from .policies import MorselPolicy
@@ -696,6 +697,7 @@ def prepare_graph(
     pad_shards: int | None = None,
     extend="ell_push",
     version: int = 0,
+    stream: bool | None = None,
 ) -> tuple[GraphOperands, int]:
     """Host-side: CSR → padded, device-placed extension operands for this
     policy's mesh: the forward ELL always, plus the reverse ELL, the
@@ -712,12 +714,27 @@ def prepare_graph(
     own shard count) instead of the policy's alone. The adaptive scheduler
     passes ``mesh.size`` so the phase-1 (nTkS, graph over a subset of axes)
     and phase-2 (nT1S, graph over all axes) graphs share one ``n_pad`` and
-    state arrays can flow between the two engines unchanged."""
+    state arrays can flow between the two engines unchanged.
+
+    ``stream``: build operands one policy shard at a time and place each
+    shard directly on its devices instead of materializing the whole host
+    structure first — peak host memory drops to ~1/shards of the wholesale
+    build, and under multi-process JAX each process builds only the shards
+    its addressable devices own (``None`` = auto: stream exactly when
+    ``jax.process_count() > 1``). Falls back to the wholesale build when
+    the policy has no graph axes (replicated operands). The placed arrays
+    are bitwise-identical to the wholesale path's either way."""
     spec = as_spec(extend)
     k_policy = _axes_size(mesh, policy.graph_axes)
     shards = k_policy
     if pad_shards is not None:
         shards = int(np.lcm(shards, int(pad_shards)))
+    if stream is None:
+        stream = jax.process_count() > 1
+    if stream and policy.graph_axes and k_policy > 1:
+        return _prepare_graph_streamed(
+            csr, mesh, policy, spec, max_deg, shards, k_policy, version
+        )
     # rows pad for the lcm shard count, but binned slabs are built directly
     # at the policy's own shard count (per-shard binning can't reshape)
     ops, n_pad = build_operands(
@@ -800,6 +817,72 @@ def _regroup_block_rows(sb: ShardedBlocks, k_shards: int, n_pad: int):
     offs = (jnp.arange(fine, dtype=jnp.int32) % group) * rb_fine
     rows = sb.block_rows + offs[:, None]
     return jnp.reshape(rows, (k_shards, -1))
+
+
+def _device_shard_map(mesh: Mesh, ga, k_policy: int) -> dict:
+    """Addressable device → policy-shard index, derived from how a
+    ``P(ga)`` sharding chunks a virtual ``[k_policy]`` axis. The grouping
+    is leaf-shape independent: every operand leaf shards its axis 0 over
+    the same graph axes into ``k_policy`` equal contiguous chunks, so
+    chunk ``k``'s device group is the same for all of them."""
+    probe = NamedSharding(mesh, P(ga))
+    idx_map = probe.addressable_devices_indices_map((k_policy,))
+    out = {}
+    for d, idx in idx_map.items():
+        sl = idx[0]
+        out[d] = 0 if sl.start is None else int(sl.start)
+    return out
+
+
+def _prepare_graph_streamed(
+    csr: CSRGraph,
+    mesh: Mesh,
+    policy: MorselPolicy,
+    spec: ExtendSpec,
+    max_deg: int | None,
+    shards: int,
+    k_policy: int,
+    version: int,
+) -> tuple[GraphOperands, int]:
+    """Shard-at-a-time, multi-host-aware operand placement.
+
+    Plans the build once (``operand_stream``), then for each policy shard
+    owned by an *addressable* device builds only that shard's host leaves,
+    places them on its devices, and frees them before the next shard —
+    host peak is one shard's bytes, and under multi-process JAX each
+    process touches only its local shards. Global arrays are assembled
+    from the per-device buffers (``jax.make_array_from_single_device_
+    arrays``) under exactly the shardings the wholesale path uses, so
+    engines see identical operands."""
+    st = operand_stream(
+        csr, spec, max_deg=max_deg, shards=shards, binned_shards=k_policy
+    )
+    n_pad = st.n_pad
+    ga = policy.graph_axes
+    dev_shard = _device_shard_map(mesh, ga, k_policy)
+    local = sorted(set(dev_shard.values()))
+    bufs: dict = {}  # leaf name -> list of single-device arrays
+    shapes: dict = {}  # leaf name -> global shape
+    for k in local:
+        piece = st.build_shard(k)
+        for name, arr in piece.items():
+            shapes.setdefault(
+                name, (arr.shape[0] * k_policy, *arr.shape[1:])
+            )
+            blist = bufs.setdefault(name, [])
+            for d, kk in dev_shard.items():
+                if kk == k:
+                    blist.append(jax.device_put(arr, d))
+        del piece  # free this shard's host leaves before the next build
+    leaves = {}
+    for name, blist in bufs.items():
+        shape = shapes[name]
+        ndim = len(shape)
+        sharding = NamedSharding(mesh, P(ga, *(None,) * (ndim - 1)))
+        leaves[name] = jax.make_array_from_single_device_arrays(
+            shape, sharding, blist
+        )
+    return st.assemble(leaves, version=version), n_pad
 
 
 def run_recursive_query(

@@ -84,32 +84,61 @@ def ell_reach_dense(
 def _deg_chunk(rows: int, width: int, budget: int = 2 << 30) -> int:
     """Degree-dim chunk so the scatter temp [rows, chunk, width] stays under
     ``budget`` bytes (billion-node lane morsels would otherwise materialize a
-    rows×max_deg×L broadcast — 31 GB/device for Graph500-28)."""
+    rows×max_deg×L broadcast — 31 GB/device for Graph500-28).
+
+    Returns the largest power of two that fits the budget, so the chunk
+    divides every pow2-padded slab width exactly. Widths that are NOT a
+    chunk multiple (the forward ELL pads to a multiple of 8, not a pow2;
+    refined degree buckets can have arbitrary widths) are handled by
+    ``chunk_fold``'s static remainder tail — the historical round-to-8
+    chunk could land on e.g. 24 against a 32-wide slab and trip the
+    divisibility assert."""
     per_slot = max(rows * width, 1)
     c = max(budget // per_slot, 1)
-    return max((c // 8) * 8, 1) if c >= 8 else 1
+    return 1 << (int(c).bit_length() - 1)
+
+
+def chunk_fold(D: int, chunk: int, step, acc0):
+    """Fold ``step(start, width, acc)`` over the degree axis ``[0, D)`` in
+    ``chunk``-sized pieces: a ``fori_loop`` over the full chunks (bounded
+    temps, in-place carry) plus ONE statically-shaped remainder tail of
+    ``D % chunk`` columns when the chunk does not divide ``D``. ``start``
+    may be traced; ``width`` is always a Python int so callers can
+    ``dynamic_slice`` with it. Order is ascending-degree-slot either way,
+    so order-invariant (OR/min/max/sum-of-int) reductions are bitwise
+    equal to the unchunked single-shot fold."""
+    full, rem = divmod(D, chunk)
+    acc = acc0
+    if full == 1 and rem == 0:
+        return step(0, D, acc)
+    if full:
+        acc = jax.lax.fori_loop(
+            0, full, lambda i, a: step(i * chunk, chunk, a), acc
+        )
+    if rem:
+        acc = step(full * chunk, rem, acc)
+    return acc
 
 
 def _chunked_scatter(g: EllGraph, out, values_row, chunk: int, reducer: str):
     """Scatter values_row[:, None, :] over degree chunks of g.indices into
-    ``out`` via a fori_loop (bounded temps, in-place carry)."""
+    ``out`` via ``chunk_fold`` (bounded temps, in-place carry)."""
     D = g.indices.shape[1]
-    if chunk >= D:
-        idx = g.indices
-        contrib = jnp.broadcast_to(
-            values_row[:, None, :], (*idx.shape, values_row.shape[-1])
-        )
-        return getattr(out.at[idx], reducer)(contrib, mode="drop")
-    assert D % chunk == 0, (D, chunk)
 
-    def body(i, acc):
-        idx = jax.lax.dynamic_slice_in_dim(g.indices, i * chunk, chunk, 1)
+    def step(start, width, acc):
+        idx = (
+            g.indices
+            if width == D
+            else jax.lax.dynamic_slice_in_dim(g.indices, start, width, 1)
+        )
         contrib = jnp.broadcast_to(
             values_row[:, None, :], (*idx.shape, values_row.shape[-1])
         )
         return getattr(acc.at[idx], reducer)(contrib, mode="drop")
 
-    return jax.lax.fori_loop(0, D // chunk, body, out)
+    if chunk >= D:
+        return step(0, D, out)
+    return chunk_fold(D, chunk, step, out)
 
 
 def ell_reach_lanes(
@@ -182,7 +211,12 @@ def ell_min_topk(
         else jnp.ones_like(rev.indices, dtype=jnp.float32)
     )
 
-    def step(idx, wts, acc):
+    def step(start, width, acc):
+        if width == D:
+            idx, wts = rev.indices, w
+        else:
+            idx = jax.lax.dynamic_slice_in_dim(rev.indices, start, width, 1)
+            wts = jax.lax.dynamic_slice_in_dim(w, start, width, 1)
         got = gdists.at[idx].get(mode="fill", fill_value=jnp.inf)
         cand = (got + wts[:, :, None]).reshape(rows, -1)
         merged = jnp.concatenate([acc, cand], axis=1)
@@ -190,18 +224,8 @@ def ell_min_topk(
 
     chunk = _deg_chunk(rows, 4 * k)
     if chunk >= D:
-        return step(rev.indices, w, acc0)
-    assert D % chunk == 0, (D, chunk)
-    return jax.lax.fori_loop(
-        0,
-        D // chunk,
-        lambda i, acc: step(
-            jax.lax.dynamic_slice_in_dim(rev.indices, i * chunk, chunk, 1),
-            jax.lax.dynamic_slice_in_dim(w, i * chunk, chunk, 1),
-            acc,
-        ),
-        acc0,
-    )
+        return step(0, D, acc0)
+    return chunk_fold(D, chunk, step, acc0)
 
 
 def _row_ids(g: EllGraph, row_offset, row_base) -> jax.Array:

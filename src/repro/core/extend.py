@@ -69,6 +69,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from ..kernels.binned_pull.ops import (
@@ -77,21 +78,28 @@ from ..kernels.binned_pull.ops import (
     build_pack as build_binned_pack,
 )
 from ..graph.csr import (
+    BinnedPlan,
     BinnedRevEll,
     CSRGraph,
     EllGraph,
     ShardedBlocks,
+    binned_plan,
     binned_rev_csr,
+    binned_rev_shard,
     ell_from_csr,
+    ell_shard,
     sharded_blocks_from_csr,
+    sharded_blocks_nb,
+    sharded_blocks_shard,
     truncate_csr,
 )
-from ..graph.partition import pad_ell
+from ..graph.partition import pad_ell, padded_n, reverse_shard
 from .collectives import min_allreduce, or_allreduce
 from .edge_compute import (
     NO_PARENT,
     _deg_chunk,
     _local_rows,
+    chunk_fold,
     ell_min_dist,
     ell_min_parent,
     ell_min_parent_lanes,
@@ -297,6 +305,206 @@ def effective_csr(csr: CSRGraph, max_deg: int | None) -> CSRGraph:
     return truncate_csr(csr, cap)
 
 
+def _round8(cap: int) -> int:
+    return -(-cap // 8) * 8 if cap > 0 else 0
+
+
+@dataclasses.dataclass(frozen=True)
+class OperandStream:
+    """Shard-at-a-time operand construction (the streamed half of
+    ``build_operands``).
+
+    ``operand_stream`` runs the global O(n) planning passes once (row
+    padding, ELL widths, the binned-slab plan, the common block tile
+    count); ``build_shard(k)`` then materializes only policy shard ``k``'s
+    leaves as host numpy arrays — peak host memory is one shard's operand
+    bytes plus the resident CSR, instead of the whole padded structure.
+    Every leaf's axis 0 is the sharded axis (rows for ELL leaves, the
+    stacked shard axis for binned/pack/block leaves), and a shard's piece
+    is exactly ``global_shape[0] // k_shards`` entries of it, so the
+    caller can place pieces per device and assemble global arrays
+    (``dispatcher.prepare_graph(stream=True)``) or concatenate them into
+    the wholesale host structure. Bitwise-identical to ``build_operands``
+    by construction — see the per-shard builders' docstrings for why.
+    """
+
+    csr: CSRGraph  # effective (truncated) forward graph
+    spec: ExtendSpec
+    n_pad: int
+    k_shards: int  # policy shard count — the build granularity
+    fine_shards: int  # row-padding (lcm) shard count; blocks built fine
+    cap_fwd: int
+    cap_rev: Optional[int] = None
+    plan: Optional[BinnedPlan] = None
+    nb: Optional[int] = None
+
+    @property
+    def rows_local(self) -> int:
+        return self.n_pad // self.k_shards
+
+    def build_shard(self, k: int) -> dict:
+        """Policy shard ``k``'s operand leaves: flat dict name → host
+        numpy array (the key set is identical across shards)."""
+        rl = self.rows_local
+        lo, hi = k * rl, (k + 1) * rl
+        leaves = {}
+        idx, degs, w = ell_shard(self.csr, lo, hi, self.cap_fwd, self.n_pad)
+        leaves["fwd.indices"], leaves["fwd.degrees"] = idx, degs
+        if w is not None:
+            leaves["fwd.weights"] = w
+        rev_local = None
+        if self.spec.needs_rev or self.spec.needs_binned:
+            rev_local = reverse_shard(self.csr, lo, hi)
+        if self.spec.needs_rev:
+            idx, degs, w = ell_shard(rev_local, 0, rl, self.cap_rev,
+                                     self.n_pad)
+            leaves["rev.indices"], leaves["rev.degrees"] = idx, degs
+            if w is not None:
+                leaves["rev.weights"] = w
+        if self.spec.needs_binned:
+            bn = binned_rev_shard(self.plan, k, rev_local)
+            leaves["bn.perm"], leaves["bn.inv"] = bn.perm, bn.inv
+            for b, s in enumerate(bn.slabs):
+                leaves[f"bn.slab{b}"] = s
+            if bn.slab_weights is not None:
+                for b, s in enumerate(bn.slab_weights):
+                    leaves[f"bn.w{b}"] = s
+            if self.spec.needs_binned_pack:
+                pk = build_binned_pack(bn, self.n_pad, as_numpy=True)
+                leaves["pack.inv_pad"] = pk.inv_pad
+                leaves["pack.perm_pad"] = pk.perm_pad
+                for b, s in enumerate(pk.slabs):
+                    leaves[f"pack.slab{b}"] = s
+                if pk.slab_weights is not None:
+                    for b, s in enumerate(pk.slab_weights):
+                        leaves[f"pack.w{b}"] = s
+        if self.spec.needs_blocks:
+            group = self.fine_shards // self.k_shards
+            B = self.spec.block
+            sb = sharded_blocks_shard(
+                self.csr, self.n_pad, self.fine_shards, self.nb,
+                k * group, (k + 1) * group, B,
+            )
+            # fold the fine subshards into one policy shard, re-basing the
+            # local row-block ids exactly like ``_regroup_block_rows``
+            rb_fine = (self.n_pad // self.fine_shards) // B
+            offs = (np.arange(group, dtype=np.int32) * rb_fine)[:, None]
+            leaves["blocks.blocks"] = sb.blocks.reshape(1, -1, B, B)
+            leaves["blocks.rows"] = (
+                (sb.block_rows + offs).reshape(1, -1).astype(np.int32)
+            )
+            leaves["blocks.cols"] = sb.block_cols.reshape(1, -1)
+        return leaves
+
+    def assemble(self, g: dict, version: int = 0) -> GraphOperands:
+        """Rebuild ``GraphOperands`` from assembled global leaves (same
+        key set ``build_shard`` emits; values may be jax or numpy)."""
+
+        def ell(p):
+            if f"{p}.indices" not in g:
+                return None
+            return EllGraph(
+                indices=g[f"{p}.indices"],
+                degrees=g[f"{p}.degrees"],
+                weights=g.get(f"{p}.weights"),
+            )
+
+        bn = None
+        pack = None
+        if "bn.inv" in g:
+            nb = len(self.plan.widths)
+            bn = BinnedRevEll(
+                slabs=tuple(g[f"bn.slab{b}"] for b in range(nb)),
+                perm=g["bn.perm"],
+                inv=g["bn.inv"],
+                slab_weights=(
+                    tuple(g[f"bn.w{b}"] for b in range(nb))
+                    if "bn.w0" in g
+                    else None
+                ),
+            )
+            if "pack.inv_pad" in g:
+                nnz = nb - 1
+                pack = BinnedPullPack(
+                    slabs=tuple(
+                        g[f"pack.slab{b}"] for b in range(nnz)
+                    ),
+                    inv_pad=g["pack.inv_pad"],
+                    perm_pad=g["pack.perm_pad"],
+                    slab_weights=(
+                        tuple(g[f"pack.w{b}"] for b in range(nnz))
+                        if "pack.w0" in g
+                        else None
+                    ),
+                )
+        blocks = None
+        if "blocks.blocks" in g:
+            blocks = ShardedBlocks(
+                blocks=g["blocks.blocks"],
+                block_rows=g["blocks.rows"],
+                block_cols=g["blocks.cols"],
+            )
+        return GraphOperands(
+            fwd=ell("fwd"),
+            rev=ell("rev"),
+            rev_binned=bn,
+            rev_binned_pack=pack,
+            blocks=blocks,
+            version=version,
+        )
+
+
+def operand_stream(
+    csr: CSRGraph,
+    extend="ell_push",
+    max_deg: int | None = None,
+    shards: int = 1,
+    block: int | None = None,
+    binned_shards: int | None = None,
+) -> OperandStream:
+    """Plan a streamed (shard-at-a-time) operand build — the counterpart
+    of ``build_operands`` whose per-shard results are bitwise-identical to
+    the wholesale build's slices. Same parameter semantics: rows pad for
+    ``shards`` (the lcm count), binned slabs build at ``binned_shards``
+    (the policy's own shard count), which is also the streaming
+    granularity."""
+    spec = as_spec(extend)
+    pad_block = block or spec.pad_block
+    eff = effective_csr(csr, max_deg)
+    n = eff.n_nodes
+    fine = max(int(shards), 1)
+    k = fine if binned_shards is None else int(binned_shards)
+    assert fine % k == 0, (fine, k)
+    n_pad = padded_n(n, fine, pad_block)
+    cap_fwd = _round8(int(eff.degrees.max()) if n else 0)
+    cap_rev = None
+    plan = None
+    nb = None
+    if spec.needs_rev or spec.needs_binned:
+        rev_degs = (
+            np.bincount(eff.indices, minlength=n)
+            if n
+            else np.zeros(0, np.int64)
+        )
+        if spec.needs_rev:
+            cap_rev = _round8(int(rev_degs.max()) if n else 0)
+        if spec.needs_binned:
+            plan = binned_plan(rev_degs, n_pad, k)
+    if spec.needs_blocks:
+        nb = sharded_blocks_nb(eff, n_pad, fine, spec.block)
+    return OperandStream(
+        csr=eff,
+        spec=spec,
+        n_pad=n_pad,
+        k_shards=k,
+        fine_shards=fine,
+        cap_fwd=cap_fwd,
+        cap_rev=cap_rev,
+        plan=plan,
+        nb=nb,
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class ExtendCtx:
     """Per-trace extension context (fields may be traced values).
@@ -463,15 +671,14 @@ def _pull_gather_lanes(rev: EllGraph, gl: jax.Array) -> jax.Array:
     if chunk >= D:
         got = gl.at[rev.indices].get(mode="fill", fill_value=0)
         return got.max(axis=1)
-    assert D % chunk == 0, (D, chunk)
 
-    def body(i, acc):
-        idx = lax.dynamic_slice_in_dim(rev.indices, i * chunk, chunk, 1)
+    def step(start, width, acc):
+        idx = lax.dynamic_slice_in_dim(rev.indices, start, width, 1)
         got = gl.at[idx].get(mode="fill", fill_value=0)
         return jnp.maximum(acc, got.max(axis=1))
 
     acc0 = jnp.zeros((rows, L), gl.dtype)
-    return lax.fori_loop(0, D // chunk, body, acc0)
+    return chunk_fold(D, chunk, step, acc0)
 
 
 def _pull_min_parent_lanes(rev: EllGraph, gl: jax.Array) -> jax.Array:
@@ -481,7 +688,12 @@ def _pull_min_parent_lanes(rev: EllGraph, gl: jax.Array) -> jax.Array:
         return jnp.full((rows, L), NO_PARENT, jnp.int32)
     chunk = _deg_chunk(rows, 4 * L)
 
-    def step(idx, acc):
+    def step(start, width, acc):
+        idx = (
+            rev.indices
+            if width == D
+            else lax.dynamic_slice_in_dim(rev.indices, start, width, 1)
+        )
         act = gl.at[idx].get(mode="fill", fill_value=0)  # [rows, c, L]
         cand = jnp.where(
             act != 0, idx[:, :, None].astype(jnp.int32), NO_PARENT
@@ -490,16 +702,8 @@ def _pull_min_parent_lanes(rev: EllGraph, gl: jax.Array) -> jax.Array:
 
     acc0 = jnp.full((rows, L), NO_PARENT, jnp.int32)
     if chunk >= D:
-        return step(rev.indices, acc0)
-    assert D % chunk == 0, (D, chunk)
-    return lax.fori_loop(
-        0,
-        D // chunk,
-        lambda i, acc: step(
-            lax.dynamic_slice_in_dim(rev.indices, i * chunk, chunk, 1), acc
-        ),
-        acc0,
-    )
+        return step(0, D, acc0)
+    return chunk_fold(D, chunk, step, acc0)
 
 
 class PullBackend:
@@ -647,6 +851,47 @@ def _binned_map(bn: BinnedRevEll, per_slab, neutral):
     return cat[bn.inv[0]]
 
 
+def _slab_gather_lanes(s: jax.Array, gl: jax.Array) -> jax.Array:
+    """[rows_b, width_b] slab indices × [n_out, L] lanes -> [rows_b, L]
+    OR-reduction, degree-chunked so the gather temp stays under the
+    ``_deg_chunk`` budget even on the hub bucket's widest slab."""
+    rows, D = s.shape
+    L = gl.shape[-1]
+    chunk = _deg_chunk(rows, L)
+    if chunk >= D:
+        return gl.at[s].get(mode="fill", fill_value=0).max(axis=1)
+
+    def step(start, width, acc):
+        idx = lax.dynamic_slice_in_dim(s, start, width, 1)
+        got = gl.at[idx].get(mode="fill", fill_value=0)
+        return jnp.maximum(acc, got.max(axis=1))
+
+    return chunk_fold(D, chunk, step, jnp.zeros((rows, L), gl.dtype))
+
+
+def _slab_min_parent_lanes(s: jax.Array, gl: jax.Array) -> jax.Array:
+    """Per-lane min-parent over one binned slab, degree-chunked like
+    ``_slab_gather_lanes`` (candidate temp is [rows_b, chunk, L] int32)."""
+    rows, D = s.shape
+    L = gl.shape[-1]
+    chunk = _deg_chunk(rows, 4 * L)
+
+    def step(start, width, acc):
+        idx = (
+            s if width == D else lax.dynamic_slice_in_dim(s, start, width, 1)
+        )
+        act = gl.at[idx].get(mode="fill", fill_value=0)
+        cand = jnp.where(
+            act != 0, idx[:, :, None].astype(jnp.int32), NO_PARENT
+        )
+        return jnp.minimum(acc, cand.min(axis=1))
+
+    acc0 = jnp.full((rows, L), NO_PARENT, jnp.int32)
+    if chunk >= D:
+        return step(0, D, acc0)
+    return chunk_fold(D, chunk, step, acc0)
+
+
 class BinnedPullBackend:
     """The ``ell_pull`` contract over ``BinnedRevEll`` slabs.
 
@@ -683,7 +928,7 @@ class BinnedPullBackend:
         L = gl.shape[-1]
         reached = _binned_map(
             bn,
-            lambda b, s: gl.at[s].get(mode="fill", fill_value=0).max(axis=1),
+            lambda b, s: _slab_gather_lanes(s, gl),
             lambda r: jnp.zeros((r, L), gl.dtype),
         )
         if visited is not None:
@@ -714,15 +959,10 @@ class BinnedPullBackend:
         rows = bn.rows_local
         L = gl.shape[-1]
 
-        def per_slab(b, s):
-            act = gl.at[s].get(mode="fill", fill_value=0)  # [rb, w, L]
-            cand = jnp.where(
-                act != 0, s[:, :, None].astype(jnp.int32), NO_PARENT
-            )
-            return cand.min(axis=1)
-
         cand = _binned_map(
-            bn, per_slab, lambda r: jnp.full((r, L), NO_PARENT, jnp.int32)
+            bn,
+            lambda b, s: _slab_min_parent_lanes(s, gl),
+            lambda r: jnp.full((r, L), NO_PARENT, jnp.int32),
         )
         if visited is not None:
             vloc = _local_state(visited, rows, ctx)

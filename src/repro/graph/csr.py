@@ -81,7 +81,17 @@ class CSRGraph:
         """Sorted ``src * n_nodes + dst`` int64 keys, one per edge — the
         identity the dedup in ``csr_from_edges`` and the delta layer's
         edge-set arithmetic (``graph.delta``) both key on. Self-loops are
-        ordinary keys; a deduped CSR's keys are strictly increasing."""
+        ordinary keys; a deduped CSR's keys are strictly increasing.
+
+        Supported range: ``n_nodes < 2**31``. Node ids are stored as int32
+        throughout the operand layouts, and the int64 key arithmetic itself
+        overflows near ``n_nodes ~ 2**31.5``; the int32 storage bound is hit
+        first, so we raise there rather than silently wrap."""
+        if self.n_nodes >= 2**31:
+            raise ValueError(
+                f"n_nodes={self.n_nodes} exceeds the int32 node-id range "
+                "(< 2**31) that edge keys and operand layouts support"
+            )
         src = np.repeat(
             np.arange(self.n_nodes, dtype=np.int64), self.degrees
         )
@@ -103,7 +113,18 @@ def csr_from_edges(
     (``graph.delta.apply_delta_csr``) relies on this by concatenating
     surviving old edges ahead of inserts — re-inserting a live edge keeps
     the existing edge and its weight, exactly as a from-scratch build of
-    the same concatenated list would."""
+    the same concatenated list would.
+
+    Supported range: ``n_nodes < 2**31``. The emitted ``indices`` are int32
+    (every downstream operand layout stores node ids as int32), so larger
+    graphs would silently wrap on the cast; we raise instead. The int64
+    ``src * n_nodes + dst`` dedup key overflows slightly later (around
+    ``n_nodes ~ 2**31.5``), so the int32 bound is the binding one."""
+    if n_nodes >= 2**31:
+        raise ValueError(
+            f"n_nodes={n_nodes} exceeds the int32 node-id range (< 2**31); "
+            "indices would silently wrap on the int32 cast"
+        )
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
     key = src * n_nodes + dst
@@ -411,6 +432,170 @@ def binned_rev_csr(
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class BinnedPlan:
+    """Shard-independent layout of the degree-binned reverse slabs.
+
+    Everything that couples shards in ``binned_rev_csr`` — the bucket
+    edges (derived from the *global* degree histogram), the common
+    (max-over-shards) slab row counts, and the row→bucket assignment — is
+    computed here in one O(n) pass, so a single shard's slabs can then be
+    built from its local reverse adjacency alone (``binned_rev_shard``)
+    and bitwise-match the corresponding ``[k:k+1]`` slice of the wholesale
+    build. This is the streamed operand path's planning half: host peak
+    memory per shard is the shard's own slab bytes, not the whole
+    structure's (see docs/scale.md).
+    """
+
+    widths: tuple  # per-bucket slab width; widths[0] == 0
+    rows_b: np.ndarray  # [n_buckets] common slab row counts
+    bucket_of: np.ndarray  # [n_pad] bucket id per padded row
+    degs: np.ndarray  # [n_pad] effective in-degree per padded row
+    shards: int
+    n_pad: int
+
+    @property
+    def rows_local(self) -> int:
+        return self.n_pad // self.shards
+
+    @property
+    def rows_binned(self) -> int:
+        return int(self.rows_b.sum())
+
+
+def binned_plan(
+    rev_degs: np.ndarray,
+    n_pad: int,
+    shards: int = 1,
+    max_overhead: float = 1.1,
+) -> BinnedPlan:
+    """Global planning pass of ``binned_rev_csr`` (same bucketing, same
+    counts arithmetic) without touching any edge data: ``rev_degs`` is the
+    effective graph's in-degree histogram (``np.bincount(eff.indices)``)."""
+    assert n_pad % max(shards, 1) == 0, (n_pad, shards)
+    rows_local = n_pad // shards
+    degs = np.zeros(n_pad, np.int64)
+    degs[: len(rev_degs)] = rev_degs
+    nz_edges = _degree_bucket_edges(degs, max_overhead)
+    bucket_of = np.zeros(n_pad, np.int64)
+    widths = [0]
+    for b, (lo, hi) in enumerate(nz_edges, start=1):
+        bucket_of[(degs >= lo) & (degs <= hi)] = b
+        widths.append(hi)
+    shard_of = np.arange(n_pad, dtype=np.int64) // rows_local
+    counts = np.zeros((shards, len(widths)), np.int64)
+    np.add.at(counts, (shard_of, bucket_of), 1)
+    return BinnedPlan(
+        widths=tuple(widths),
+        rows_b=counts.max(axis=0),
+        bucket_of=bucket_of,
+        degs=degs,
+        shards=shards,
+        n_pad=n_pad,
+    )
+
+
+def binned_rev_shard(
+    plan: BinnedPlan, k: int, rev_local: CSRGraph
+) -> BinnedRevEll:
+    """Shard ``k``'s slice of the wholesale ``binned_rev_csr`` structure
+    (leading axis K=1), built from the shard's local reverse CSR alone
+    (``partition.reverse_shard``). All leaves are host numpy so the caller
+    controls device placement. Bitwise-identical to
+    ``binned_rev_csr(...)``'s ``[k:k+1]`` slices by construction: the slot
+    order within one (shard, bucket) is ascending local row — exactly what
+    the wholesale lexsort produces — and the in-neighbor lists come from
+    the same stable-by-destination edge order."""
+    rl = plan.rows_local
+    n_pad = plan.n_pad
+    bucket_k = plan.bucket_of[k * rl : (k + 1) * rl]
+    degs_k = plan.degs[k * rl : (k + 1) * rl]
+    n_buckets = len(plan.widths)
+    starts = np.cumsum(plan.rows_b) - plan.rows_b
+
+    local = np.arange(rl, dtype=np.int64)
+    order = np.argsort(bucket_k, kind="stable")  # (bucket, local) asc
+    o_bucket, o_local = bucket_k[order], local[order]
+    run_start = np.concatenate(
+        [[0], np.cumsum(np.bincount(o_bucket, minlength=n_buckets))]
+    )[:-1]
+    slot_in_bucket = np.arange(rl, dtype=np.int64) - run_start[o_bucket]
+    pos = starts[o_bucket] + slot_in_bucket
+
+    perm = np.full((1, plan.rows_binned), rl, np.int32)
+    perm[0, pos] = o_local.astype(np.int32)
+    inv = np.zeros((1, rl), np.int32)
+    inv[0, o_local] = pos.astype(np.int32)
+
+    has_w = rev_local.weights is not None
+    slabs, slab_w = [], []
+    for b in range(n_buckets):
+        w = plan.widths[b]
+        rb = int(plan.rows_b[b])
+        slab = np.full((1, rb, w), n_pad, np.int32)
+        wslab = np.zeros((1, rb, w), np.float32) if has_w else None
+        if w > 0:
+            sel = o_bucket == b
+            rows = o_local[sel]  # local row ids, slot order
+            kept = degs_k[rows]
+            flat = np.repeat(np.arange(len(rows)), kept)
+            slots = np.arange(int(kept.sum()), dtype=np.int64) - np.repeat(
+                np.cumsum(kept) - kept, kept
+            )
+            src = rev_local.indptr[rows][flat] + slots
+            slab[0, slot_in_bucket[sel][flat], slots] = rev_local.indices[
+                src
+            ]
+            if has_w:
+                wslab[0, slot_in_bucket[sel][flat], slots] = (
+                    rev_local.weights[src]
+                )
+        slabs.append(slab)
+        if has_w:
+            slab_w.append(wslab)
+    return BinnedRevEll(
+        slabs=tuple(slabs),
+        perm=perm,
+        inv=inv,
+        slab_weights=tuple(slab_w) if has_w else None,
+    )
+
+
+def ell_shard(
+    csr: CSRGraph, lo: int, hi: int, cap: int, sentinel: int
+) -> tuple[np.ndarray, np.ndarray, Optional[np.ndarray]]:
+    """Rows ``[lo, hi)`` of the padded ELL slab as host numpy
+    ``(indices [rows, cap], degrees [rows], weights-or-None)`` — the
+    streamed build's row-range counterpart of
+    ``pad_ell(ell_from_csr(csr), ...)``. ``cap`` is the *global* padded
+    row width and ``sentinel`` the padded node count ``n_pad`` (when
+    ``n_pad == n_nodes`` the wholesale slab's sentinel is the same value,
+    so the slices agree bitwise either way). Rows at or beyond
+    ``csr.n_nodes`` are pad rows: all-sentinel, degree 0, zero weights."""
+    n = csr.n_nodes
+    rows = hi - lo
+    lo_r, hi_r = min(lo, n), min(hi, n)
+    indices = np.full((rows, cap), sentinel, np.int32)
+    degs = np.zeros(rows, np.int32)
+    w = (
+        np.zeros((rows, cap), np.float32)
+        if csr.weights is not None
+        else None
+    )
+    if hi_r > lo_r and cap > 0:
+        sub = csr.indptr[lo_r : hi_r + 1] - csr.indptr[lo_r]
+        r, s, p = _ell_slot_positions(sub, cap)
+        base = csr.indptr[lo_r]
+        indices[r, s] = csr.indices[base + p]
+        if w is not None:
+            w[r, s] = csr.weights[base + p]
+    if hi_r > lo_r:
+        degs[: hi_r - lo_r] = np.minimum(
+            csr.degrees[lo_r:hi_r], cap
+        ).astype(np.int32)
+    return indices, degs, w
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class BlockAdjacency:
@@ -513,6 +698,77 @@ def sharded_blocks_from_csr(
         blocks=jnp.asarray(out_blocks),
         block_rows=jnp.asarray(out_rows),
         block_cols=jnp.asarray(out_cols),
+    )
+
+
+def sharded_blocks_nb(
+    csr: CSRGraph, n_pad: int, shards: int, block: int = 128
+) -> int:
+    """The common per-shard tile count ``nb`` of
+    ``sharded_blocks_from_csr`` — the one global quantity a per-shard
+    block build needs (shards pad their tile lists to the max count)."""
+    assert n_pad % (shards * block) == 0, (n_pad, shards, block)
+    rows_local = n_pad // shards
+    rb = rows_local // block
+    g = n_pad // block
+    src, dst = csr.edge_list()
+    src = src.astype(np.int64)
+    key = ((src // rows_local) * rb + (src % rows_local) // block) * g + (
+        dst.astype(np.int64) // block
+    )
+    uniq = np.unique(key)
+    if not len(uniq):
+        return 1
+    counts = np.bincount(uniq // (rb * g), minlength=shards)
+    return max(int(counts.max()), 1)
+
+
+def sharded_blocks_shard(
+    csr: CSRGraph,
+    n_pad: int,
+    shards: int,
+    nb: int,
+    f_lo: int,
+    f_hi: int,
+    block: int = 128,
+) -> ShardedBlocks:
+    """Fine shards ``[f_lo, f_hi)`` of the wholesale
+    ``sharded_blocks_from_csr`` structure (leading axis ``f_hi - f_lo``),
+    built from only those shards' edges. ``nb`` is the global common tile
+    count (``sharded_blocks_nb``). Host numpy leaves. Bitwise-identical to
+    the wholesale build's slices: a shard's edges are a contiguous CSR
+    row-range slice, and ``np.unique`` over its keys reproduces the global
+    sorted key order restricted to the shard (the shard id is the key's
+    leading factor)."""
+    rows_local = n_pad // shards
+    rb = rows_local // block
+    g = n_pad // block
+    n = csr.n_nodes
+    span = f_hi - f_lo
+    lo = min(f_lo * rows_local, n)
+    hi = min(f_hi * rows_local, n)
+    e_lo, e_hi = int(csr.indptr[lo]), int(csr.indptr[hi])
+    out_blocks = np.zeros((span, nb, block, block), np.int8)
+    out_rows = np.zeros((span, nb), np.int32)
+    out_cols = np.full((span, nb), g, np.int32)  # sentinel col
+    if e_hi > e_lo:
+        pos = np.arange(e_lo, e_hi, dtype=np.int64)
+        src = np.searchsorted(csr.indptr, pos, side="right") - 1
+        dst = csr.indices[e_lo:e_hi].astype(np.int64)
+        shard = src // rows_local
+        key = (shard * rb + (src % rows_local) // block) * g + dst // block
+        uniq, inv = np.unique(key, return_inverse=True)
+        tiles = np.zeros((len(uniq), block, block), np.int8)
+        tiles[inv, src % block, dst % block] = 1
+        u_shard = (uniq // (rb * g)).astype(np.int64) - f_lo
+        counts = np.bincount(u_shard, minlength=span)
+        starts = np.cumsum(counts) - counts
+        slot = np.arange(len(uniq)) - starts[u_shard]
+        out_blocks[u_shard, slot] = tiles
+        out_rows[u_shard, slot] = ((uniq // g) % rb).astype(np.int32)
+        out_cols[u_shard, slot] = (uniq % g).astype(np.int32)
+    return ShardedBlocks(
+        blocks=out_blocks, block_rows=out_rows, block_cols=out_cols
     )
 
 

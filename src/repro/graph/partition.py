@@ -4,14 +4,16 @@ Frontier morsels map to contiguous node-range partitions of the ELL adjacency
 (paper §4.1: "obtaining frontier morsels ... returns back a range of integer
 node IDs"). ``pad_ell`` pads the row count so it divides evenly across the
 graph mesh axes; padded rows have degree 0 and the out-of-bounds sentinel, so
-they are inert.
+they are inert. ``reverse_shard`` is the streamed-build primitive: one
+shard's rows of the transpose without materializing the whole reverse graph
+(see docs/scale.md).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
-from .csr import EllGraph
+from .csr import CSRGraph, EllGraph
 
 
 def padded_n(n_nodes: int, shards: int, block: int = 8) -> int:
@@ -20,12 +22,17 @@ def padded_n(n_nodes: int, shards: int, block: int = 8) -> int:
 
 
 def pad_ell(g: EllGraph, shards: int, block: int = 8) -> EllGraph:
-    """Pad ELL rows to a multiple of shards*block. Sentinel stays at the
-    ORIGINAL n_nodes: scatters into the padded [n_pad] arrays treat original
-    sentinel ids as real (but inert, degree-0) rows, which is harmless, and
-    original ids never collide with pad rows... wait — sentinel == n_nodes
-    lands on the first PAD row. Remap sentinel to n_pad so it stays
-    out-of-bounds for [n_pad]-sized scatters."""
+    """Pad ELL rows to a multiple of ``shards * block``.
+
+    Sentinel-remap contract: the unpadded slab marks empty slots with the
+    out-of-range id ``n_nodes``, but after padding, row ``n_nodes`` is a
+    real (inert, degree-0) pad row — a scatter into a ``[n_pad]`` array
+    would land on it instead of being dropped. So every ``n_nodes``
+    sentinel is remapped to ``n_pad``, which is out of bounds for all
+    ``[n_pad]``-sized scatters/gathers; pad rows are all-sentinel with
+    degree 0 and zero weights. When no padding is needed the slab is
+    returned unchanged (``n_pad == n_nodes``, so the sentinel already sits
+    out of range)."""
     n = g.n_nodes
     n_pad = padded_n(n, shards, block)
     if n_pad == n:
@@ -51,29 +58,82 @@ def partition_bounds(n_pad: int, shards: int) -> np.ndarray:
     return np.arange(shards + 1, dtype=np.int64) * per
 
 
+def reverse_shard(csr: CSRGraph, lo: int, hi: int) -> CSRGraph:
+    """Rows ``[lo, hi)`` of ``csr.reverse()`` without materializing the
+    full transpose — the streamed operand build's per-shard edge cut.
+
+    Selects the edges whose destination lands in the range (ascending
+    original edge order) and stable-sorts them by destination. A stable
+    argsort restricted to a contiguous key range equals the stable sort of
+    the selection, so the local in-neighbor lists are bitwise-identical to
+    the corresponding rows of the wholesale transpose. ``hi`` may exceed
+    ``csr.n_nodes`` (padded rows): the extra rows are empty. Returns a
+    CSR with ``hi - lo`` rows whose ``indices`` are *global* source ids.
+    """
+    dst = csr.indices
+    sel = np.flatnonzero((dst >= lo) & (dst < hi))
+    # source id of each selected edge: its row in the forward CSR
+    src = (
+        np.searchsorted(csr.indptr, sel, side="right").astype(np.int64) - 1
+    )
+    d = dst[sel].astype(np.int64) - lo
+    order = np.argsort(d, kind="stable")
+    rindptr = np.zeros(hi - lo + 1, dtype=np.int64)
+    rindptr[1:] = np.cumsum(np.bincount(d, minlength=hi - lo))
+    w = None if csr.weights is None else csr.weights[sel][order]
+    return CSRGraph(
+        indptr=rindptr,
+        indices=src[order].astype(np.int32),
+        weights=w,
+    )
+
+
 def slab_edges(
-    src: np.ndarray, dst: np.ndarray, n_nodes: int, k_slabs: int
-) -> tuple[np.ndarray, np.ndarray]:
+    src: np.ndarray,
+    dst: np.ndarray,
+    n_nodes: int,
+    k_slabs: int,
+    balance: str = "nodes",
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Destination-aligned edge slabs (models/gnn/common.set_edge_slabs):
     bucket edges by dst node range, pad every bucket to the max bucket size
     (pad edges: src=0, dst=n_nodes — dropped by segment reduces), return the
-    flat concatenated (src, dst) arrays of length k_slabs × max_bucket.
+    flat concatenated (src, dst) arrays of length k_slabs × max_bucket plus
+    the ``[k_slabs + 1]`` node boundaries of the slabs.
 
-    Skewed graphs pad up to the hottest slab; production loaders would
-    rebalance slab boundaries by edge count instead of node count."""
-    assert n_nodes % k_slabs == 0, (n_nodes, k_slabs)
-    nl = n_nodes // k_slabs
-    slab_of = np.minimum(dst // nl, k_slabs - 1)
+    ``balance="nodes"`` uses uniform node ranges (slab k owns nodes
+    ``[k·n/K, (k+1)·n/K)``); ``balance="edges"`` instead places the
+    boundaries on the in-degree cumsum so every slab holds ≈ E/K edges —
+    skewed graphs no longer pad every bucket up to the hottest slab, which
+    is also what keeps per-partition slab builds bounded. The fill is fully
+    vectorized (no per-slab Python copy loop)."""
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    if balance == "nodes":
+        assert n_nodes % k_slabs == 0, (n_nodes, k_slabs)
+        nl = n_nodes // k_slabs
+        bounds = np.arange(k_slabs + 1, dtype=np.int64) * nl
+    elif balance == "edges":
+        indeg = np.bincount(dst, minlength=n_nodes)
+        cum = np.concatenate([[0], np.cumsum(indeg)])  # [n_nodes + 1]
+        targets = np.arange(1, k_slabs) * (len(dst) / k_slabs)
+        cuts = np.searchsorted(cum, targets, side="left")
+        bounds = np.concatenate(
+            [[0], cuts, [n_nodes]]
+        ).astype(np.int64)
+    else:
+        raise ValueError(balance)
+    slab_of = np.clip(
+        np.searchsorted(bounds, dst, side="right") - 1, 0, k_slabs - 1
+    )
     order = np.argsort(slab_of, kind="stable")
     src, dst, slab_of = src[order], dst[order], slab_of[order]
     counts = np.bincount(slab_of, minlength=k_slabs)
     width = max(int(counts.max()), 1)
+    starts = np.cumsum(counts) - counts
+    pos = np.arange(len(src), dtype=np.int64) - starts[slab_of]
     out_src = np.zeros((k_slabs, width), np.int32)
     out_dst = np.full((k_slabs, width), n_nodes, np.int32)
-    start = 0
-    for k in range(k_slabs):
-        c = int(counts[k])
-        out_src[k, :c] = src[start : start + c]
-        out_dst[k, :c] = dst[start : start + c]
-        start += c
-    return out_src.reshape(-1), out_dst.reshape(-1)
+    out_src[slab_of, pos] = src
+    out_dst[slab_of, pos] = dst
+    return out_src.reshape(-1), out_dst.reshape(-1), bounds

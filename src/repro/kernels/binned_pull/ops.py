@@ -68,10 +68,15 @@ def pack_plan(pack: BinnedPullPack) -> TilePlan:
     )
 
 
-def build_pack(bn, n_pad: int) -> BinnedPullPack:
+def build_pack(bn, n_pad: int, as_numpy: bool = False) -> BinnedPullPack:
     """Host-side (numpy, deterministic) repack of a ``BinnedRevEll``.
 
-    ``n_pad`` is the padded node count — the slab sentinel value."""
+    ``n_pad`` is the padded node count — the slab sentinel value.
+    ``as_numpy`` keeps the leaves as host numpy arrays (the streamed
+    operand build places them per device itself); every transform is
+    rowwise per shard, so a ``K=1`` input yields exactly the matching
+    shard slice of the full pack."""
+    conv = np.ascontiguousarray if as_numpy else jnp.asarray
     k = int(bn.inv.shape[0])
     rows_local = bn.rows_local
     widths = bn.widths
@@ -97,15 +102,15 @@ def build_pack(bn, n_pad: int) -> BinnedPullPack:
         s = np.asarray(bn.slabs[b])
         pad = rows_pad[b - 1] - s.shape[1]
         fill = np.full((k, pad, widths[b]), n_pad, np.int32)
-        slabs.append(jnp.asarray(np.concatenate([s, fill], axis=1)))
+        slabs.append(conv(np.concatenate([s, fill], axis=1)))
         if bn.slab_weights is not None:
             wv = np.asarray(bn.slab_weights[b])
             wfill = np.zeros((k, pad, widths[b]), np.float32)
-            wslabs.append(jnp.asarray(np.concatenate([wv, wfill], axis=1)))
+            wslabs.append(conv(np.concatenate([wv, wfill], axis=1)))
     return BinnedPullPack(
         slabs=tuple(slabs),
-        inv_pad=jnp.asarray(inv_pad),
-        perm_pad=jnp.asarray(perm_pad),
+        inv_pad=conv(inv_pad),
+        perm_pad=conv(perm_pad),
         slab_weights=(
             tuple(wslabs) if bn.slab_weights is not None else None
         ),

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ...nn.module import shard_activation
 
@@ -42,44 +43,74 @@ def _node_sharded(x):
 # ---------------------------------------------------------------------------
 
 _EDGE_SLABS: int | None = None
+_SLAB_BOUNDS = None  # [K+1] np.int64 node boundaries (edge-balanced slabs)
 
 
-def set_edge_slabs(k: int | None):
-    global _EDGE_SLABS
+def set_edge_slabs(k: int | None, bounds=None):
+    """``bounds`` (optional, host [K+1] array): non-uniform node ranges —
+    slab j owns nodes ``[bounds[j], bounds[j+1])``. Produced by
+    ``graph/partition.slab_edges(..., balance="edges")``; None keeps the
+    uniform ``N/K``-range layout."""
+    global _EDGE_SLABS, _SLAB_BOUNDS
     _EDGE_SLABS = k
+    _SLAB_BOUNDS = None if bounds is None else np.asarray(bounds, np.int64)
 
 
 def _slab_view(values, dst, n_nodes):
-    """Flat [E, ...] + dst [E] -> ([K, E/K, ...], local dst [K, E/K], N/K),
-    or None when slab mode is off / shapes don't divide."""
+    """Flat [E, ...] + dst [E] -> ([K, E/K, ...], local dst [K, E/K],
+    segments-per-slab, bounds-or-None), or None when slab mode is off /
+    shapes don't divide. With edge-balanced bounds the per-slab segment
+    count is the max node span; shorter slabs' trailing segments are never
+    targeted and the reassembly gather skips them."""
     K = _EDGE_SLABS
     E = dst.shape[0]
-    if K is None or K <= 1 or E % K or n_nodes % K:
+    if K is None or K <= 1 or E % K:
         return None
-    nl = n_nodes // K
-    ds = dst.reshape(K, E // K)
-    offs = (jnp.arange(K, dtype=ds.dtype) * nl)[:, None]
-    in_slab = (ds >= offs) & (ds < offs + nl)
+    bounds = _SLAB_BOUNDS
+    if bounds is None:
+        if n_nodes % K:
+            return None
+        nl = n_nodes // K
+        ds = dst.reshape(K, E // K)
+        offs = (jnp.arange(K, dtype=ds.dtype) * nl)[:, None]
+        his = offs + nl
+    else:
+        if len(bounds) != K + 1 or int(bounds[-1]) != n_nodes:
+            return None
+        nl = int((bounds[1:] - bounds[:-1]).max())
+        ds = dst.reshape(K, E // K)
+        offs = jnp.asarray(bounds[:-1], ds.dtype)[:, None]
+        his = jnp.asarray(bounds[1:], ds.dtype)[:, None]
+    in_slab = (ds >= offs) & (ds < his)
     dst_local = jnp.where(in_slab, ds - offs, nl)  # nl = dropped
     vals = values.reshape(K, E // K, *values.shape[1:])
-    return vals, dst_local, nl
+    return vals, dst_local, nl, bounds
 
 
-def _slab_reduce(vals, dst_local, nl, op):
+def _slab_reduce(vals, dst_local, nl, bounds, op):
     fn = {
         "sum": jax.ops.segment_sum,
         "max": jax.ops.segment_max,
         "min": jax.ops.segment_min,
     }[op]
     out = jax.vmap(lambda v, d: fn(v, d, num_segments=nl))(vals, dst_local)
-    return _node_sharded(out.reshape(out.shape[0] * nl, *out.shape[2:]))
+    flat = out.reshape(out.shape[0] * nl, *out.shape[2:])
+    if bounds is None:
+        return _node_sharded(flat)
+    # non-uniform spans: node n lives at (slab k(n), n - bounds[k(n)]);
+    # the gather map is a host constant (bounds are static per layout)
+    n_nodes = int(bounds[-1])
+    node = np.arange(n_nodes, dtype=np.int64)
+    k_of = np.searchsorted(bounds, node, side="right") - 1
+    gather = jnp.asarray(k_of * nl + (node - bounds[k_of]), jnp.int32)
+    return _node_sharded(flat[gather])
 
 
 def segment_softmax(logits, segment_ids, num_segments):
     """Softmax over edges grouped by destination node."""
     slab = _slab_view(logits, segment_ids, num_segments)
     if slab is not None:
-        lg, dl, nl = slab
+        lg, dl, nl, _ = slab
 
         def one(lg_k, d_k):
             mx = jax.ops.segment_max(lg_k, d_k, num_segments=nl)

@@ -475,11 +475,15 @@ class QueryDispatcher:
         sample_window: int = 2048,
         pad_pow2_morsels: bool = False,
         cost: str = "auto",
+        stream: bool | None = None,
     ):
         self.mesh = mesh
         self.csr = csr
         self.max_deg = max_deg
         self.max_iters = max_iters
+        # streamed (shard-at-a-time, multi-host-aware) operand placement;
+        # None = prepare_graph's auto rule (stream iff multi-process)
+        self.stream = stream
         self.adaptive = adaptive
         self.phase1_iters = phase1_iters  # pin the phase-1 budget (tests)
         self.max_inflight = max_inflight  # override recommend_k (tests)
@@ -579,7 +583,7 @@ class QueryDispatcher:
             ops, n_pad = prepare_graph(
                 self.csr, self.mesh, policy, self.max_deg,
                 pad_shards=self.mesh.size, extend=spec,
-                version=self.operands_version,
+                version=self.operands_version, stream=self.stream,
             )
             self._graphs[key] = OperandBundle(
                 ops=ops, n_pad=n_pad, version=self.operands_version,

@@ -90,10 +90,18 @@ def test_slab_aggregation_matches_flat():
         ),
         "species": jnp.asarray(rng.integers(0, 8, n), jnp.int32),
     }
-    ssrc, sdst = slab_edges(src, dst, n, K)
+    ssrc, sdst, bounds = slab_edges(src, dst, n, K)
     assert len(ssrc) % K == 0
+    assert bounds[0] == 0 and bounds[-1] == n
+    bsrc, bdst, bbounds = slab_edges(src, dst, n, K, balance="edges")
+    assert len(bsrc) % K == 0
+    # edge-balanced layout pads no wider than the node-balanced one
+    assert len(bsrc) <= len(ssrc)
     batch_slab = dict(
         batch, edge_src=jnp.asarray(ssrc), edge_dst=jnp.asarray(sdst)
+    )
+    batch_bal = dict(
+        batch, edge_src=jnp.asarray(bsrc), edge_dst=jnp.asarray(bdst)
     )
     for name, (mod, smoke) in {
         "pna": (pna_m, pna_smoke),
@@ -109,11 +117,17 @@ def test_slab_aggregation_matches_flat():
         try:
             C.set_edge_slabs(K)
             out_slab = mod.apply(params, cfg, batch_slab)["node_out"]
+            C.set_edge_slabs(K, bounds=bbounds)
+            out_bal = mod.apply(params, cfg, batch_bal)["node_out"]
         finally:
             C.set_edge_slabs(None)
         np.testing.assert_allclose(
             np.asarray(out_flat), np.asarray(out_slab),
             rtol=2e-5, atol=2e-5, err_msg=name,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out_flat), np.asarray(out_bal),
+            rtol=2e-5, atol=2e-5, err_msg=name + "-balanced",
         )
 
 
